@@ -1,0 +1,24 @@
+"""Shared helpers for the per-figure benchmarks."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, value, derived: str = ""):
+    """One CSV row: name,value,derived (the harness format)."""
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def time_ms(fn, repeats: int = 3) -> float:
+    fn()  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,44 @@
+"""Paper Fig 3: ratio of CPU to GPU execution time vs matrix size.
+
+Two sources: the paper-calibrated analytic model of their i7-4770 + GTX
+TITAN platform (the Fig-5/6 simulator input), and REAL measured timings of
+the jitted jnp kernels on this container's CPU (shape check of the
+measurement machinery — one processor class only)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost import paper_calibrated_model, MeasuredCostModel
+from .common import emit
+
+SIZES = [128, 256, 384, 512, 768, 1024, 1536, 1792, 2048]
+
+
+def main():
+    m = paper_calibrated_model()
+    for op in ("matadd", "matmul"):
+        for n in SIZES:
+            r = m.kernel_ms(op, n, "cpu") / m.kernel_ms(op, n, "gpu")
+            emit(f"fig3.{op}.n{n}.cpu_gpu_ratio", f"{r:.3f}",
+                 "analytic-paper-platform")
+    # measured (this CPU): demonstrates the offline-measurement path the
+    # paper uses; kernels via kernels/ops.py
+    from repro.kernels import ops
+
+    def impl(op, n):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (n, n), jnp.float32)
+        b = jax.random.normal(key, (n, n), jnp.float32)
+        f = ops.matmul if op == "matmul" else ops.matadd
+        jf = jax.jit(lambda: f(a, b))
+        return jf
+
+    mm = MeasuredCostModel({"cpu": impl})
+    for op in ("matadd", "matmul"):
+        for n in (128, 256, 512):
+            emit(f"fig3.measured_cpu.{op}.n{n}.ms",
+                 f"{mm.kernel_ms(op, n, 'cpu'):.3f}", "measured-this-host")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig 4: ratio of GPU execution time to PCIe transfer time (3
+matrices: two inputs + one output) vs size.  MA stays low (transfer-bound
+kernel class); MM rises with size (compute gains dominate).  The paper's
+unexplained dip at 1792 (CUBLAS internals) is out of scope — noted in
+EXPERIMENTS.md."""
+
+from repro.core.cost import paper_calibrated_model
+from .common import emit
+
+SIZES = [128, 256, 384, 512, 768, 1024, 1536, 1792, 2048]
+
+
+def main():
+    m = paper_calibrated_model()
+    for op in ("matadd", "matmul"):
+        for n in SIZES:
+            t_exec = m.kernel_ms(op, n, "gpu")
+            t_tr = m.transfer_ms(3 * n * n * 4)
+            emit(f"fig4.{op}.n{n}.exec_transfer_ratio",
+                 f"{t_exec / t_tr:.3f}", "analytic-paper-platform")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Beyond-paper: pipeline-stage assignment quality — the paper's FM
+partitioner vs the DP-optimal contiguous split vs naive uniform, on the
+layer graphs of the assigned architectures."""
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.pipeline_partition import fm_stages, dp_stages, uniform_stages
+from .common import emit
+
+
+def main():
+    for arch in ("jamba_1_5_large_398b", "deepseek_moe_16b", "minicpm3_4b",
+                 "whisper_large_v3"):
+        cfg = get_config(arch)
+        for n_stages in (4, 8):
+            plans = {"fm": fm_stages(cfg, n_stages, batch=8, seq=4096),
+                     "dp": dp_stages(cfg, n_stages, batch=8, seq=4096),
+                     "uniform": uniform_stages(cfg, n_stages, batch=8,
+                                               seq=4096)}
+            for name, p in plans.items():
+                emit(f"pipeline.{arch}.s{n_stages}.{name}.bottleneck_ms",
+                     f"{p.bottleneck_ms:.2f}",
+                     f"imbalance={p.imbalance:.3f};"
+                     f"cut_mb={p.cut_bytes/2**20:.0f};"
+                     f"contiguous={p.contiguous}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (written by launch/dryrun.py) and emits:
+per (arch x shape x mesh): the three terms in seconds, the dominant term,
+MODEL_FLOPS/HLO_FLOPS (useful ratio), and the roofline fraction
+(compute term / dominant term).  ``--markdown`` renders the EXPERIMENTS.md
+table."""
+
+import argparse
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load(out_dir="artifacts/dryrun"):
+    # prefer the most recent consistent sweep when present
+    if out_dir == "artifacts/dryrun" and \
+            glob.glob("artifacts/dryrun_final/*.json"):
+        out_dir = "artifacts/dryrun_final"
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.dir)
+    if args.markdown:
+        print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+              " dominant | useful | roofline frac | fits HBM |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        tag = f"{r['arch']}.{r['shape']}.{mesh}"
+        if r["status"] == "skip":
+            if args.markdown:
+                print(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — |"
+                      f" skip | — | — | — |")
+            else:
+                emit(f"roofline.{tag}", "skip", r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline.{tag}", "FAIL", r.get("error", "")[:80])
+            continue
+        t = dict(r["terms"])
+        if r.get("accounting") != "ring-wire-v2":
+            # older artifact: all-reduce was counted at 1x payload; ring
+            # wire bytes add one more AR payload pass
+            from repro.launch.mesh import ICI_BW
+            extra = r["collectives"].get("all-reduce", 0) / ICI_BW
+            t["collective_s"] += extra
+        if args.markdown:
+            print(f"| {r['arch']} | {r['shape']} | {mesh} "
+                  f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+                  f"| {t['collective_s']:.3f} | {r['dominant'].split('_')[0]} "
+                  f"| {r['useful_flops_ratio']:.2f} "
+                  f"| {r['roofline_fraction']:.3f} "
+                  f"| {r.get('fits_hbm_analytic', '?')} |")
+        else:
+            emit(f"roofline.{tag}.compute_s", f"{t['compute_s']:.4f}",
+                 f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}"
+                 f";useful={r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

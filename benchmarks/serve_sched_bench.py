@@ -1,0 +1,19 @@
+"""Serving-DAG scheduling across heterogeneous pods (the paper's policy
+comparison on the request-chain workload of launch/serve.py)."""
+
+from repro.launch.serve import schedule_requests
+from .common import emit
+
+
+def main():
+    for n_req in (4, 12, 32):
+        for pol in ("eager", "dmda", "gp", "heft"):
+            r = schedule_requests(n_req, 8, pol)
+            emit(f"serve.req{n_req}.{pol}.makespan_ms",
+                 f"{r['makespan_ms']:.1f}",
+                 f"transfers={r['transfers']};"
+                 f"moved_mb={r['bytes_moved_mb']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serving scenario: place batched request DAGs on a heterogeneous pair of
+pods (big + small over DCN) with each scheduling policy, then run a REAL
+reduced-model decode to show the serving loop itself.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_serving.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "granite_3_2b", "--smoke", "--requests", "6",
+          "--prompt-len", "24", "--decode-len", "12", "--scheduler", "gp"])
+    for pol in ("eager", "dmda", "heft"):
+        main(["--requests", "6", "--scheduler", pol])

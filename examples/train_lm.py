@@ -1,0 +1,40 @@
+"""End-to-end training example: a ~100M-parameter dense LM trained for a
+few hundred steps on this host, with checkpointing + restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import ModelConfig, LayerSpec
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import DistConfig
+from repro.launch.train import train
+
+# ~100M params: 8 layers, d=768, GQA 12:4, tied embeddings
+CFG = ModelConfig(
+    name="lm-100m", family="dense", d_model=768, n_layers=8, n_heads=12,
+    n_kv_heads=4, d_ff=2304, vocab=32000, tie_embeddings=True,
+    unit=(LayerSpec("attn", "dense"),),
+    activation_dtype="float32", remat=False,
+)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+    mesh = make_host_mesh()
+    params, _, losses = train(
+        CFG, mesh, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        log_every=20, dist=DistConfig(remat=False))
+    print(f"first logged loss {losses[0]:.3f} -> last {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss should decrease"

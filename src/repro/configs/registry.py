@@ -1,0 +1,100 @@
+"""Architecture registry + input-spec construction for every (arch, shape)
+cell.
+
+``get_config(name)`` returns the exact published geometry; ``input_specs``
+returns ``jax.ShapeDtypeStruct`` stand-ins (dry-run, no allocation) and
+``make_batch`` real arrays (smoke tests) for each assigned shape.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+ARCH_IDS = [
+    "rwkv6_3b",
+    "whisper_large_v3",
+    "command_r_35b",
+    "granite_3_2b",
+    "minitron_4b",
+    "minicpm3_4b",
+    "llava_next_mistral_7b",
+    "jamba_1_5_large_398b",
+    "granite_moe_3b_a800m",
+    "deepseek_moe_16b",
+]
+
+# CLI aliases with dashes/dots
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# ---------------------------------------------------------------------------
+# batch specs per shape
+# ---------------------------------------------------------------------------
+
+def _batch_shapes(cfg: ModelConfig, seq: int, batch: int,
+                  with_labels: bool) -> dict[str, tuple[tuple, Any]]:
+    """name -> (shape, dtype) for a full-sequence batch of ``seq`` tokens."""
+    out: dict = {}
+    s_text = seq
+    if cfg.vlm:
+        s_text = seq - cfg.n_patches
+        out["patch_embeds"] = ((batch, cfg.n_patches, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.enc_dec:
+        out["enc_embeds"] = ((batch, cfg.encoder_seq, cfg.d_model),
+                             jnp.bfloat16)
+    out["tokens"] = ((batch, s_text), jnp.int32)
+    if with_labels:
+        out["labels"] = ((batch, s_text), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct batch for train/prefill shapes (decode cells build
+    their cache specs via ``transformer.cache_specs``)."""
+    shapes = _batch_shapes(cfg, shape.seq_len, shape.global_batch,
+                           with_labels=shape.kind == "train")
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def make_batch(cfg: ModelConfig, seq: int, batch: int, *, train: bool,
+               key=None) -> dict:
+    """Real (random) arrays at reduced size for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = _batch_shapes(cfg, seq, batch, with_labels=train)
+    out = {}
+    for name, (s, d) in shapes.items():
+        key, sub = jax.random.split(key)
+        if d == jnp.int32:
+            out[name] = jax.random.randint(sub, s, 0, cfg.vocab)
+        else:
+            out[name] = (jax.random.normal(sub, s) * 0.02).astype(d)
+    return out
+
+
+def cells(arch_ids=None, shape_names=None):
+    """All (arch, shape, applicable, reason) cells in assignment order."""
+    out = []
+    for a in (arch_ids or ARCH_IDS):
+        cfg = get_config(a)
+        for s in (shape_names or SHAPES):
+            sh = SHAPES[s]
+            ok, reason = shape_applicable(cfg, sh)
+            out.append((a, s, ok, reason))
+    return out

@@ -1,0 +1,237 @@
+"""Cost models: how node and edge weights are acquired (paper §III.B).
+
+The paper uses *offline measurement* (StarPU performance history) because
+prediction models were too imprecise.  We provide both:
+
+* :class:`MeasuredCostModel` — times real jitted JAX callables on this host
+  (the paper's approach, ported);
+* :class:`AnalyticCostModel` — a roofline model ``t = max(flops/peak, bytes/bw)``
+  per processor class, used for the TPU v5e *target* which this CPU container
+  cannot time, and for napkin math in the perf loop;
+* the paper's workload-ratio formulas (1)/(2) generalized to k classes.
+
+All times are **milliseconds**, matching the paper ("weight values are measured
+in milliseconds").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Mapping, Sequence
+
+from .graph import TaskGraph
+
+MS = 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcClass:
+    """A processor class with roofline constants.
+
+    peak_flops: FLOP/s (dtype-appropriate), mem_bw: bytes/s HBM/DRAM,
+    n_workers: how many independent workers of this class exist.
+    """
+
+    name: str
+    peak_flops: float
+    mem_bw: float
+    n_workers: int = 1
+    overhead_ms: float = 0.0  # per-kernel launch overhead
+
+
+# Hardware profiles ---------------------------------------------------------
+# TPU v5e target constants come from the assignment brief: 197 TFLOP/s bf16,
+# 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = ProcClass("tpu_v5e", peak_flops=197e12, mem_bw=819e9, overhead_ms=0.01)
+# The paper's platform, for reproducing Figs 3-6 analytically.  PER-WORKER
+# constants (the simulator schedules worker cores independently): one
+# i7-4770 core @3.4 GHz, AVX2 FMA = 54 GFLOP/s fp32; single-core stream
+# bandwidth ~12 GB/s of the 25.6 GB/s socket.  3 worker cores (the paper
+# reserves the 4th for the runtime).
+CPU_I7_4770 = ProcClass("cpu", peak_flops=54e9, mem_bw=12e9, n_workers=3,
+                        overhead_ms=0.005)
+# GTX TITAN (Kepler GK110): 4.5 TFLOP/s fp32, 288 GB/s GDDR5.
+GPU_GTX_TITAN = ProcClass("gpu", peak_flops=4.5e12, mem_bw=288e9, overhead_ms=0.02)
+HOST_CPU_1CORE = ProcClass("cpu", peak_flops=50e9, mem_bw=20e9, overhead_ms=0.005)
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """The shared bus connecting processor classes (paper: PCIe 3.0 x16).
+
+    The paper assumes symmetric latency (measured asymmetry 0.007%, §III.B); we
+    keep that assumption.  ``latency_ms`` is the fixed per-transfer cost.
+    """
+
+    name: str
+    bw: float          # bytes/s
+    latency_ms: float = 0.0
+    duplex: bool = False  # GTX: single copy engine (paper notes Tesla has dual)
+
+    def transfer_ms(self, nbytes: int) -> float:
+        return self.latency_ms + (nbytes / self.bw) * MS
+
+
+PCIE3_X16 = Link("pcie3_x16", bw=12.0e9, latency_ms=0.010)     # ~12 GB/s effective
+ICI_LINK = Link("ici", bw=50e9, latency_ms=0.001)               # intra-pod
+DCN_CROSSPOD = Link("dcn", bw=6.25e9, latency_ms=0.050)         # inter-pod (slow bus)
+
+# Efficiencies calibrated to the paper's MEASURED kernel characteristics
+# (Fig 3: CPU/GPU exec ratio — MA flat and low (~3), MM steep; Fig 4:
+# GPU-exec/transfer ratio — MA ~0.3-0.6, MM >1 rising).  The paper's MA GPU
+# kernel is far off the GDDR5 roofline (eff ~0.125 — uncoalesced custom
+# kernel); MKL-class CPU matmul ~0.8, CUBLAS ~0.6.  These are inputs to the
+# reproduction: the Fig 5/6 scheduler claims must then EMERGE from the
+# simulator, not be assumed.
+PAPER_EFFICIENCY = {
+    ("cpu", "matadd"): 0.5,   # naive per-core loop: ~6 GB/s effective
+    ("gpu", "matadd"): 0.125,
+    ("cpu", "matmul"): 0.8,
+    ("gpu", "matmul"): 0.6,
+}
+
+
+def paper_calibrated_model() -> "AnalyticCostModel":
+    return AnalyticCostModel({"cpu": CPU_I7_4770, "gpu": GPU_GTX_TITAN},
+                             PCIE3_X16, efficiency=dict(PAPER_EFFICIENCY))
+
+
+# ---------------------------------------------------------------------------
+# Analytic roofline cost model
+# ---------------------------------------------------------------------------
+
+def kernel_flops_bytes(op: str, n: int, dtype_bytes: int = 4) -> tuple[float, float]:
+    """FLOPs and HBM bytes for the paper's square-matrix kernels of side n."""
+    if op == "matmul":
+        return 2.0 * n ** 3, 3.0 * n * n * dtype_bytes
+    if op == "matadd":
+        return 1.0 * n * n, 3.0 * n * n * dtype_bytes
+    raise KeyError(f"unknown analytic op {op!r}")
+
+
+@dataclasses.dataclass
+class AnalyticCostModel:
+    classes: Mapping[str, ProcClass]
+    link: Link = PCIE3_X16
+    # effective fraction of peak actually achieved per (class, op); defaults are
+    # conservative textbook numbers, calibratable from measurements.
+    efficiency: Mapping[tuple[str, str], float] = dataclasses.field(default_factory=dict)
+
+    def _eff(self, cls: str, op: str) -> float:
+        return self.efficiency.get((cls, op), 0.6 if op == "matmul" else 0.9)
+
+    def kernel_ms(self, op: str, n: int, cls: str, dtype_bytes: int = 4) -> float:
+        p = self.classes[cls]
+        flops, bytes_ = kernel_flops_bytes(op, n, dtype_bytes)
+        eff = self._eff(cls, op)   # fraction of the roofline achieved
+        t = max(flops / (p.peak_flops * eff), bytes_ / (p.mem_bw * eff)) * MS
+        return t + p.overhead_ms
+
+    def transfer_ms(self, nbytes: int) -> float:
+        return self.link.transfer_ms(nbytes)
+
+    def weight_graph(self, g: TaskGraph, op_sizes: Mapping[str, int],
+                     dtype_bytes: int = 4) -> TaskGraph:
+        """Fill in node costs (per class) and edge byte counts for a DAG whose
+        kernels are the paper's matrix ops of per-op square size."""
+        from .graph import resolve_edge_bytes
+        out = g.copy()
+        for k in out.nodes.values():
+            if k.op in ("source",):
+                k.costs = {c: 0.0 for c in self.classes}
+                continue
+            n = op_sizes[k.op]
+            k.costs = {c: self.kernel_ms(k.op, n, c, dtype_bytes) for c in self.classes}
+            k.out_bytes = n * n * dtype_bytes
+        resolve_edge_bytes(out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Measured cost model (the paper's chosen method)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MeasuredCostModel:
+    """Offline measurement of kernel implementations (paper §III.B).
+
+    ``impls[cls]`` maps a processor class to a callable factory
+    ``make(op, n) -> fn()`` returning a zero-arg jitted closure.  Measurement
+    uses median-of-k wall time after warmup, like StarPU's history model.
+    """
+
+    impls: Mapping[str, Callable[[str, int], Callable[[], object]]]
+    link: Link = PCIE3_X16
+    repeats: int = 5
+    _cache: dict = dataclasses.field(default_factory=dict)
+
+    def kernel_ms(self, op: str, n: int, cls: str) -> float:
+        key = (op, n, cls)
+        if key not in self._cache:
+            fn = self.impls[cls](op, n)
+            fn()  # warmup / compile
+            ts = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                r = fn()
+                # block on async dispatch if it's a jax array
+                if hasattr(r, "block_until_ready"):
+                    r.block_until_ready()
+                ts.append((time.perf_counter() - t0) * MS)
+            ts.sort()
+            self._cache[key] = ts[len(ts) // 2]
+        return self._cache[key]
+
+    def transfer_ms(self, nbytes: int) -> float:
+        return self.link.transfer_ms(nbytes)
+
+    def weight_graph(self, g: TaskGraph, op_sizes: Mapping[str, int],
+                     dtype_bytes: int = 4) -> TaskGraph:
+        from .graph import resolve_edge_bytes
+        out = g.copy()
+        classes = list(self.impls)
+        for k in out.nodes.values():
+            if k.op == "source":
+                k.costs = {c: 0.0 for c in classes}
+                continue
+            n = op_sizes[k.op]
+            k.costs = {c: self.kernel_ms(k.op, n, c) for c in classes}
+            k.out_bytes = n * n * dtype_bytes
+        resolve_edge_bytes(out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The paper's workload-ratio formulas (1) and (2), generalized to k classes.
+# ---------------------------------------------------------------------------
+
+def workload_ratios(g: TaskGraph, classes: Sequence[str]) -> dict[str, float]:
+    """Paper Formula (1)/(2): R_cpu = T_gpu / (T_gpu + T_cpu), R_gpu = 1-R_cpu.
+
+    Generalization to k classes: each class's share is proportional to its
+    *throughput* (inverse mean kernel time), which reduces exactly to the
+    paper's formulas when k=2:
+        R_cpu = (1/T_cpu) / (1/T_cpu + 1/T_gpu) = T_gpu/(T_cpu+T_gpu).
+    Additionally each class's capacity is multiplied by its worker count (the
+    paper used 3 CPU worker cores vs 1 GPU worker).
+    """
+    totals = {c: 0.0 for c in classes}
+    for k in g.nodes.values():
+        if k.op == "source":
+            continue
+        for c in classes:
+            totals[c] += k.cost_on(c)
+    inv = {c: (1.0 / totals[c]) if totals[c] > 0 else math.inf for c in classes}
+    if any(math.isinf(v) for v in inv.values()):
+        n_inf = sum(1 for v in inv.values() if math.isinf(v))
+        return {c: (1.0 / n_inf if math.isinf(v) else 0.0) for c, v in inv.items()}
+    s = sum(inv.values())
+    return {c: v / s for c, v in inv.items()}
+
+
+def paper_ratio_cpu_gpu(t_cpu_ms: float, t_gpu_ms: float) -> tuple[float, float]:
+    """Literal Formula (1)/(2) for one kernel pair of measurements."""
+    r_cpu = t_gpu_ms / (t_gpu_ms + t_cpu_ms)
+    return r_cpu, 1.0 - r_cpu

@@ -1,0 +1,419 @@
+"""Multilevel graph partitioner — the METIS role in the paper, built from
+scratch (no external dependency).
+
+Pipeline (classic multilevel scheme, as METIS):
+  1. **Coarsen** by heavy-edge matching until the graph is small;
+  2. **Initial partition** at the coarsest level by greedy graph growing
+     (multiple random trials, keep the best cut);
+  3. **Uncoarsen + refine** with Fiduccia–Mattheyses boundary passes that keep
+     partition weights within ``epsilon`` of heterogeneous *target fractions*
+     (the paper's R_cpu/R_gpu from Formula (1)/(2)).
+
+k-way partitions are produced by recursive bisection with target-weight
+splitting, then a final k-way FM pass.  Everything is deterministic in
+``seed`` (own LCG; no global RNG).
+
+The partitioner consumes a generic undirected weighted graph; `weight_graph_of`
+adapts a :class:`TaskGraph` using the paper's conventions:
+
+* node weight = kernel time on a *chosen* class (`weight_source`).  The paper
+  (§III.B) discusses choosing GPU time (small node weights -> edge weights
+  dominate -> fewer cuts) vs CPU time (opposite); we expose exactly that knob.
+* edge weight = transfer time of the producer block over the bus (ms), merged
+  for parallel edges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence
+
+from .graph import TaskGraph
+
+
+# ---------------------------------------------------------------------------
+# plain array graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class UGraph:
+    """Undirected weighted graph in index space."""
+
+    nw: list[float]                       # node weights
+    adj: list[dict[int, float]]           # adj[u][v] = edge weight (sym)
+
+    @property
+    def n(self) -> int:
+        return len(self.nw)
+
+    def total_w(self) -> float:
+        return sum(self.nw)
+
+    def edge_cut(self, part: list[int]) -> float:
+        cut = 0.0
+        for u in range(self.n):
+            pu = part[u]
+            for v, w in self.adj[u].items():
+                if v > u and part[v] != pu:
+                    cut += w
+        return cut
+
+
+def _lcg(seed: int):
+    s = [(seed * 2862933555777941757 + 3037000493) % 2**64 or 1]
+
+    def rnd(n: int) -> int:
+        s[0] = (s[0] * 2862933555777941757 + 3037000493) % 2**64
+        return (s[0] >> 33) % n
+
+    return rnd
+
+
+# ---------------------------------------------------------------------------
+# coarsening: heavy-edge matching
+# ---------------------------------------------------------------------------
+
+def _coarsen(g: UGraph, rnd) -> tuple[UGraph, list[int]]:
+    """One level of heavy-edge matching.  Returns (coarse graph, mapping)."""
+    n = g.n
+    order = list(range(n))
+    for i in range(n - 1, 0, -1):  # Fisher-Yates with our LCG
+        j = rnd(i + 1)
+        order[i], order[j] = order[j], order[i]
+    match = [-1] * n
+    for u in order:
+        if match[u] != -1:
+            continue
+        best, bw = -1, -1.0
+        for v, w in g.adj[u].items():
+            if match[v] == -1 and v != u and w > bw:
+                best, bw = v, w
+        if best != -1:
+            match[u], match[best] = best, u
+        else:
+            match[u] = u
+    cmap = [-1] * n
+    nc = 0
+    for u in range(n):
+        if cmap[u] == -1:
+            cmap[u] = nc
+            if match[u] != u:
+                cmap[match[u]] = nc
+            nc += 1
+    nw = [0.0] * nc
+    adj: list[dict[int, float]] = [dict() for _ in range(nc)]
+    for u in range(n):
+        cu = cmap[u]
+        nw[cu] += g.nw[u]
+        for v, w in g.adj[u].items():
+            cv = cmap[v]
+            if cu != cv:
+                adj[cu][cv] = adj[cu].get(cv, 0.0) + w
+    # each undirected edge visited twice above -> halve
+    for u in range(nc):
+        for v in list(adj[u]):
+            adj[u][v] *= 0.5
+    return UGraph(nw, adj), cmap
+
+
+# ---------------------------------------------------------------------------
+# initial bisection: greedy graph growing
+# ---------------------------------------------------------------------------
+
+def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
+    """Grow partition 0 from a random seed until its weight reaches t0*total."""
+    total = g.total_w()
+    best_part, best_cut = None, math.inf
+    for _ in range(max(1, trials)):
+        start = rnd(g.n)
+        part = [1] * g.n
+        w0 = 0.0
+        # frontier with gains: prefer nodes most connected into partition 0
+        in0 = [False] * g.n
+        gain = {start: 0.0}
+        skipped: set[int] = set()
+        while w0 < t0 * total:
+            if not gain:
+                # disconnected graph (e.g. independent request chains):
+                # re-seed the growth from an unassigned node
+                rest = [u for u in range(g.n)
+                        if not in0[u] and u not in skipped]
+                if not rest:
+                    break
+                gain = {rest[rnd(len(rest))]: 0.0}
+            u = max(gain, key=lambda x: (gain[x], -x))
+            del gain[u]
+            if in0[u]:
+                continue
+            if w0 + g.nw[u] > t0 * total * 1.25 and w0 > 0:
+                # adding u overshoots badly; try another frontier node
+                skipped.add(u)
+                continue
+            in0[u] = True
+            part[u] = 0
+            w0 += g.nw[u]
+            for v, w in g.adj[u].items():
+                if not in0[v]:
+                    gain[v] = gain.get(v, 0.0) + w
+        cut = g.edge_cut(part)
+        if cut < best_cut:
+            best_cut, best_part = cut, part
+    assert best_part is not None
+    return best_part
+
+
+# ---------------------------------------------------------------------------
+# FM refinement (2-way and k-way passes)
+# ---------------------------------------------------------------------------
+
+def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
+               epsilon: float, max_passes: int = 8) -> list[int]:
+    """Boundary FM with best-prefix rollback, k-way (single-move granularity).
+
+    Balance constraint: partition p weight must stay within
+    [targets[p]*total*(1-eps_lo), targets[p]*total*(1+epsilon)] where eps_lo is
+    relaxed — we never force moves, only allow those not violating the upper
+    bound and not emptying a mandatory partition.
+    """
+    k = len(targets)
+    total = g.total_w()
+    pw = [0.0] * k
+    for u in range(g.n):
+        pw[part[u]] += g.nw[u]
+    cap = [targets[p] * total * (1 + epsilon) + 1e-12 for p in range(k)]
+
+    def ext_int(u: int) -> tuple[dict[int, float], float]:
+        """edge weight from u to each other partition, and internal weight."""
+        ext: dict[int, float] = {}
+        internal = 0.0
+        pu = part[u]
+        for v, w in g.adj[u].items():
+            pv = part[v]
+            if pv == pu:
+                internal += w
+            else:
+                ext[pv] = ext.get(pv, 0.0) + w
+        return ext, internal
+
+    for _ in range(max_passes):
+        locked = [False] * g.n
+        moves: list[tuple[int, int, int]] = []  # (node, from, to)
+        gains_cum: list[float] = []
+        cum = 0.0
+        improved_in_pass = False
+        # iterate: repeatedly pick best feasible boundary move
+        for _step in range(g.n):
+            best = None  # (gain, u, to)
+            for u in range(g.n):
+                if locked[u]:
+                    continue
+                ext, internal = ext_int(u)
+                if not ext:
+                    continue
+                pu = part[u]
+                for to, wext in ext.items():
+                    if pw[to] + g.nw[u] > cap[to]:
+                        continue
+                    # don't empty a partition that has a nonzero target
+                    if targets[pu] > 0 and pw[pu] - g.nw[u] < 0:
+                        continue
+                    gain = wext - internal
+                    # tie-break toward balance deficit
+                    deficit = targets[to] * total - pw[to]
+                    cand = (gain, deficit, -u)
+                    if best is None or cand > best[0]:
+                        best = (cand, u, to)
+            if best is None:
+                break
+            (gain, _, _), u, to = best
+            frm = part[u]
+            part[u] = to
+            pw[frm] -= g.nw[u]
+            pw[to] += g.nw[u]
+            locked[u] = True
+            cum += gain
+            moves.append((u, frm, to))
+            gains_cum.append(cum)
+            if gain > 0:
+                improved_in_pass = True
+            if len(moves) >= max(32, g.n // 2):
+                break
+        if not moves:
+            break
+        # rollback to best prefix
+        best_i = max(range(len(gains_cum)), key=lambda i: gains_cum[i])
+        if gains_cum[best_i] <= 1e-12:
+            best_i = -1  # no net improvement: undo everything
+        for i in range(len(moves) - 1, best_i, -1):
+            u, frm, to = moves[i]
+            part[u] = frm
+            pw[to] -= g.nw[u]
+            pw[frm] += g.nw[u]
+        if best_i == -1 or not improved_in_pass:
+            break
+    return part
+
+
+# ---------------------------------------------------------------------------
+# multilevel driver
+# ---------------------------------------------------------------------------
+
+def _bisect_multilevel(g: UGraph, t0: float, epsilon: float, seed: int) -> list[int]:
+    rnd = _lcg(seed)
+    levels: list[tuple[UGraph, list[int]]] = []
+    cur = g
+    while cur.n > 48:
+        coarse, cmap = _coarsen(cur, rnd)
+        if coarse.n >= cur.n * 0.95:  # matching stalled
+            break
+        levels.append((cur, cmap))
+        cur = coarse
+    part = _grow_bisection(cur, t0, rnd)
+    part = _fm_refine(cur, part, [t0, 1 - t0], epsilon)
+    while levels:
+        fine, cmap = levels.pop()
+        part = [part[cmap[u]] for u in range(fine.n)]
+        part = _fm_refine(fine, part, [t0, 1 - t0], epsilon)
+    return part
+
+
+def partition_indices(g: UGraph, targets: Sequence[float], *, epsilon: float = 0.05,
+                      seed: int = 1) -> list[int]:
+    """k-way partition of an index graph into parts with target weight
+    fractions ``targets`` (sum to 1)."""
+    k = len(targets)
+    tsum = sum(targets)
+    if not math.isclose(tsum, 1.0, rel_tol=1e-6):
+        targets = [t / tsum for t in targets]
+    if k == 1:
+        return [0] * g.n
+    # Degenerate targets (paper Fig 6: R_cpu ~ 0): assign everything to the
+    # dominant side directly, then let FM move nothing.
+    live = [i for i, t in enumerate(targets) if t > 1e-9]
+    if len(live) == 1:
+        return [live[0]] * g.n
+
+    if k == 2:
+        part = _bisect_multilevel(g, targets[0], epsilon, seed)
+        return _fm_refine(g, part, targets, epsilon)
+
+    # recursive bisection: split target list into two halves with closest sums
+    order = sorted(range(k), key=lambda i: -targets[i])
+    ga, gb, wa, wb = [], [], 0.0, 0.0
+    for i in order:
+        if wa <= wb:
+            ga.append(i); wa += targets[i]
+        else:
+            gb.append(i); wb += targets[i]
+    part2 = _bisect_multilevel(g, wa, epsilon, seed)
+    part2 = _fm_refine(g, part2, [wa, wb], epsilon)
+    out = [-1] * g.n
+    for side, group, wsum in ((0, ga, wa), (1, gb, wb)):
+        idx = [u for u in range(g.n) if part2[u] == side]
+        if not idx:
+            continue
+        sub_nw = [g.nw[u] for u in idx]
+        remap = {u: i for i, u in enumerate(idx)}
+        sub_adj: list[dict[int, float]] = [dict() for _ in idx]
+        for u in idx:
+            for v, w in g.adj[u].items():
+                if v in remap:
+                    sub_adj[remap[u]][remap[v]] = w
+        sub = UGraph(sub_nw, sub_adj)
+        sub_targets = [targets[i] / wsum for i in group]
+        sub_part = partition_indices(sub, sub_targets, epsilon=epsilon, seed=seed + 17)
+        for u in idx:
+            out[u] = group[sub_part[remap[u]]]
+    # final k-way polish
+    return _fm_refine(g, out, targets, epsilon)
+
+
+# ---------------------------------------------------------------------------
+# TaskGraph adapter (paper semantics)
+# ---------------------------------------------------------------------------
+
+def weight_graph_of(
+    tg: TaskGraph,
+    *,
+    weight_source: str | Callable[[Mapping[str, float]], float] = "gpu",
+    edge_ms: Callable[[int], float] | None = None,
+) -> tuple[UGraph, list[str]]:
+    """Build the undirected weighted graph the partitioner consumes.
+
+    ``weight_source``: which class's time becomes the (scalar) node weight —
+    the paper's §III.B discussion.  "gpu"/"cpu"/any class name, "min", "mean",
+    or a callable over the per-class cost dict.
+    ``edge_ms``: bytes -> transfer ms; defaults to identity on bytes (pure cut
+    minimization in byte space).
+    """
+    names = list(tg.topo_order())
+    index = {n: i for i, n in enumerate(names)}
+    nw: list[float] = []
+    for n in names:
+        k = tg.nodes[n]
+        c = k.costs
+        if callable(weight_source):
+            w = weight_source(c)
+        elif weight_source == "min":
+            w = min(c.values()) if c else 0.0
+        elif weight_source == "mean":
+            w = sum(c.values()) / len(c) if c else 0.0
+        else:
+            w = c.get(weight_source, min(c.values()) if c else 0.0)
+        nw.append(max(w, 1e-9))
+    adj: list[dict[int, float]] = [dict() for _ in names]
+    for e in tg.edges:
+        u, v = index[e.src], index[e.dst]
+        w = edge_ms(e.nbytes) if edge_ms else float(e.nbytes)
+        w = max(w, 1e-9)
+        adj[u][v] = adj[u].get(v, 0.0) + w
+        adj[v][u] = adj[v].get(u, 0.0) + w
+    return UGraph(nw, adj), names
+
+
+def partition_taskgraph(
+    tg: TaskGraph,
+    targets: Mapping[str, float],
+    *,
+    weight_source: str = "gpu",
+    edge_ms: Callable[[int], float] | None = None,
+    epsilon: float = 0.05,
+    seed: int = 1,
+    pin: Mapping[str, str] | None = None,
+) -> dict[str, str]:
+    """Partition a TaskGraph into processor classes with target work fractions
+    (the paper's full gp pipeline minus the runtime).
+
+    Returns kernel name -> class name.  ``pin`` forces given kernels onto a
+    class (e.g. the virtual source onto the host); pins are applied after
+    partitioning by overriding the assignment (their weight contribution is
+    negligible for the source node, which has zero cost).
+    """
+    classes = list(targets)
+    ug, names = weight_graph_of(tg, weight_source=weight_source, edge_ms=edge_ms)
+    part = partition_indices(ug, [targets[c] for c in classes],
+                             epsilon=epsilon, seed=seed)
+    out = {names[i]: classes[part[i]] for i in range(len(names))}
+    if pin:
+        out.update(pin)
+    return out
+
+
+def cut_stats(tg: TaskGraph, assignment: Mapping[str, str],
+              edge_ms: Callable[[int], float] | None = None) -> dict:
+    """Cut edges / bytes / ms and per-class node-weight sums for reporting."""
+    cut_edges = 0
+    cut_bytes = 0
+    cut_ms = 0.0
+    for e in tg.edges:
+        if assignment[e.src] != assignment[e.dst]:
+            cut_edges += 1
+            cut_bytes += e.nbytes
+            cut_ms += edge_ms(e.nbytes) if edge_ms else 0.0
+    loads: dict[str, float] = {}
+    for n, k in tg.nodes.items():
+        c = assignment[n]
+        loads[c] = loads.get(c, 0.0) + (k.costs.get(c, 0.0))
+    return {"cut_edges": cut_edges, "cut_bytes": cut_bytes, "cut_ms": cut_ms,
+            "loads_ms": loads}

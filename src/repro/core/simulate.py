@@ -1,0 +1,302 @@
+"""Discrete-event simulator for data-flow execution on heterogeneous
+processors with discrete memory nodes and a shared bus (paper §IV platform:
+3 CPU worker cores + 1 GPU worker, one PCIe 3.0 x16 link).
+
+Models exactly the effects the paper evaluates:
+
+* per-worker in-order execution of assigned kernels;
+* **data consistency**: a kernel can only run on a processor once all its input
+  blocks are valid on that processor's memory node; cross-node reads enqueue
+  transfers on the shared bus (FIFO, single copy engine — the paper's GTX has
+  no dual copy engines, §III.B);
+* transfer counting / byte accounting (the paper's second metric);
+* scheduling-decision overhead (paper §IV.D: dmda pays per-task decision time,
+  gp decides once offline).
+
+The simulator also services the TPU adaptation: memory nodes = device groups,
+bus = inter-group link (ICI/DCN), workers = groups' compute streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Mapping, Sequence
+
+from .cost import Link, PCIE3_X16
+from .graph import TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Processor:
+    name: str
+    cls: str      # processor class ("cpu"/"gpu"/"tpu_pod0"...)
+    node: int     # memory node id (discrete memory per class/group)
+
+
+@dataclasses.dataclass
+class Platform:
+    procs: list[Processor]
+    link: Link = PCIE3_X16
+    host_node: int = 0
+
+    @property
+    def classes(self) -> list[str]:
+        seen: list[str] = []
+        for p in self.procs:
+            if p.cls not in seen:
+                seen.append(p.cls)
+        return seen
+
+    def node_of_class(self, cls: str) -> int:
+        for p in self.procs:
+            if p.cls == cls:
+                return p.node
+        raise KeyError(cls)
+
+    def workers_of(self, cls: str) -> list[Processor]:
+        return [p for p in self.procs if p.cls == cls]
+
+
+def make_cpu_gpu_platform(n_cpu: int = 3, n_gpu: int = 1,
+                          link: Link = PCIE3_X16) -> Platform:
+    """The paper's platform: quad-core i7 (3 worker cores + 1 runtime core) and
+    one GTX TITAN, over PCIe 3.0 x16."""
+    procs = [Processor(f"cpu{i}", "cpu", 0) for i in range(n_cpu)]
+    procs += [Processor(f"gpu{i}", "gpu", 1) for i in range(n_gpu)]
+    return Platform(procs, link=link, host_node=0)
+
+
+def make_group_platform(group_sizes: Mapping[str, int], link: Link) -> Platform:
+    """TPU adaptation: one worker per device *group*; each group has its own
+    memory node; groups talk over ``link`` (the slow inter-group fabric)."""
+    procs = []
+    for i, (cls, n) in enumerate(group_sizes.items()):
+        for j in range(n):
+            procs.append(Processor(f"{cls}.w{j}", cls, i))
+    return Platform(procs, link=link, host_node=0)
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan_ms: float
+    n_transfers: int
+    bytes_transferred: int
+    transfer_busy_ms: float
+    proc_busy_ms: dict[str, float]
+    kernels_per_class: dict[str, int]
+    decision_overhead_ms: float
+    offline_decision_ms: float
+    trace: list[tuple]          # (task, proc, start, finish)
+    transfers: list[tuple]      # (block, src_node, dst_node, start, finish)
+
+    def busy_fraction(self) -> dict[str, float]:
+        if self.makespan_ms <= 0:
+            return {k: 0.0 for k in self.proc_busy_ms}
+        return {k: v / self.makespan_ms for k, v in self.proc_busy_ms.items()}
+
+
+class Sim:
+    """Mutable simulation state handed to policies."""
+
+    def __init__(self, g: TaskGraph, platform: Platform):
+        self.g = g
+        self.platform = platform
+        self.now = 0.0
+        self.proc_free = {p.name: 0.0 for p in platform.procs}
+        self.proc_queue: dict[str, deque] = {p.name: deque() for p in platform.procs}
+        self.central: deque = deque()
+        self.valid: dict[str, dict[int, float]] = {}   # block -> node -> valid_at
+        self.bus_free = 0.0
+        self.finished: set[str] = set()
+        self.proc_by_name = {p.name: p for p in platform.procs}
+        # policy estimation helpers (dmda keeps its own view)
+        self.est_proc_avail = {p.name: 0.0 for p in platform.procs}
+
+    # -- estimation helpers used by dmda -------------------------------------
+    def missing_input_bytes(self, task: str, node: int) -> int:
+        nb = 0
+        for p in self.g.predecessors(task):
+            if self.g.nodes[p].op == "source":
+                block = f"{p}->{task}"
+                ent = self.valid.get(block,
+                                     {self.platform.host_node: 0.0})
+            else:
+                ent = self.valid.get(p)
+            if ent is None or node not in ent:
+                nb += self.g.edge(p, task).nbytes
+        return nb
+
+    def exec_ms(self, task: str, cls: str) -> float:
+        return self.g.nodes[task].cost_on(cls)
+
+
+def simulate(g: TaskGraph, policy, platform: Platform, *,
+             host_entry: bool = True) -> SimResult:
+    """Run ``policy`` over task graph ``g`` on ``platform``.
+
+    ``host_entry``: initial data lives on the host node (paper §III.B) — entry
+    kernels' inputs are host-resident; kernels running elsewhere must pay the
+    transfer for blocks they consume (including graph-entry blocks, modeled by
+    the virtual source node if present in ``g``).
+    """
+    g.validate()
+    sim = Sim(g, platform)
+    offline_ms = policy.prepare(g, platform)
+
+    pred_count = {n: len(g.predecessors(n)) for n in g.nodes}
+    n_tasks = len(g.nodes)
+
+    metrics = dict(n_transfers=0, bytes=0, tbusy=0.0, overhead=0.0)
+    busy = {p.name: 0.0 for p in platform.procs}
+    per_class: dict[str, int] = {}
+    trace: list[tuple] = []
+    transfers: list[tuple] = []
+
+    events: list[tuple] = []  # (time, seq, kind, payload)
+    seq = [0]
+
+    def push(t: float, kind: str, payload):
+        heapq.heappush(events, (t, seq[0], kind, payload))
+        seq[0] += 1
+
+    def mark_ready(task: str, t: float):
+        if g.nodes[task].op == "source":
+            # the virtual zero-weight kernel always runs on the host node
+            # (paper §III.B: all initial data is located on the host memory)
+            host = next(p for p in platform.procs if p.node == platform.host_node)
+            sim.proc_queue[host.name].append(task)
+            return
+        extra = policy.on_ready(task, sim)
+        metrics["overhead"] += getattr(policy, "decision_ms", 0.0)
+        if extra is None:
+            sim.central.append(task)
+        else:
+            q = sim.proc_queue[extra]
+            prio = getattr(policy, "priority", None)
+            if prio is None:
+                q.append(task)
+            else:  # keep queue sorted by descending priority (HEFT rank order)
+                pr = prio(task)
+                i = 0
+                for i, existing in enumerate(q):
+                    if prio(existing) < pr:
+                        break
+                else:
+                    i = len(q)
+                q.insert(i, task)
+
+    def block_valid_at(block: str, node: int) -> float | None:
+        ent = sim.valid.get(block)
+        if ent is None:
+            return None
+        return ent.get(node)
+
+    def start_task(proc: Processor, task: str, t: float):
+        """Reserve bus for missing inputs, then run. Returns finish time."""
+        arrival = t
+        for pred in g.predecessors(task):
+            e = g.edge(pred, task)
+            # each entry kernel's host input is its OWN block (paper §III.B:
+            # the zero-weight kernel models per-kernel initial data)
+            block = (f"{pred}->{task}" if g.nodes[pred].op == "source"
+                     else pred)
+            if g.nodes[pred].op == "source" and block not in sim.valid:
+                sim.valid[block] = {platform.host_node: 0.0}
+            va = block_valid_at(block, proc.node)
+            if va is not None:
+                arrival = max(arrival, va)
+                continue
+            # find a source node holding a valid copy (producer's node)
+            ent = sim.valid.get(block) or {}
+            src_node, src_t = min(ent.items(), key=lambda kv: kv[1])
+            ts = max(sim.bus_free, t, src_t)
+            dur = platform.link.transfer_ms(e.nbytes)
+            te = ts + dur
+            sim.bus_free = te
+            sim.valid.setdefault(block, {})[proc.node] = te
+            metrics["n_transfers"] += 1
+            metrics["bytes"] += e.nbytes
+            metrics["tbusy"] += dur
+            transfers.append((block, src_node, proc.node, ts, te))
+            arrival = max(arrival, te)
+        start = max(arrival, sim.proc_free[proc.name], t)
+        dur = g.nodes[task].cost_on(proc.cls)
+        finish = start + dur
+        sim.proc_free[proc.name] = finish
+        busy[proc.name] += dur
+        per_class[proc.cls] = per_class.get(proc.cls, 0) + 1
+        trace.append((task, proc.name, start, finish))
+        push(finish, "finish", (task, proc.name))
+
+    last_dispatch = {p.name: -1.0 for p in platform.procs}
+
+    def try_dispatch(t: float):
+        # keep dispatching until no proc can start anything.  Workers poll in
+        # earliest-idle order (ties by how long they've been waiting), so the
+        # fast processor that drains its work first also wins races for the
+        # central queue — matching the paper's observed eager behaviour.
+        progress = True
+        while progress:
+            progress = False
+            order = sorted(platform.procs,
+                           key=lambda p: (sim.proc_free[p.name],
+                                          last_dispatch[p.name], p.name))
+            for p in order:
+                if sim.proc_free[p.name] > t + 1e-12:
+                    continue
+                task = None
+                q = sim.proc_queue[p.name]
+                if q:
+                    task = q.popleft()
+                elif sim.central:
+                    pick = policy.on_idle(p, sim)
+                    if pick is not None:
+                        sim.central.remove(pick)
+                        task = pick
+                if task is not None:
+                    start_task(p, task, t)
+                    last_dispatch[p.name] = t
+                    progress = True
+
+    # seed: entry tasks ready at t=0; pre-existing input blocks valid on host
+    for n in g.topo_order():
+        if pred_count[n] == 0:
+            if host_entry:
+                sim.valid.setdefault("__host_inputs__", {})[platform.host_node] = 0.0
+            mark_ready(n, 0.0)
+    try_dispatch(0.0)
+
+    done = 0
+    makespan = 0.0
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        sim.now = t
+        if kind == "finish":
+            task, pname = payload
+            proc = sim.proc_by_name[pname]
+            sim.finished.add(task)
+            sim.valid.setdefault(task, {})[proc.node] = t
+            done += 1
+            makespan = max(makespan, t)
+            for s in g.successors(task):
+                pred_count[s] -= 1
+                if pred_count[s] == 0:
+                    mark_ready(s, t)
+            try_dispatch(t)
+    if done != n_tasks:
+        raise RuntimeError(f"deadlock: {done}/{n_tasks} tasks completed")
+
+    return SimResult(
+        makespan_ms=makespan,
+        n_transfers=metrics["n_transfers"],
+        bytes_transferred=metrics["bytes"],
+        transfer_busy_ms=metrics["tbusy"],
+        proc_busy_ms=busy,
+        kernels_per_class=per_class,
+        decision_overhead_ms=metrics["overhead"],
+        offline_decision_ms=offline_ms,
+        trace=trace,
+        transfers=transfers,
+    )

@@ -1,0 +1,114 @@
+"""Flash-attention forward as a Pallas TPU kernel.
+
+This is the ``fusedkernel_flash_fwd`` region of
+:mod:`repro.models.layers` made physical: scores/softmax stay in VMEM.
+
+Grid: (B, H, nq, nk) with the kv axis innermost ("arbitrary" semantics) so
+the (m, l, acc) scratch carries across kv steps for one query block — the
+standard TPU flash blocking (cf. the VMEM-tile hints in the brief: MXU dims
+multiples of 128, working set = q blk + kv blk + acc).
+
+Causal blocks that are entirely masked are SKIPPED via ``pl.when`` on the
+block index — the causal-waste the jnp oracle pays (2x) disappears at the
+kernel level; EXPERIMENTS.md accounts for this in the §Perf iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal, scale, bq, bk, nk, kv_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal skip: a block with every key strictly after every query
+    # contributes nothing — don't even compute it
+    live = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, 0]                                  # (bq, hd)
+        k = k_ref[0, 0]                                  # (bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret",
+                                    "kv_len"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 512, kv_len: int | None = None,
+                    interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, H, Sk, hd) -> (B, H, Sq, hd).
+
+    GQA callers repeat kv heads to H before the kernel (weights stay GQA;
+    the repeat is a view-level broadcast XLA folds into the kernel feed).
+    """
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+    kv_len = Sk if kv_len is None else kv_len
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                               bq=bq, bk=bk, nk=nk, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""The paper's MM kernel as a Pallas TPU matmul: MXU-aligned BlockSpec
+tiling with an f32 VMEM accumulator.
+
+Grid (M/bm, N/bn, K/bk); the K axis is the innermost ("arbitrary") grid
+dimension so the (bm, bn) accumulator scratch persists across K steps —
+the canonical TPU blocking: A and B stream HBM->VMEM tile by tile, the MXU
+consumes (bm, bk) x (bk, bn), and the output writes once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N).  Dims must divide by the block
+    sizes (the ops.py wrapper pads); blocks default to the 128-lane MXU."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    k_steps = K // bk
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,84 @@
+"""Dispatching wrappers: Pallas TPU kernels on TPU, interpret-mode Pallas
+for kernel tests, pure-jnp oracles otherwise (this CPU container).
+
+``KERNEL_MODE``:
+  auto      — pallas on TPU backends, ref on others (default)
+  pallas    — force pallas (interpret=True off-TPU; slow, tests only)
+  ref       — force the jnp oracle
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from . import matmul as _mm
+from . import matadd as _ma
+from . import flash_attention as _fa
+from . import wkv6 as _wkv
+
+KERNEL_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if KERNEL_MODE == "ref":
+        return False, False
+    if KERNEL_MODE == "pallas":
+        return True, not _on_tpu()
+    return _on_tpu(), False
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def matmul(a, b):
+    use, interp = _use_pallas()
+    if not use:
+        return _ref.matmul(a, b)
+    a2, pm = _pad_to(a, 128, 0)
+    a2, pk = _pad_to(a2, 128, 1)
+    b2, _ = _pad_to(b, 128, 0)
+    b2, pn = _pad_to(b2, 128, 1)
+    o = _mm.matmul(a2, b2, interpret=interp)
+    return o[: a.shape[0], : b.shape[1]]
+
+
+def matadd(a, b):
+    use, interp = _use_pallas()
+    if not use:
+        return _ref.matadd(a, b)
+    return _ma.matadd(a, b, interpret=interp)
+
+
+def flash_attention(q, k, v, *, causal=True, kv_len=None):
+    """(B, H, S, hd) layout."""
+    use, interp = _use_pallas()
+    if not use:
+        return _ref.flash_attention(q, k, v, causal=causal, kv_len=kv_len)
+    return _fa.flash_attention(q, k, v, causal=causal, kv_len=kv_len,
+                               interpret=interp)
+
+
+def wkv6(r, k, v, w, u):
+    use, interp = _use_pallas()
+    if not use:
+        return _ref.wkv6(r, k, v, w, u)[0]
+    return _wkv.wkv6(r, k, v, w, u, interpret=interp)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, partitions and compiles on the production meshes, and extract the
+memory/cost/collective numbers the roofline analysis consumes.
+
+MUST be executed as its own process (the XLA_FLAGS line above runs before
+any jax import — smoke tests and benches must see 1 device, so this is never
+set globally).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_2b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config, input_specs, canon
+from repro.launch import hlo as hlo_mod
+from repro.launch import flops as flops_mod
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
+                               ICI_BW, HBM_PER_CHIP)
+from repro.launch.steps import (DistConfig, make_train_step,
+                                make_prefill_step, make_decode_step,
+                                param_shardings, shardings_for_batch,
+                                replicated)
+from repro.models.params import eval_specs, logical_axes
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               dist: DistConfig = DistConfig(), cfg_overrides=None):
+    """Lower + compile one cell; returns the result record."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step, p_specs, o_specs, ctx = make_train_step(cfg, mesh, dist)
+        p_sh = param_shardings(p_specs, mesh, ctx.rules)
+        o_sh = param_shardings(o_specs, mesh, ctx.rules)
+        batch = input_specs(cfg, shape)
+        b_sh = shardings_for_batch(batch, mesh, ctx.rules)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, replicated(mesh)),
+                     donate_argnums=(0, 1))
+        args = (eval_specs(p_specs, _pdt(cfg)), eval_specs(o_specs), batch)
+    elif shape.kind == "prefill":
+        step, p_specs, ctx = make_prefill_step(cfg, mesh, dist)
+        p_sh = param_shardings(p_specs, mesh, ctx.rules)
+        batch = input_specs(cfg, shape)
+        b_sh = shardings_for_batch(batch, mesh, ctx.rules)
+        cache_sh = None  # inferred from rules on outputs
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+        args = (eval_specs(p_specs, _pdt(cfg)), batch)
+    else:  # decode
+        step, p_specs, c_specs, ctx = make_decode_step(
+            cfg, mesh, dist, batch=shape.global_batch,
+            cache_len=shape.seq_len)
+        p_sh = param_shardings(p_specs, mesh, ctx.rules)
+        c_sh = param_shardings(c_specs, mesh, ctx.rules)
+        tok_sh = NamedSharding(mesh, shd.spec_for(("batch",), ctx.rules, mesh,
+                                                  (shape.global_batch,)))
+        from repro.configs.base import pad_for_tp
+        vpad = pad_for_tp(cfg, mesh.shape["model"]).padded_vocab(
+            mesh.shape["model"])
+        logits_sh = NamedSharding(mesh, shd.spec_for(
+            ("batch", "vocab"), ctx.rules, mesh,
+            (shape.global_batch, vpad)))
+        fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, replicated(mesh)),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(1,))
+        args = (eval_specs(p_specs, _pdt(cfg)), eval_specs(c_specs),
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = lowered.as_text()
+    hlo_stats = hlo_mod.analyze(text)        # scan-aware walk of the HLO
+    coll = hlo_stats["collectives"]
+    mem_bytes = hlo_stats["mem_bytes"]
+
+    # FLOPs + analytic peak/traffic memory: jaxpr walk (scan-aware) / chips
+    t1 = time.time()
+    jx = jax.make_jaxpr(step)(*args)
+    global_flops = flops_mod.jaxpr_flops(jx.jaxpr)
+    flops = global_flops / n_chips
+    peak_live = flops_mod.jaxpr_peak_live_bytes(jx.jaxpr) / n_chips
+    mem_traffic = flops_mod.jaxpr_memory_bytes(jx.jaxpr) / n_chips
+    del jx
+    t_flops = time.time() - t1
+
+    mf = model_flops(cfg, shape, tp=mesh.shape.get("model", 1))
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips,
+        "accounting": "ring-wire-v2",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "t_flops_s": round(t_flops, 1),
+        "flops_per_device": flops,
+        "flops_hlo_naive": hlo_mod.flops_of(cost),  # scan-body-once; recorded
+        "bytes_per_device": mem_traffic,            # fusion-optimistic model
+        "bytes_hlo_walk": mem_bytes,                # CPU-HLO walk (inflated)
+        "bytes_hlo_naive": hlo_mod.bytes_accessed_of(cost),
+        "collectives": coll,
+        "mem": _mem_record(mem),
+        "peak_live_bytes_analytic": int(peak_live),
+        "fits_hbm_analytic": bool(peak_live <= HBM_PER_CHIP),
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops if flops else 0.0,
+    }
+    # roofline terms (seconds), per the brief's definitions
+    rec["terms"] = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": mem_traffic / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
+    bound = max(rec["terms"].values())
+    rec["roofline_fraction"] = (rec["terms"]["compute_s"] / bound
+                                if bound else 0.0)
+    return rec
+
+
+def model_flops(cfg, shape, tp: int = 1) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N = active
+    non-embedding params (MoE: routed experts scaled by top_k/E)."""
+    from repro.models.transformer import model_param_specs
+    from repro.models.params import is_spec
+    from repro.models.moe import padded_experts
+    from repro.configs.base import pad_for_tp
+    import numpy as np
+    cfg = pad_for_tp(cfg, tp)
+    specs = model_param_specs(cfg, tp=tp)
+    total = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)[0]
+    for path, s in flat:
+        n = int(np.prod(s.shape))
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if "embed" in keys or "unembed" in keys:
+            continue
+        total += n
+        if keys[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    if expert and cfg.n_experts:
+        e_pad = padded_experts(cfg.n_experts, tp)
+        active = expert * (cfg.top_k / e_pad)
+        total = total - expert + active
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * total * tokens
+
+
+def _pdt(cfg):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+
+
+def _mem_record(mem):
+    if mem is None:
+        return None
+    out = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = out.get("argument_size_in_bytes", 0) + \
+            out.get("temp_size_in_bytes", 0) + \
+            out.get("output_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0)
+        out["est_live_bytes"] = int(live)
+        out["fits_hbm"] = bool(live <= HBM_PER_CHIP)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--mode", type=str, default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--param-dtype", type=str, default=None)
+    ap.add_argument("--moe-dedup", action="store_true")
+    ap.add_argument("--moe-dest-k", type=float, default=None)
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--no-decode-seqpar", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    dist = DistConfig(seq_parallel=args.seq_parallel,
+                      sharding_mode=args.mode,
+                      decode_seqpar=not args.no_decode_seqpar,
+                      moe_dedup=args.moe_dedup, moe_dest_k=args.moe_dest_k,
+                      q_chunk=args.q_chunk, kv_chunk=args.kv_chunk)
+    archs = ARCH_IDS if (args.all or not args.arch) else [canon(args.arch)]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}.{shape}.{'multipod' if mp else 'pod'}"
+                if args.mode != "tp":
+                    tag += f".{args.mode}"
+                if args.tag:
+                    tag += f".{args.tag}"
+                ov = ({"param_dtype": args.param_dtype}
+                      if args.param_dtype else None)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp, dist=dist,
+                                     cfg_overrides=ov)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    t = rec["terms"]
+                    extra = (f" compute={t['compute_s']*1e3:.2f}ms "
+                             f"mem={t['memory_s']*1e3:.2f}ms "
+                             f"coll={t['collective_s']*1e3:.2f}ms "
+                             f"dom={rec['dominant']}"
+                             f" compile={rec['t_compile_s']}s")
+                elif status == "fail":
+                    extra = " " + rec["error"][:160]
+                print(f"[dryrun] {tag:55s} {status}{extra}", flush=True)
+    if failures:
+        print(f"[dryrun] {failures} FAILURES", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

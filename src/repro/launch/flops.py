@@ -1,0 +1,285 @@
+"""Scan-aware FLOP counting from jaxprs.
+
+``compiled.cost_analysis()`` counts a ``lax.scan``/``while`` body ONCE, which
+undercounts a 40-layer scanned transformer by ~40x.  This walker traverses
+the (closed) jaxpr before partitioning, multiplying sub-jaxpr costs by scan
+lengths / while trip counts, and counts matmul FLOPs exactly from
+``dot_general`` dimension numbers.  Elementwise/reduction ops are counted as
+one FLOP per output element (exactness matters for the matmuls; the rest is
+noise at transformer shapes, but keeping it makes attention-free archs
+honest).
+
+Global FLOPs / n_chips = per-device FLOPs for evenly-partitioned modules
+(our shardings pad to divisibility, so this holds to within padding).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax import core as jcore
+
+
+_ELEMENTWISE_2X = {"exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "erf",
+                   "sin", "cos", "pow"}
+_FREE = {"reshape", "transpose", "broadcast_in_dim", "squeeze", "slice",
+         "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+         "gather", "scatter", "scatter-add", "convert_element_type",
+         "bitcast_convert_type", "iota", "rev", "copy", "stop_gradient",
+         "select_n", "eq", "ne", "ge", "gt", "le", "lt", "and", "or", "not",
+         "xor", "sign", "is_finite", "device_put", "sharding_constraint",
+         "split", "squeeze", "expand_dims", "argmax", "argmin", "clamp",
+         "round", "floor", "ceil", "rem", "shift_left",
+         "shift_right_logical", "shift_right_arithmetic", "real", "imag"}
+
+
+def _out_elems(eqn) -> int:
+    n = 0
+    for v in eqn.outvars:
+        aval = v.aval
+        n += int(np.prod(aval.shape)) if aval.shape else 1
+    return n
+
+
+def _dot_general_flops(eqn) -> int:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    m = 1
+    for i, d in enumerate(a.shape):
+        if i not in lc and i not in lb:
+            m *= d
+    n = 1
+    for i, d in enumerate(b.shape):
+        if i not in rc and i not in rb:
+            n *= d
+    k = 1
+    for i in lc:
+        k *= a.shape[i]
+    batch = 1
+    for i in lb:
+        batch *= a.shape[i]
+    return 2 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> int:
+    # conv_general_dilated: 2 * out_elems * (k_spatial * in_features)
+    lhs = eqn.invars[0].aval
+    rhs = eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    kernel_elems = int(np.prod(rhs.shape))
+    out_spatial = int(np.prod(out.shape))
+    # per output element: contraction over kernel window x in-channels
+    dn = eqn.params.get("dimension_numbers")
+    fgc = eqn.params.get("feature_group_count", 1)
+    contraction = kernel_elems // max(out.shape[dn.out_spec[1]] if dn else 1, 1)
+    return 2 * out_spatial * max(contraction // max(fgc, 1), 1)
+
+
+def jaxpr_flops(jaxpr) -> float:
+    """Total FLOPs of a (closed) jaxpr, multiplying loop bodies."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_general_flops(eqn)
+        elif prim == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif prim == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += eqn.params["length"] * jaxpr_flops(body)
+        elif prim == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            trips = _while_trip_count(eqn)
+            total += trips * jaxpr_flops(body)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max((jaxpr_flops(b.jaxpr) for b in branches), default=0.0)
+        elif prim in ("pjit", "jit", "closed_call", "core_call",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "remat", "remat2",
+                      "checkpoint", "custom_lin"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                total += jaxpr_flops(getattr(inner, "jaxpr", inner))
+        elif prim == "shard_map":
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                # body runs per shard; cost below is per-shard -> multiply by
+                # the manual mesh size to keep GLOBAL accounting
+                mesh = eqn.params.get("mesh")
+                n = getattr(mesh, "size", 1)
+                total += n * jaxpr_flops(getattr(inner, "jaxpr", inner))
+        elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                      "reduce_and", "reduce_or", "cumsum", "cummax",
+                      "cumlogsumexp"):
+            # count input elements (one op per reduced element)
+            total += int(np.prod(eqn.invars[0].aval.shape) or 1)
+        elif prim in ("add", "sub", "mul", "div", "max", "min", "neg", "abs",
+                      "integer_pow", "square"):
+            total += _out_elems(eqn)
+        elif prim in _ELEMENTWISE_2X:
+            total += 2 * _out_elems(eqn)
+        elif prim in ("sort",):
+            n = int(np.prod(eqn.invars[0].aval.shape) or 1)
+            total += n * max(int(np.log2(max(n, 2))), 1)
+        elif prim in _FREE:
+            pass
+        else:
+            # unknown primitive: one flop per output element (conservative)
+            total += _out_elems(eqn)
+    return total
+
+
+def _while_trip_count(eqn) -> int:
+    """Best-effort static trip count of a lax.while (fori_loop pattern)."""
+    cond = eqn.params["cond_jaxpr"].jaxpr
+    # fori: cond is (i < N) with N a literal or a constant input
+    for ceqn in cond.eqns:
+        if ceqn.primitive.name == "lt":
+            b = ceqn.invars[1]
+            if hasattr(b, "val"):
+                return int(b.val)
+    return 1
+
+
+def count_step_flops(fn, *args) -> float:
+    """Trace ``fn`` with ShapeDtypeStruct args and count global FLOPs."""
+    import jax
+    jx = jax.make_jaxpr(fn)(*args)
+    return jaxpr_flops(jx.jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# analytic peak-memory estimate (jaxpr liveness)
+# ---------------------------------------------------------------------------
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else \
+        np.dtype(dtype).itemsize
+
+
+def jaxpr_peak_live_bytes(jaxpr, *, donated_in_bytes: int = 0) -> int:
+    """Peak simultaneously-live bytes from a linear liveness walk of the
+    TOP-LEVEL jaxpr (inner loops contribute their boundary values only —
+    their transients are assumed small after the flash/chunk fixes).
+
+    This is the TPU-expected estimate: it avoids the CPU backend's
+    f32-upcast copies of bf16 buffers that inflate
+    ``compiled.memory_analysis()`` on this container (see DESIGN.md).
+    ``donated_in_bytes``: bytes of donated arguments (params/opt state) —
+    donation lets XLA alias them with outputs, saving one copy.
+    """
+    from jax._src.core import Literal
+    last_use: dict = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if hasattr(v, "aval") and not isinstance(v, Literal):
+                last_use[v] = i
+    for v in jaxpr.outvars:
+        if hasattr(v, "aval") and not isinstance(v, Literal):
+            last_use[v] = len(jaxpr.eqns) + 1
+
+    live = 0
+    for v in jaxpr.invars + jaxpr.constvars:
+        live += _aval_bytes(v.aval)
+    peak = live
+    frees: dict[int, list] = {}
+    for v, i in last_use.items():
+        frees.setdefault(i, []).append(v)
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.outvars:
+            live += _aval_bytes(v.aval)
+        peak = max(peak, live)
+        for v in frees.get(i, []):
+            # freeing an argument at last use models donation/aliasing:
+            # per-leaf optimizer updates free the old leaf as the new one
+            # appears, so params+opt are counted once, not twice
+            live -= _aval_bytes(v.aval)
+    return int(max(peak - donated_in_bytes, 0))
+
+
+def step_peak_bytes(fn, *args, donated: float = 0) -> int:
+    import jax
+    jx = jax.make_jaxpr(fn)(*args)
+    return jaxpr_peak_live_bytes(jx.jaxpr, donated_in_bytes=int(donated))
+
+
+# ---------------------------------------------------------------------------
+# fusion-optimistic HBM traffic model
+# ---------------------------------------------------------------------------
+
+_MEM_HEAVY = {"dot_general", "conv_general_dilated", "gather", "scatter",
+              "scatter-add", "scatter_add", "dynamic_update_slice",
+              "dynamic_slice", "sort", "cumsum"}
+
+
+def _eqn_io_bytes(eqn) -> int:
+    n = 0
+    for v in eqn.invars:
+        if hasattr(v, "aval"):
+            n += _aval_bytes(v.aval)
+    for v in eqn.outvars:
+        n += _aval_bytes(v.aval)
+    return n
+
+
+def jaxpr_memory_bytes(jaxpr) -> float:
+    """HBM traffic estimate assuming TPU-grade fusion: only ops that
+    necessarily touch HBM are counted — dot/conv operands+outputs,
+    gather/scatter/DUS (cache updates), sort, plus loop-boundary traffic
+    (carry + xs slice + ys slice per iteration).  Elementwise chains are
+    assumed fused into their producers.  The CPU backend's
+    ``cost_analysis()['bytes accessed']`` is unusable here (weak fusion and
+    f32-upcast copies of bf16 buffers inflate it >100x vs a TPU build)."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            length = eqn.params["length"]
+            ncar = eqn.params["num_carry"]
+            ncon = eqn.params["num_consts"]
+            inner = jaxpr_memory_bytes(body)
+            # per-iteration boundary traffic: carries r/w + xs read + ys write
+            carry = sum(_aval_bytes(v.aval)
+                        for v in body.invars[ncon:ncon + ncar])
+            xs = sum(_aval_bytes(v.aval) for v in body.invars[ncon + ncar:])
+            ys = sum(_aval_bytes(v.aval) for v in body.outvars[ncar:])
+            total += length * (inner + 2 * carry + xs + ys)
+        elif prim == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            trips = _while_trip_count(eqn)
+            carry = sum(_aval_bytes(v.aval) for v in body.invars)
+            total += trips * (jaxpr_memory_bytes(body) + 2 * carry)
+        elif prim == "cond":
+            total += max((jaxpr_memory_bytes(b.jaxpr)
+                          for b in eqn.params["branches"]), default=0.0)
+        elif prim in ("pjit", "jit", "closed_call", "core_call",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "remat", "remat2",
+                      "checkpoint", "custom_lin"):
+            if str(eqn.params.get("name", "")).startswith("fusedkernel"):
+                # a region implemented as a Pallas TPU kernel: internals are
+                # VMEM-resident, HBM traffic = region inputs + outputs
+                total += _eqn_io_bytes(eqn)
+                continue
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                total += jaxpr_memory_bytes(getattr(inner, "jaxpr", inner))
+        elif prim == "shard_map":
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                mesh = eqn.params.get("mesh")
+                n = getattr(mesh, "size", 1)
+                total += n * jaxpr_memory_bytes(getattr(inner, "jaxpr", inner))
+        elif prim in _MEM_HEAVY:
+            total += _eqn_io_bytes(eqn)
+        elif prim.startswith("reduce_"):
+            total += _eqn_io_bytes(eqn)
+    return total

@@ -1,0 +1,227 @@
+"""HLO text analysis: scan-aware memory + collective byte accounting.
+
+``compiled.cost_analysis()`` counts a while/scan body ONCE and exposes no
+collective traffic, so the roofline terms are derived here instead:
+
+* the module text is split into computations;
+* the walk starts at ENTRY and descends through ``while`` (body + cond,
+  multiplied by the ``known_trip_count`` backend config XLA attaches),
+  ``call``/``conditional`` — fusion sub-computations are NOT descended into
+  (their internals live in registers/VMEM, not HBM);
+* **memory bytes** per instruction = output bytes + operand bytes (one write
+  + one read per consumer — the standard no-reuse HBM traffic model on the
+  post-fusion HLO);
+* **collective bytes** = output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute ops (per-device traffic
+  proxy; ring-term constant factors documented in EXPERIMENTS.md).
+
+All quantities are per-device (the module is the partitioned SPMD module).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "rest", "out_bytes")
+
+    def __init__(self, name, shape, op, rest):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.rest = rest
+        self.out_bytes = shape_bytes(shape)
+
+
+def parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                comps[name] = []
+                cur = comps[name]
+                if m.group(1):
+                    entry = name
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(Instr(m.group(1), m.group(2), m.group(3),
+                             m.group(4)))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry
+    return comps
+
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands appear before the first '),'  e.g.  (%a, %b), attr=...
+    depth = 0
+    end = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    return re.findall(r"%([\w.\-]+)", rest[:end])
+
+
+def analyze(text: str) -> dict:
+    comps = parse_computations(text)
+    entry_name = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+    memo: dict[str, dict] = {}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        instrs = comps.get(name, [])
+        sizes = {i.name: i.out_bytes for i in instrs}
+        mem = 0.0
+        coll = defaultdict(float)
+        coll_n = defaultdict(int)
+        ops: list = []
+        memo[name] = {"mem": 0.0, "coll": coll, "coll_n": coll_n,
+                      "ops": ops}  # cycle guard
+        for ins in instrs:
+            op = ins.op
+            if op in _SKIP_MEM:
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done") and op[:-5] in _COLLECTIVES:
+                continue  # async pair: the -start carries the bytes
+            if op == "while":
+                trips = 1
+                m = _TRIP_RE.search(ins.rest)
+                if m:
+                    trips = int(m.group(1))
+                for sub in _called(ins):
+                    c = comp_cost(sub)
+                    mem += trips * c["mem"]
+                    for k, v in c["coll"].items():
+                        coll[k] += trips * v
+                        coll_n[k] += trips * c["coll_n"][k]
+                    for kind, nb, n in c["ops"]:
+                        ops.append((kind, nb, n * trips))
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for sub in _called(ins):
+                    c = comp_cost(sub)
+                    mem += c["mem"]
+                    for k, v in c["coll"].items():
+                        coll[k] += v
+                        coll_n[k] += c["coll_n"][k]
+                    ops.extend(c["ops"])
+                # fall through to count the op's own bytes too
+            # memory traffic: one write + one read per operand
+            nbytes = ins.out_bytes
+            for opd in _operand_names(ins.rest):
+                nbytes += sizes.get(opd, 0)
+            mem += nbytes
+            if base in _COLLECTIVES:
+                # ring wire-byte model: all-reduce moves ~2x its payload
+                # (reduce-scatter pass + all-gather pass); AG/RS/a2a ~1x.
+                # The (N-1)/N factor is dropped (N=256: 0.4%).
+                wire = ins.out_bytes * (2 if base == "all-reduce" else 1)
+                coll[base] += wire
+                coll_n[base] += 1
+                ops.append((f"{base} {ins.shape[:48]}", wire, 1))
+        memo[name] = {"mem": mem, "coll": coll, "coll_n": coll_n,
+                      "ops": ops}
+        return memo[name]
+
+    def _called(ins: Instr):
+        out = []
+        for m in _CALLS_RE.finditer(ins.rest):
+            nm = m.group(1)
+            if nm in comps:
+                out.append(nm)
+        for m in _BRANCHES_RE.finditer(ins.rest):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm in comps:
+                    out.append(nm)
+        return out
+
+    c = comp_cost(entry_name) if entry_name else {"mem": 0.0, "coll": {},
+                                                  "coll_n": {}, "ops": []}
+    coll_total = sum(c["coll"].values())
+    # aggregate identical collective ops: (desc, bytes) -> count
+    agg: dict = defaultdict(int)
+    for kind, nb, n in c["ops"]:
+        agg[(kind, nb)] += n
+    top = sorted(((kind, nb, n, nb * n) for (kind, nb), n in agg.items()),
+                 key=lambda t: -t[3])[:12]
+    return {
+        "mem_bytes": c["mem"],
+        "collectives": {**{k: int(v) for k, v in c["coll"].items()},
+                        "total": int(coll_total),
+                        "count": int(sum(c["coll_n"].values())),
+                        "per_kind_count": {k: int(v)
+                                           for k, v in c["coll_n"].items()},
+                        "top_ops": [
+                            {"op": k, "bytes": int(b), "times": int(n),
+                             "total": int(t)} for k, b, n, t in top]},
+    }
+
+
+def collective_bytes(text: str) -> dict:
+    return analyze(text)["collectives"]
+
+
+def flops_of(cost: dict | None) -> float:
+    if not cost:
+        return 0.0
+    return float(cost.get("flops", 0.0))
+
+
+def bytes_accessed_of(cost: dict | None) -> float:
+    if not cost:
+        return 0.0
+    return float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))

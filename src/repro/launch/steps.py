@@ -1,0 +1,142 @@
+"""Step factories shared by the trainer, the server and the dry-run: build
+jit-able train / prefill / decode steps with their in/out shardings derived
+from the logical-axis rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from ..configs.base import ModelConfig, ShapeConfig, pad_for_tp
+from ..models import transformer as T
+from ..models.layers import Ctx
+from ..models.params import eval_specs, logical_axes, init_params
+from ..optim import adamw
+from ..parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Distribution knobs (hillclimb levers live here)."""
+    sharding_mode: str = "tp"           # tp (Megatron, baseline) | fsdp
+    seq_parallel: bool = False
+    decode_seqpar: bool = True          # flash-decode cache seq-sharding
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    compress_int8: bool = False
+    moe_dedup: bool = False
+    moe_dest_k: float | None = None
+    lr: float = 3e-4
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh | None, phase: str,
+             dist: DistConfig) -> Ctx:
+    rules = shd.rules_for(cfg, phase, seq_parallel=dist.seq_parallel,
+                          sharding_mode=dist.sharding_mode)
+    return Ctx(rules=rules, dtype=_dtype(cfg.activation_dtype),
+               mesh=mesh, decode_seqpar=dist.decode_seqpar,
+               remat=dist.remat and cfg.remat,
+               q_chunk=dist.q_chunk, kv_chunk=dist.kv_chunk,
+               fsdp_gather=(dist.sharding_mode == "fsdp"
+                            and phase != "decode"),
+               moe_dedup=dist.moe_dedup, moe_dest_k=dist.moe_dest_k)
+
+
+def batch_axes(batch_tree: Mapping[str, Any]) -> dict:
+    """Logical axes for a batch dict by array rank."""
+    def axes(v):
+        return {1: ("batch",), 2: ("batch", "seq"),
+                3: ("batch", "seq", "embed")}[v.ndim if hasattr(v, "ndim")
+                                              else len(v.shape)]
+    return {k: axes(v) for k, v in batch_tree.items()}
+
+
+def shardings_for_batch(batch_tree, mesh, rules):
+    return {k: NamedSharding(mesh, shd.spec_for(a, rules, mesh,
+                                                batch_tree[k].shape))
+            for k, a in batch_axes(batch_tree).items()}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
+                    opt_cfg: adamw.AdamWConfig | None = None):
+    """Returns (train_step, param_specs, opt_specs, ctx)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=dist.lr, state_dtype=_dtype(cfg.optstate_dtype),
+        compress_int8=dist.compress_int8)
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    cfg = pad_for_tp(cfg, tp)
+    ctx = make_ctx(cfg, mesh, "train", dist)
+    param_specs = T.model_param_specs(cfg, tp=tp)
+    opt_specs = adamw.state_specs(param_specs, opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return T.lm_loss(p, batch, cfg, ctx)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr_scale = adamw.cosine_schedule(opt_state["step"] + 1, warmup=100,
+                                         total=10000)
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, lr_scale=lr_scale)
+        out = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out
+
+    return train_step, param_specs, opt_specs, ctx
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
+                      cache_len: int | None = None):
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    cfg = pad_for_tp(cfg, tp)
+    ctx = make_ctx(cfg, mesh, "prefill", dist)
+    param_specs = T.model_param_specs(cfg, tp=tp)
+
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, ctx, cache_len=cache_len)
+
+    return prefill_step, param_specs, ctx
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
+                     batch: int, cache_len: int):
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    cfg = pad_for_tp(cfg, tp)
+    ctx = make_ctx(cfg, mesh, "decode", dist)
+    param_specs = T.model_param_specs(cfg, tp=tp)
+    cache_spec_tree = T.cache_specs(cfg, batch, cache_len, tp=tp)
+
+    def decode_step(params, cache, tokens, pos):
+        return T.decode_step(params, cache, tokens, pos, cfg, ctx)
+
+    return decode_step, param_specs, cache_spec_tree, ctx
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def param_shardings(param_specs, mesh, rules):
+    return shd.tree_shardings(param_specs, mesh, rules)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, PS())

@@ -1,0 +1,123 @@
+"""End-to-end trainer: config -> mesh -> sharded train loop with
+checkpoint/restart, failure-injection hooks and heartbeat monitoring.
+
+Runs real steps on whatever devices exist (the CPU container trains the
+~100M example config; a TPU slice trains the full archs with the same code).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
+      --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeConfig, pad_for_tp
+from repro.configs.registry import get_config, canon
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, batches
+from repro.ft.elastic import Heartbeat, HeartbeatMonitor
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import (DistConfig, make_train_step, param_shardings,
+                                shardings_for_batch, replicated)
+from repro.models.params import init_params, eval_specs, count_params
+from repro.optim import adamw
+
+
+def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
+          dist: DistConfig = DistConfig(), ckpt_dir: str | None = None,
+          ckpt_every: int = 50, log_every: int = 10, seed: int = 0,
+          fail_at: int | None = None):
+    step_fn, p_specs, o_specs, ctx = make_train_step(cfg, mesh, dist)
+    p_sh = param_shardings(p_specs, mesh, ctx.rules)
+    o_sh = param_shardings(o_specs, mesh, ctx.rules)
+    cfgp = pad_for_tp(cfg, mesh.shape.get("model", 1))
+
+    dummy = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    b_sh = shardings_for_batch(dummy, mesh, ctx.rules)
+
+    jit_step = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
+                       out_shardings=(p_sh, o_sh, replicated(mesh)),
+                       donate_argnums=(0, 1))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    params = opt_state = None
+    if mgr is not None:
+        got, state = mgr.restore(shardings={"params": p_sh, "opt": o_sh})
+        if got is not None:
+            start, params, opt_state = got, state["params"], state["opt"]
+            print(f"[train] restored step {start} from {ckpt_dir}")
+    if params is None:
+        with jax.default_device(jax.devices()[0]):
+            params = init_params(p_specs, jax.random.PRNGKey(seed))
+            opt_state = init_params(o_specs, jax.random.PRNGKey(0))
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+    n_params = count_params(p_specs)
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{mesh.devices.size} device(s), batch {global_batch} x {seq_len}")
+
+    data_cfg = DataConfig(seq_len=seq_len, global_batch=global_batch,
+                          vocab=cfg.vocab, seed=seed)
+    mon = HeartbeatMonitor(["trainer"])
+    losses = []
+    t_last = time.time()
+    it = batches(data_cfg, b_sh, start_step=start)
+    for step in range(start, steps):
+        batch = next(it)
+        if fail_at is not None and step == fail_at:
+            raise RuntimeError(f"injected failure at step {step}")
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        if (step + 1) % log_every == 0 or step + 1 == steps:
+            loss = float(metrics["loss"])
+            dt = (time.time() - t_last) / log_every * 1e3
+            t_last = time.time()
+            losses.append(loss)
+            mon.report(Heartbeat("trainer", step, dt, time.time()))
+            print(f"[train] step {step+1:5d} loss {loss:.4f} "
+                  f"({dt:.0f} ms/step)", flush=True)
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state})
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state}, blocking=True)
+    return params, opt_state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="granite_3_2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(canon(args.arch))
+    if args.smoke:
+        cfg = cfg.smoke()
+        cfg = dataclasses.replace(cfg, activation_dtype="float32")
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    train(cfg, mesh, steps=args.steps, global_batch=args.batch,
+          seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+          ckpt_every=args.ckpt_every,
+          dist=DistConfig(seq_parallel=args.seq_parallel),
+          fail_at=args.fail_at)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Parameter specification system: shapes + logical sharding axes.
+
+Models define their parameters as (nested dicts of) :class:`P` specs —
+shape, dtype, *logical axis names* and an init recipe.  From one spec tree we
+derive, without duplication:
+
+* ``init_params``      — real arrays (smoke tests / the CPU trainer),
+* ``eval_specs``       — ``jax.ShapeDtypeStruct`` stand-ins (the dry-run),
+* ``logical_axes``     — the axis-name tree consumed by
+  :mod:`repro.parallel.sharding` to produce ``NamedSharding``s.
+
+This is the MaxText "logical axis rules" idea without a flax dependency; the
+whole framework treats parameters as plain pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter: shape, logical axes (one name or None per dim), init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float | None = None     # override init stddev
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # all-but-last dims are treated as input dims for scaled init
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(int(np.prod(shape[:-1])), 1)
+
+
+def init_array(spec: P, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+    if spec.init == "small":
+        std *= 0.1
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _map_specs(tree, fn):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(tree, key: jax.Array, param_dtype=None):
+    """Materialize a spec tree into real arrays (deterministic in ``key``)."""
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def make(spec: P):
+        i = next(it)
+        arr = init_array(spec, keys[i])
+        if param_dtype is not None and jnp.issubdtype(arr.dtype, jnp.floating):
+            arr = arr.astype(param_dtype)
+        return arr
+
+    return _map_specs(tree, make)
+
+
+def eval_specs(tree, param_dtype=None):
+    """ShapeDtypeStruct tree for `.lower()` — no allocation."""
+    def make(spec: P):
+        dt = spec.dtype
+        if param_dtype is not None and jnp.issubdtype(jnp.dtype(dt), jnp.floating):
+            dt = param_dtype
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+    return _map_specs(tree, make)
+
+
+def logical_axes(tree):
+    """Tree of logical-axis tuples, same structure as the spec tree."""
+    return _map_specs(tree, lambda s: s.axes)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def param_bytes(tree, dtype_bytes: int = 4) -> int:
+    return count_params(tree) * dtype_bytes

@@ -1,0 +1,174 @@
+"""RWKV-6 "Finch" mixer: linear attention with data-dependent decay.
+
+Per head (head size N): state S in R^{N x N},
+    o_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t in (0,1) data-dependent (the paper's headline feature) and u a
+learned per-channel "bonus" for the current token.
+
+Receptance/key/value/gate/decay are produced from a data-dependent token
+shift (ddlerp with a low-rank adapter, as in the RWKV-6 reference).
+
+Two evaluation paths:
+* ``rwkv6_block`` — chunked ``lax.scan``: carries S across chunks, unrolls the
+  (small) chunk body.  O(1)-state decode makes this arch long_500k-capable.
+* decode: single recurrence step against the cached state.
+
+Heads are sharded over "model" (the state tensor is embarrassingly parallel
+across heads).  40 heads over 16 shards is uneven — GSPMD pads; see DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+from .layers import Ctx
+
+
+LORA_DIM = 32          # TIME_MIX_EXTRA_DIM in the reference implementation
+DECAY_LORA_DIM = 64
+
+
+def rwkv_params(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.rwkv_n_heads
+    N = cfg.rwkv_head_size
+    return {
+        # ddlerp: 5 interpolation anchors (r,k,v,g,w) + low-rank adapters
+        "mu_x": P((d,), (None,), init="zeros"),
+        "mu": P((5, d), (None, None), init="zeros"),
+        "lora_a": P((d, 5, LORA_DIM), ("embed_fsdp", None, None), init="small"),
+        "lora_b": P((5, LORA_DIM, d), (None, None, "embed_fsdp"), init="small"),
+        # decay: w = exp(-exp(w0 + tanh(x A_w) B_w)) — per (head, channel);
+        # the attention-inner width H*N may exceed d when heads are padded
+        # to the TP degree (40 -> 48 over 16 shards; see DESIGN.md)
+        "w0": P((H, N), ("rwkv_heads", None), init="zeros"),
+        "w_a": P((d, DECAY_LORA_DIM), ("embed_fsdp", None), init="small"),
+        "w_b": P((DECAY_LORA_DIM, H, N), (None, "rwkv_heads", None),
+                 init="small"),
+        "u": P((H, N), ("rwkv_heads", None), init="zeros"),   # bonus
+        "wr": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
+        "wk": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
+        "wv": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
+        "wg": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
+        "ln_out_scale": P((H * N,), (None,), init="ones"),
+        "ln_out_bias": P((H * N,), (None,), init="zeros"),
+        "wo": P((H, N, d), ("rwkv_heads", None, "embed_fsdp")),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation.
+
+    x, x_prev: (B, S, d).  Returns 5 mixed streams (r,k,v,g,w): (5, B, S, d).
+    """
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"].astype(x.dtype)
+    # low-rank data-dependent adjustment for the 5 mixes
+    a = jnp.tanh(jnp.einsum("bsd,dfl->bsfl", xx, p["lora_a"].astype(x.dtype)))
+    adj = jnp.einsum("bsfl,fld->fbsd", a, p["lora_b"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype)[:, None, None] + adj        # (5,B,S,d)
+    return x[None] + dx[None] * mix
+
+
+def _rkvgw(p, x, x_prev, cfg, ctx: Ctx):
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    mr, mk, mv, mg, mw = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,dhn->bshn", mr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhn->bshn", mk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhn->bshn", mv, p["wv"].astype(x.dtype))
+    B, S, _ = x.shape
+    g = jax.nn.silu(jnp.einsum("bsd,dhn->bshn", mg, p["wg"].astype(x.dtype))
+                    .reshape(B, S, H * N))
+    wraw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsl,lhn->bshn",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", mw,
+                            p["w_a"].astype(x.dtype))).astype(jnp.float32),
+        p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wraw - 0.5))                 # (B,S,H,N) in (0,1)
+    return r, k, v, g, w
+
+
+def _group_norm(p, x, H, eps=64e-5):
+    """Per-head group norm over the flattened (H, N) output.  x: (B,S,H*N)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(B, S, d) * p["ln_out_scale"].astype(jnp.float32) \
+        + p["ln_out_bias"].astype(jnp.float32)
+    return out
+
+
+def _wkv_step(state, r_t, k_t, v_t, w_t, u):
+    """One recurrence step.  state: (B,H,N,N) [k-index, v-index].
+    r/k/v/w_t: (B,H,N); u: (H,N)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]                # (B,H,N,N)
+    o = jnp.einsum("bhk,bhkn->bhn", r_t, state + u[..., :, None] * kv)
+    state = w_t[..., :, None] * state + kv
+    return state, o
+
+
+def rwkv6_block(p, x, cfg, ctx: Ctx, *, chunk: int = 32):
+    """Full-sequence mixer.  x: (B,S,d) -> (out, cache {"S","x_last"})."""
+    B, S, d = x.shape
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rkvgw(p, x, x_prev, cfg, ctx)
+    r = ctx.cs(r, "batch", "seq", "rwkv_heads", None)
+    k = ctx.cs(k, "batch", "seq", "rwkv_heads", None)
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+
+    pad = (-S) % chunk
+    if pad:
+        rf, kf, vf, w = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                         for t in (rf, kf, vf, w))
+        # padded decay of 1 keeps the state unchanged on pad steps
+        w = w.at[:, S:].set(1.0)
+    nck = (S + pad) // chunk
+
+    def chunk_step(state, inp):
+        rc, kc, vc, wc = inp                                  # (B,chunk,H,N)
+        outs = []
+        for t in range(chunk):
+            state, o = _wkv_step(state, rc[:, t], kc[:, t], vc[:, t],
+                                 wc[:, t], u)
+            outs.append(o)
+        return state, jnp.stack(outs, axis=1)
+
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(t.reshape(B, nck, chunk, H, N).swapaxes(0, 1)
+               for t in (rf, kf, vf, w))
+    state, os_ = jax.lax.scan(jax.checkpoint(chunk_step), s0, xs)
+    o = os_.swapaxes(0, 1).reshape(B, S + pad, H * N)[:, :S]
+    o = _group_norm(p, o, H).astype(x.dtype) * g
+    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, S, H, N),
+                     p["wo"].astype(x.dtype))
+    cache = {"S": state, "x_last": x[:, -1]}
+    return ctx.cs(out, "batch", "seq", "embed"), cache
+
+
+def rwkv6_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
+    """One-token step.  x: (B,1,d); cache {"S": (B,H,N,N), "x_last": (B,d)}."""
+    B = x.shape[0]
+    H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    x_prev = cache["x_last"][:, None]
+    r, k, v, g, w = _rkvgw(p, x, x_prev, cfg, ctx)
+    state, o = _wkv_step(cache["S"],
+                         r[:, 0].astype(jnp.float32),
+                         k[:, 0].astype(jnp.float32),
+                         v[:, 0].astype(jnp.float32),
+                         w[:, 0], p["u"].astype(jnp.float32))
+    o = _group_norm(p, o.reshape(B, 1, H * N), H).astype(x.dtype) * g
+    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, 1, H, N),
+                     p["wo"].astype(x.dtype))
+    return ctx.cs(out, "batch", "seq", "embed"), {
+        "S": state, "x_last": x[:, 0].astype(cache["x_last"].dtype)}

@@ -1,0 +1,156 @@
+"""Mamba (S6 selective SSM) mixer — Jamba's attention-free layer.
+
+Recurrence (diagonal, per channel c and state n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Train/prefill runs a chunked ``lax.scan`` over the sequence (carry = the
+(B, d_inner, d_state) state, chunk unrolled) so the (B, S, d_inner, d_state)
+expansion never materializes; decode is a single recurrence step against the
+cached state.  ``d_inner`` is sharded over "model" — the state is fully
+parallel across channels, so TP needs no collectives inside the mixer (the
+in/out projections carry the usual Megatron-style pattern).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+from .layers import Ctx, rmsnorm, rmsnorm_params
+
+
+def mamba_params(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = math.ceil(d / 16)
+    return {
+        "in_proj": P((d, 2 * di), ("embed_fsdp", "mamba_inner")),
+        "conv_w": P((dc, di), (None, "mamba_inner"), init="normal",
+                    scale=1.0 / math.sqrt(dc)),
+        "conv_b": P((di,), ("mamba_inner",), init="zeros"),
+        "x_proj": P((di, dt_rank + 2 * ds), ("mamba_inner", None)),
+        "dt_proj": P((dt_rank, di), (None, "mamba_inner")),
+        "dt_bias": P((di,), ("mamba_inner",), init="zeros"),
+        "A_log": P((di, ds), ("mamba_inner", None), init="zeros"),
+        "D": P((di,), ("mamba_inner",), init="ones"),
+        "out_proj": P((di, d), ("mamba_inner", "embed_fsdp")),
+        # Jamba's extra norms on dt/B/C
+        "dt_norm": rmsnorm_params(dt_rank),
+        "b_norm": rmsnorm_params(ds),
+        "c_norm": rmsnorm_params(ds),
+    }
+
+
+def _dt_bc(p, xs, cfg, dt_rank):
+    """xs: (..., di) -> dt (..., di), B (..., ds), C (..., ds)."""
+    ds = cfg.mamba_d_state
+    dbc = jnp.einsum("...i,ij->...j", xs, p["x_proj"].astype(xs.dtype))
+    dt, b, c = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = rmsnorm(p["dt_norm"], dt, cfg.norm_eps)
+    b = rmsnorm(p["b_norm"], b, cfg.norm_eps).astype(jnp.float32)
+    c = rmsnorm(p["c_norm"], c, cfg.norm_eps).astype(jnp.float32)
+    dt = jnp.einsum("...r,ri->...i", dt, p["dt_proj"].astype(dt.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, b, c
+
+
+def _conv_causal(p, x):
+    """Depthwise causal conv, width d_conv.  x: (B, S, di)."""
+    dc = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    out = x * w[-1]
+    for i in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_block(p, x, cfg, ctx: Ctx):
+    """Full-sequence mixer.  x: (B, S, d) -> (out, state) where state is the
+    decode-ready cache {"h": (B, di, ds), "conv": (B, dc-1, di)}."""
+    B, S, d = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    dt_rank = math.ceil(cfg.d_model / 16)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = ctx.cs(xs, "batch", "seq", "mamba_inner")
+    xs = jax.nn.silu(_conv_causal(p, xs))
+    dt, b, c = _dt_bc(p, xs, cfg, dt_rank)                   # (B,S,di),(B,S,ds)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, ds)
+    xf = xs.astype(jnp.float32)
+
+    chunk = 16
+    pad = (-S) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nck = (S + pad) // chunk
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                # (B,di),(B,di),(B,ds)
+        da = jnp.exp(dtt[..., None] * A)                     # (B,di,ds)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, ct)
+        return h, y
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                                # (B,chunk,·)
+        ys = []
+        for t in range(chunk):                               # unrolled, tiny
+            h, y = step(h, (xc[:, t], dtc[:, t], bc[:, t], cc[:, t]))
+            ys.append(y)
+        return h, jnp.stack(ys, axis=1)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xcs = (xf.reshape(B, nck, chunk, di).swapaxes(0, 1),
+           dt.reshape(B, nck, chunk, di).swapaxes(0, 1),
+           b.reshape(B, nck, chunk, ds).swapaxes(0, 1),
+           c.reshape(B, nck, chunk, ds).swapaxes(0, 1))
+    # checkpoint the chunk body: backward re-runs the recurrence instead of
+    # stacking per-step (B, di, ds) residuals for the whole sequence
+    h, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xcs)
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, di)[:, :S]
+    y = y + xf[:, :S] * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    conv_cache = xz[:, max(S - (cfg.mamba_d_conv - 1), 0):, :di]
+    if S < cfg.mamba_d_conv - 1:
+        conv_cache = jnp.pad(conv_cache,
+                             ((0, 0), (cfg.mamba_d_conv - 1 - S, 0), (0, 0)))
+    return ctx.cs(out, "batch", "seq", "embed"), {
+        "h": h.astype(jnp.float32), "conv": conv_cache}
+
+
+def mamba_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
+    """One-token step.  x: (B, 1, d); cache {"h": (B,di,ds), "conv":
+    (B, dc-1, di)} -> (out (B,1,d), new cache)."""
+    B = x.shape[0]
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = math.ceil(cfg.d_model / 16)
+    xz = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # causal conv over [cache, xs]
+    w = p["conv_w"].astype(x.dtype)                           # (dc, di)
+    hist = jnp.concatenate(
+        [cache["conv"], xs[:, None].astype(cache["conv"].dtype)], axis=1)
+    xs = jnp.einsum("bci,ci->bi", hist, w) + p["conv_b"].astype(x.dtype)
+    xs = jax.nn.silu(xs)
+    dt, b, c = _dt_bc(p, xs, cfg, dt_rank)                    # (B,di),(B,ds)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * A)
+    h = da * cache["h"] + (dt * xs.astype(jnp.float32))[..., None] * b[:, None, :]
+    y = jnp.einsum("bis,bs->bi", h, c)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    new_conv = hist[:, 1:]
+    return ctx.cs(out, "batch", "seq", "embed"), {"h": h, "conv": new_conv}

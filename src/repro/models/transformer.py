@@ -1,0 +1,462 @@
+"""Block-pattern transformer assembly.
+
+Every assigned architecture is {embedding -> [prefix layers] -> scan over
+repeating *units* of layers -> final norm -> (chunked) LM head}, where each
+layer = {mixer ∈ attn|mla|mamba|rwkv6} + {ffn ∈ dense|moe}, plus optional
+encoder (Whisper) and patch-embedding concat (LLaVA).
+
+``lax.scan`` over stacked unit parameters keeps the HLO size independent of
+depth (72-layer Jamba compiles as one 8-layer unit body) — essential for the
+40-cell dry-run on this CPU container and for real compile times at scale.
+Each unit body is rematerialized (``jax.checkpoint``) when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .params import P, is_spec
+from . import layers as L
+from .layers import Ctx
+from . import moe as M
+from . import ssm
+from . import rwkv
+from ..configs.base import LayerSpec, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# parameter trees
+# ---------------------------------------------------------------------------
+
+def layer_param_specs(spec: LayerSpec, cfg: ModelConfig, tp: int,
+                      cross: bool = False) -> dict:
+    d = cfg.d_model
+    p: dict = {"mixer_norm": L.rmsnorm_params(d)}
+    if spec.mixer == "attn":
+        p["mixer"] = L.attn_params(cfg)
+    elif spec.mixer == "mla":
+        p["mixer"] = L.mla_params(cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.mamba_params(cfg)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = rwkv.rwkv_params(cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["cross_norm"] = L.rmsnorm_params(d)
+        p["cross"] = L.attn_params(cfg)
+    p["ffn_norm"] = L.rmsnorm_params(d)
+    if spec.ffn == "dense":
+        p["ffn"] = L.mlp_params(d, cfg.d_ff)
+    else:
+        p["ffn"] = M.moe_params(cfg, tp)
+    return p
+
+
+def _stack(tree, n: int):
+    """Add a leading (n,) "layers" axis to every P in the tree."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init,
+                    s.scale),
+        tree, is_leaf=is_spec)
+
+
+def model_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
+    d = cfg.d_model
+    V = cfg.padded_vocab(tp)
+    p: dict = {
+        "embed": P((V, d), ("vocab", "embed_fsdp"), init="embed"),
+        "final_norm": L.rmsnorm_params(d),
+    }
+    if not cfg.tie_embeddings:
+        # vocab sharding FIRST: the LM head must stay vocab-sharded under
+        # every rule set (chunked CE depends on it); the d axis stays
+        # replicated so no rule can steal "model" from the vocab dim
+        p["unembed"] = P((d, V), (None, "vocab"))
+    if cfg.prefix:
+        p["prefix"] = {f"p{i}": layer_param_specs(s, cfg, tp,
+                                                  cross=cfg.enc_dec)
+                       for i, s in enumerate(cfg.prefix)}
+    unit = {f"l{i}": layer_param_specs(s, cfg, tp, cross=cfg.enc_dec)
+            for i, s in enumerate(cfg.unit)}
+    p["unit"] = _stack(unit, cfg.n_units)
+    if cfg.enc_dec:
+        enc_unit = {"l0": layer_param_specs(LayerSpec("attn", "dense"), cfg, tp)}
+        p["enc_unit"] = _stack(enc_unit, cfg.n_encoder_layers)
+        p["enc_final_norm"] = L.rmsnorm_params(d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _mixer_full(spec, p, h, cfg, ctx, positions, causal):
+    if spec.mixer == "attn":
+        out, kv = L.attn_block(p["mixer"], h, cfg, ctx, positions=positions,
+                               causal=causal)
+        return out, {"k": kv[0], "v": kv[1]}
+    if spec.mixer == "mla":
+        out, (lat, kr) = L.mla_block(p["mixer"], h, cfg, ctx,
+                                     positions=positions)
+        return out, {"latent": lat, "k_rope": kr}
+    if spec.mixer == "mamba":
+        return ssm.mamba_block(p["mixer"], h, cfg, ctx)
+    if spec.mixer == "rwkv6":
+        return rwkv.rwkv6_block(p["mixer"], h, cfg, ctx)
+    raise ValueError(spec.mixer)
+
+
+def _cross_kv(p, enc_out, cfg, ctx):
+    """Cross-attention K/V from encoder output (no rope)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def _cross_attend(p, x, kv, cfg, ctx):
+    """q from x (no rope), non-causal attention over encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    o = L.attention(q, kv[0], kv[1], causal=False, ctx=ctx)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def apply_layer(spec: LayerSpec, p, x, cfg, ctx: Ctx, *, positions,
+                causal=True, enc_out=None, expert_perm=None):
+    """Full-sequence layer.  Returns (x, cache, aux)."""
+    if ctx.fsdp_gather:
+        # ZeRO-3: gather this layer's dense weights (expert weights stay
+        # sharded — the EP all_to_all owns their distribution)
+        p = {k: (ctx.gather_params(v) if k != "ffn" or spec.ffn == "dense"
+                 else v) for k, v in p.items()}
+    h = L.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
+    out, cache = _mixer_full(spec, p, h, cfg, ctx, positions, causal)
+    x = x + out
+    if enc_out is not None and "cross" in p:
+        h = L.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        kv = _cross_kv(p["cross"], enc_out, cfg, ctx)
+        x = x + _cross_attend(p["cross"], h, kv, cfg, ctx)
+        cache = {"self": cache, "cross": {"k": kv[0], "v": kv[1]}}
+    h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "dense":
+        out = L.mlp(p["ffn"], h, ctx)
+    else:
+        out, aux = M.moe_apply(p["ffn"], h, cfg, ctx, expert_perm=expert_perm)
+    return x + out, cache, aux
+
+
+def apply_layer_decode(spec: LayerSpec, p, x, cfg, ctx: Ctx, *, cache, pos,
+                       expert_perm=None):
+    """One-token layer step.  Returns (x, new_cache, aux)."""
+    self_cache = cache["self"] if "cross" in p else cache
+    h = L.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        out, nc = L.attn_decode_block(p["mixer"], h, cfg, ctx,
+                                      cache=self_cache, pos=pos)
+    elif spec.mixer == "mla":
+        out, nc = L.mla_decode_block(p["mixer"], h, cfg, ctx,
+                                     cache=self_cache, pos=pos)
+    elif spec.mixer == "mamba":
+        out, nc = ssm.mamba_decode_block(p["mixer"], h, cfg, ctx,
+                                         cache=self_cache, pos=pos)
+    elif spec.mixer == "rwkv6":
+        out, nc = rwkv.rwkv6_decode_block(p["mixer"], h, cfg, ctx,
+                                          cache=self_cache, pos=pos)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+    if "cross" in p:
+        h = L.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        ckv = (cache["cross"]["k"], cache["cross"]["v"])
+        x = x + _cross_attend(p["cross"], h, ckv, cfg, ctx)
+        nc = {"self": nc, "cross": cache["cross"]}
+    h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "dense":
+        out = L.mlp(p["ffn"], h, ctx)
+    else:
+        out, aux = M.moe_apply(p["ffn"], h, cfg, ctx, expert_perm=expert_perm)
+    return x + out, nc, aux
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _encoder(params, enc_embeds, cfg, ctx: Ctx):
+    x = enc_embeds.astype(ctx.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, unit_p):
+        y, _, _ = apply_layer(LayerSpec("attn", "dense"), unit_p["l0"], x,
+                              cfg, ctx, positions=positions, causal=False)
+        return y, None
+    fn = jax.checkpoint(body) if ctx.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_unit"])
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def embed_tokens(params, tokens, cfg, ctx: Ctx):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ctx.dtype)
+    return ctx.cs(x, "batch", "seq", "embed")
+
+
+def forward(params, batch, cfg: ModelConfig, ctx: Ctx, *, collect_cache=False):
+    """Full-sequence forward to final hidden states.
+
+    batch: {"tokens": (B,S)} [+ "patch_embeds" (B,P,d) for vlm,
+    "enc_embeds" (B,F,d) for enc_dec].  Returns (hidden, cache, aux_total).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg, ctx)
+    if cfg.vlm:
+        pe = batch["patch_embeds"].astype(ctx.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        x = ctx.cs(x, "batch", "seq", "embed")
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encoder(params, batch["enc_embeds"], cfg, ctx)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: dict = {}
+
+    specs = cfg.layer_specs()
+    if cfg.prefix:
+        caches["prefix"] = {}
+        for i, spec in enumerate(cfg.prefix):
+            x, c, aux = apply_layer(spec, params["prefix"][f"p{i}"], x, cfg,
+                                    ctx, positions=positions, enc_out=enc_out)
+            aux_total = aux_total + aux
+            if collect_cache:
+                caches["prefix"][f"p{i}"] = c
+
+    def unit_body(carry, unit_p):
+        x, aux_total = carry
+        unit_caches = {}
+        for i, spec in enumerate(cfg.unit):
+            x, c, aux = apply_layer(spec, unit_p[f"l{i}"], x, cfg, ctx,
+                                    positions=positions, enc_out=enc_out)
+            aux_total = aux_total + aux
+            unit_caches[f"l{i}"] = c
+        ys = unit_caches if collect_cache else None
+        return (x, aux_total), ys
+
+    fn = jax.checkpoint(unit_body) if ctx.remat else unit_body
+    (x, aux_total), unit_caches = jax.lax.scan(fn, (x, aux_total),
+                                               params["unit"])
+    if collect_cache:
+        caches["unit"] = unit_caches
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy LM head
+# ---------------------------------------------------------------------------
+
+def _unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_ce(params, hidden, labels, mask, cfg, ctx: Ctx, chunk: int = 256):
+    """Mean CE over masked positions; logits never materialize beyond one
+    (B, chunk, V) slab (vocab-sharded).  Returns (loss, n_tokens)."""
+    B, S, d = hidden.shape
+    W = _unembed_matrix(params, cfg)
+    V = W.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    hs = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)
+    ys = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(tot, inp):
+        h_c, y_c, m_c = inp
+        logits = jnp.einsum("bcd,dv->bcv", h_c, W.astype(h_c.dtype))
+        logits = ctx.cs(logits, "batch", None, "vocab").astype(jnp.float32)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(iota >= cfg.vocab, L.NEG_INF, logits)  # mask pad
+        if cfg.logits_softcap:
+            logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.sum(jnp.where(iota == y_c[..., None], logits, 0.0), axis=-1)
+        return tot + jnp.sum((lse - ll) * m_c), None
+
+    fn = jax.checkpoint(body) if ctx.remat else body
+    tot, _ = jax.lax.scan(fn, jnp.zeros((), jnp.float32), (hs, ys, ms))
+    n_tok = jnp.maximum(mask.sum(), 1.0)
+    return tot / n_tok, n_tok
+
+
+def lm_loss(params, batch, cfg: ModelConfig, ctx: Ctx):
+    """Next-token CE + MoE aux.  batch needs "tokens" and "labels"
+    (+ modality extras); label -100 = masked."""
+    hidden, _, aux = forward(params, batch, cfg, ctx)
+    labels = batch["labels"]
+    if cfg.vlm:  # patch positions carry no labels
+        P_ = batch["patch_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], P_), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss, n_tok = chunked_ce(params, hidden, jnp.maximum(labels, 0), mask,
+                             cfg, ctx)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux, "n_tok": n_tok}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def logits_for(params, x_last, cfg, ctx: Ctx):
+    """x_last: (B, d) -> (B, V) logits."""
+    W = _unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", x_last, W.astype(x_last.dtype))
+    return ctx.cs(logits, "batch", "vocab").astype(jnp.float32)
+
+
+def prefill(params, batch, cfg, ctx: Ctx, *, cache_len: int | None = None):
+    """Run the full prompt, return (cache, last-token logits).
+
+    The attention caches are written into buffers of length ``cache_len``
+    (>= prompt length) so decode can continue in place.
+    """
+    hidden, caches, _ = forward(params, batch, cfg, ctx, collect_cache=True)
+    S = hidden.shape[1]
+    if cache_len is not None:
+        assert cache_len >= S, (
+            f"cache_len {cache_len} < prompt length {S} (incl. modality "
+            f"prefix tokens)")
+        if cache_len > S:
+            caches = _grow_caches(caches, cache_len - S)
+    logits = logits_for(params, hidden[:, -1], cfg, ctx)
+    return caches, logits
+
+
+def _grow_caches(caches, extra: int):
+    """Pad sequence-indexed cache buffers to make room for decode steps.
+    Cross-attention caches (fixed encoder length) are left untouched."""
+    def grow_one(leaf, name):
+        if name in ("k", "v"):          # (..., S, K, hd)
+            pad = [(0, 0)] * leaf.ndim
+            pad[-3] = (0, extra)
+            return jnp.pad(leaf, pad)
+        if name in ("latent", "k_rope"):  # (..., S, r)
+            pad = [(0, 0)] * leaf.ndim
+            pad[-2] = (0, extra)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (v if k == "cross" else
+                        (grow_one(v, k) if not isinstance(v, dict) else walk(v)))
+                    for k, v in tree.items()}
+        return tree
+    return walk(caches)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx,
+                *, expert_perm=None):
+    """One decode step.  tokens: (B,) int32; pos: scalar int32 (write index,
+    same for the whole batch — continuous batching keeps per-slot offsets in
+    the serving layer).  Returns (logits (B,V), new cache)."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(ctx.dtype)
+    x = ctx.cs(x, "batch", "seq", "embed")
+    specs = cfg.layer_specs()
+    if cfg.prefix:
+        for i, spec in enumerate(cfg.prefix):
+            x, nc, _ = apply_layer_decode(
+                spec, params["prefix"][f"p{i}"], x, cfg, ctx,
+                cache=cache["prefix"][f"p{i}"], pos=pos,
+                expert_perm=expert_perm)
+            cache = dict(cache)
+            cache["prefix"] = dict(cache["prefix"])
+            cache["prefix"][f"p{i}"] = nc
+
+    def unit_body(x, inp):
+        unit_p, unit_cache = inp
+        new_caches = {}
+        for i, spec in enumerate(cfg.unit):
+            x, nc, _ = apply_layer_decode(spec, unit_p[f"l{i}"], x, cfg, ctx,
+                                          cache=unit_cache[f"l{i}"], pos=pos,
+                                          expert_perm=expert_perm)
+            new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    x, new_unit_caches = jax.lax.scan(unit_body, x,
+                                      (params["unit"], cache["unit"]))
+    cache = dict(cache)
+    cache["unit"] = new_unit_caches
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_for(params, x[:, 0], cfg, ctx)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction (decode-shape dry-runs start from an empty cache)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, B: int, S: int, tp: int = 1) -> dict:
+    """Spec tree (P) for a decode cache of capacity S."""
+    K, hd = cfg.n_kv_heads, cfg.hd
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    H6, N6 = cfg.rwkv_n_heads, cfg.rwkv_head_size
+
+    def one(spec: LayerSpec) -> dict:
+        if spec.mixer == "attn":
+            c = {"k": P((B, S, K, hd), ("batch", "cache_seq", "kv_heads",
+                                        "head_dim"), jnp.bfloat16, "zeros"),
+                 "v": P((B, S, K, hd), ("batch", "cache_seq", "kv_heads",
+                                        "head_dim"), jnp.bfloat16, "zeros")}
+        elif spec.mixer == "mla":
+            c = {"latent": P((B, S, cfg.kv_lora_rank),
+                             ("batch", "cache_seq", None), jnp.bfloat16,
+                             "zeros"),
+                 "k_rope": P((B, S, cfg.qk_rope_dim),
+                             ("batch", "cache_seq", None), jnp.bfloat16,
+                             "zeros")}
+        elif spec.mixer == "mamba":
+            c = {"h": P((B, di, ds), ("batch", "mamba_inner", None),
+                        jnp.float32, "zeros"),
+                 "conv": P((B, cfg.mamba_d_conv - 1, di),
+                           ("batch", None, "mamba_inner"), jnp.bfloat16,
+                           "zeros")}
+        elif spec.mixer == "rwkv6":
+            c = {"S": P((B, H6, N6, N6), ("batch", "rwkv_heads", None, None),
+                        jnp.float32, "zeros"),
+                 "x_last": P((B, cfg.d_model), ("batch", None), jnp.bfloat16,
+                             "zeros")}
+        else:
+            raise ValueError(spec.mixer)
+        if cfg.enc_dec:
+            c = {"self": c,
+                 "cross": {"k": P((B, cfg.encoder_seq, K, hd),
+                                  ("batch", None, "kv_heads", "head_dim"),
+                                  jnp.bfloat16, "zeros"),
+                           "v": P((B, cfg.encoder_seq, K, hd),
+                                  ("batch", None, "kv_heads", "head_dim"),
+                                  jnp.bfloat16, "zeros")}}
+        return c
+
+    out: dict = {}
+    if cfg.prefix:
+        out["prefix"] = {f"p{i}": one(s) for i, s in enumerate(cfg.prefix)}
+    unit = {f"l{i}": one(s) for i, s in enumerate(cfg.unit)}
+    out["unit"] = _stack(unit, cfg.n_units)
+    return out

@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules -> concrete ``NamedSharding``s.
+
+The paper's scheduler decides *where computations live*; this module is the
+mechanism that expresses those decisions to XLA.  Every tensor in the
+framework carries *logical* axis names ("embed", "heads", "experts", ...);
+a rule set maps logical names onto mesh axes per execution context (train vs
+decode use different mappings — e.g. decode shards the KV-cache sequence axis
+over "model", flash-decode style).
+
+Rules may map a logical axis to a mesh axis name, a tuple of mesh axes, or
+None (replicated).  Mesh axes already consumed by an earlier dimension of the
+same tensor are dropped (XLA forbids reuse within one sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# Default rule sets -----------------------------------------------------------
+# Mesh axes: ("pod",) "data", "model".  DP over (pod, data); TP/EP over model.
+
+TRAIN_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,            # activation d_model axis
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",           # ffn hidden
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,           # stacked scan axis
+    "mamba_inner": "model",
+    "rwkv_heads": "model",
+    "kv_lora": None,
+    "q_lora": None,
+    "seq_shard": "model",     # sequence axis when explicitly seq-parallel
+    "frames": None,
+}
+
+# FSDP variant: weight "embed"/replicated dims additionally sharded over data.
+FSDP_EXTRA = {
+    "embed_fsdp": "data",     # weights' d_model axis under FSDP
+    "expert_mlp": "data",
+}
+
+DECODE_RULES = dict(TRAIN_RULES)
+DECODE_RULES.update({
+    "cache_seq": "model",     # flash-decode: KV cache sequence-sharded
+    "batch": ("pod", "data"),
+})
+
+
+def spec_for(axes: Sequence[str | None], rules: Mapping[str, object],
+             mesh: Mesh, shape: Sequence[int] | None = None) -> PartitionSpec:
+    """Build a PartitionSpec for one tensor's logical axes under ``rules``.
+
+    When ``shape`` is given, mesh axes that do not evenly divide the
+    corresponding dimension are dropped (greedy prefix — e.g. batch=8 on a
+    (pod=2, data=16) mesh keeps only "pod").  Explicit jit in/out shardings
+    require divisibility; dropping to replication is always sound.
+    """
+    used: set[str] = set()
+    out = []
+    mesh_axes = set(mesh.axis_names)
+
+    def resolve(name, dim):
+        if name is None:
+            return None
+        r = rules.get(name, None)
+        if r is None:
+            return None
+        if isinstance(r, str):
+            r = (r,)
+        picked = []
+        rem = dim
+        for a in r:
+            if a not in mesh_axes or a in used:
+                continue
+            n = mesh.shape[a]
+            if rem is not None:
+                if rem % n != 0:
+                    break  # greedy prefix: stop at first non-divisible axis
+                rem //= n
+            picked.append(a)
+            used.add(a)
+        if not picked:
+            return None
+        return tuple(picked) if len(picked) > 1 else picked[0]
+
+    for i, name in enumerate(axes):
+        dim = shape[i] if shape is not None else None
+        out.append(resolve(name, dim))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Mapping[str, object]):
+    """Map a tree of P-specs (shape+logical axes) to NamedShardings."""
+    from ..models.params import is_spec
+
+    def one(s):
+        return NamedSharding(mesh, spec_for(s.axes, rules, mesh, s.shape))
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def constraint(x, axes: Sequence[str | None], rules: Mapping[str, object]):
+    """``with_sharding_constraint`` from logical axes, inside jit.
+
+    Uses the ambient mesh (set by ``jax.sharding.use_mesh`` / the explicit
+    mesh context); falls back to no-op when no mesh is active.
+    """
+    from jax._src import mesh as mesh_lib
+    env = mesh_lib.thread_resources.env
+    m = env.physical_mesh
+    if m.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, spec_for(axes, rules, m)))
+
+
+# FSDP (ZeRO-3) rule set: weights shard over "model" on their d_model axis
+# and are all-gathered per layer; the batch stays on the dp axes; the
+# embedding/LM-head keep their vocab sharding (chunked CE never gathers
+# the vocab matrix).  Trades the 2 activation all-reduces per layer
+# (Megatron) for 2-3 weight all-gathers + 1 gradient reduce-scatter — a
+# large win whenever per-layer activations outweigh per-layer weights
+# (see EXPERIMENTS.md §Perf).
+FSDP_RULES: dict[str, object] = {
+    **TRAIN_RULES,
+    "heads": None, "kv_heads": None, "mlp": None,
+    "mamba_inner": None, "rwkv_heads": None,
+    "embed_fsdp": "model",
+    "vocab": "model",
+    "experts": "model",     # EP keeps its expert sharding under FSDP
+}
+
+
+def rules_for(cfg, phase: str = "train", *, seq_parallel: bool = False,
+              sharding_mode: str = "tp",
+              overrides: Mapping[str, object] | None = None) -> dict:
+    """Rule set for one (config, phase).  ``phase``: train|prefill|decode.
+
+    ``sharding_mode``: "tp" (paper-faithful Megatron tensor parallel over
+    "model") or "fsdp" (pure ZeRO-3; hillclimb lever).
+    ``seq_parallel``: shard the activation sequence axis over "model"
+    (converts TP all-reduces into reduce-scatter/all-gather pairs and
+    splits norm/elementwise work)."""
+    if sharding_mode == "fsdp" and phase != "decode":
+        rules = dict(FSDP_RULES)
+        if getattr(cfg, "fsdp", False):
+            rules["embed_fsdp"] = ("model", "data")
+        return dict(rules, **(overrides or {}))
+    rules = dict(DECODE_RULES if phase == "decode" else TRAIN_RULES)
+    rules["embed_fsdp"] = "data" if getattr(cfg, "fsdp", False) else None
+    if seq_parallel and phase != "decode":
+        rules["seq"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel mesh axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

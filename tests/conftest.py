@@ -1,0 +1,7 @@
+import os
+import sys
+
+# kernels' jnp-oracle mode on CPU; smoke tests must see ONE device (the
+# 512-device forcing lives ONLY inside launch/dryrun.py)
+os.environ.setdefault("REPRO_KERNEL_MODE", "auto")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,138 @@
+"""Discrete-event simulator invariants + the paper's §IV claims."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import generate_dag, generate_paper_dag
+from repro.core.cost import paper_calibrated_model, workload_ratios, \
+    paper_ratio_cpu_gpu
+from repro.core.schedulers import make_policy, GpPolicy
+from repro.core.simulate import simulate, make_cpu_gpu_platform
+
+
+M = paper_calibrated_model()
+PLAT = make_cpu_gpu_platform()
+
+
+def _weighted(op, n, seed=7, kernels=38):
+    g = (generate_paper_dag(op) if kernels == 38 else
+         generate_dag(kernels, op=op, seed=seed))
+    return M.weight_graph(g, {op: n})
+
+
+# -- invariants ---------------------------------------------------------------
+
+@given(op=st.sampled_from(["matadd", "matmul"]),
+       n=st.sampled_from([256, 512, 1024]),
+       policy=st.sampled_from(["eager", "dmda", "gp", "heft", "random"]),
+       seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_makespan_lower_bounds(op, n, policy, seed):
+    """makespan >= critical path (best-proc costs); >= work / total
+    throughput; all kernels executed exactly once."""
+    g = _weighted(op, n, seed=seed, kernels=20)
+    r = simulate(g, make_policy(policy), PLAT)
+    best = lambda k: min(k.costs.values()) if k.costs else 0.0
+    cp = g.critical_path_ms(best)
+    assert r.makespan_ms >= cp - 1e-6
+    # work bound: total best-case work over the max conceivable throughput
+    work = g.total_work_ms(best)
+    assert r.makespan_ms >= work / len(PLAT.procs) - 1e-6
+    assert sum(r.kernels_per_class.values()) == g.num_nodes()
+    assert r.bytes_transferred >= 0
+    # every transfer is across nodes
+    for blk, src, dst, t0, t1 in r.transfers:
+        assert t1 >= t0
+
+
+def test_transfers_consistent_with_msi():
+    """A block moved to a node is never transferred to that node again."""
+    g = _weighted("matadd", 512)
+    r = simulate(g, make_policy("eager"), PLAT)
+    seen = set()
+    for blk, src, dst, t0, t1 in r.transfers:
+        assert (blk, dst) not in seen
+        seen.add((blk, dst))
+
+
+# -- the paper's claims (§IV.C) ------------------------------------------------
+
+def test_fig6_mm_gp_matches_dmda_eager_degrades():
+    """MM: huge CPU/GPU gap -> gp sends ~everything to the GPU (Formula 1
+    with T_cpu >> T_gpu), matching dmda; eager degrades badly and the gap
+    grows with input size."""
+    prev_ratio = None
+    for n in (1024, 2048):
+        g = _weighted("matmul", n)
+        res = {p: simulate(g, make_policy(p), PLAT)
+               for p in ("eager", "dmda", "gp")}
+        gp, dm, eg = (res[p].makespan_ms for p in ("gp", "dmda", "eager"))
+        assert gp <= dm * 1.05, (n, gp, dm)
+        assert eg > 3 * dm, (n, eg, dm)
+        # gp's CPU share collapses (paper: "workload on the CPU is almost 0")
+        cpu_kernels = res["gp"].kernels_per_class.get("cpu", 0)
+        assert cpu_kernels <= 2
+        ratio = eg / dm
+        if prev_ratio is not None:
+            assert ratio >= prev_ratio * 0.8  # eager gap does not shrink
+        prev_ratio = ratio
+
+
+def test_fig5_ma_policies_closer_and_eager_most_transfers():
+    """MA: performance gap between policies is far smaller than the MM
+    case; eager incurs the most transfers; gp cuts transfers vs eager."""
+    g = _weighted("matadd", 1024)
+    res = {p: simulate(g, make_policy(p), PLAT)
+           for p in ("eager", "dmda", "gp")}
+    gp, dm, eg = (res[p].makespan_ms for p in ("gp", "dmda", "eager"))
+    assert eg / dm < 4.0                     # "close" vs MM's >10x
+    assert gp / dm < 2.0
+    assert res["eager"].n_transfers >= res["gp"].n_transfers
+    assert res["eager"].n_transfers >= res["dmda"].n_transfers
+
+
+def test_gp_decides_once_offline():
+    """§IV.D: gp pays a single offline decision; per-task overhead 0."""
+    g = _weighted("matadd", 512)
+    pol = make_policy("gp")
+    r = simulate(g, pol, PLAT)
+    assert r.offline_decision_ms > 0
+    assert r.decision_overhead_ms == 0.0
+    r2 = simulate(g, make_policy("dmda"), PLAT)
+    assert r2.decision_overhead_ms > 0      # dmda pays per-task
+
+
+def test_gp_assignment_is_reusable():
+    """The same offline decision can drive repeated submissions."""
+    g = _weighted("matadd", 512)
+    pol = make_policy("gp")
+    r1 = simulate(g, pol, PLAT)
+    asg = dict(pol.assignment)
+    r2 = simulate(g, pol, PLAT)
+    assert pol.assignment == asg
+    assert r1.makespan_ms == pytest.approx(r2.makespan_ms)
+
+
+def test_paper_ratio_formula():
+    r_cpu, r_gpu = paper_ratio_cpu_gpu(t_cpu_ms=30.0, t_gpu_ms=10.0)
+    assert r_cpu == pytest.approx(0.25)
+    assert r_gpu == pytest.approx(0.75)
+    # k-class generalization reduces to the same on a 2-class graph
+    g = _weighted("matmul", 1024)
+    t = workload_ratios(g, ["cpu", "gpu"])
+    k = next(k for k in g.nodes.values() if k.op != "source")
+    lit = paper_ratio_cpu_gpu(k.costs["cpu"], k.costs["gpu"])
+    assert t["cpu"] == pytest.approx(lit[0], rel=1e-6)
+
+
+def test_gp_weight_source_gpu_prioritizes_edges():
+    """§III.B: choosing GPU times as node weights gives edges higher
+    priority -> cut no worse than with CPU weights."""
+    g = _weighted("matadd", 1024)
+    cuts = {}
+    for ws in ("gpu", "cpu"):
+        pol = GpPolicy(weight_source=ws)
+        simulate(g, pol, PLAT)
+        from repro.core.partition import cut_stats
+        cuts[ws] = cut_stats(g, pol.assignment)["cut_edges"]
+    assert cuts["gpu"] <= cuts["cpu"] + 2
