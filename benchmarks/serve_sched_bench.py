@@ -1,18 +1,39 @@
-"""Serving-DAG scheduling across heterogeneous pods (the paper's policy
-comparison on the request-chain workload of launch/serve.py)."""
+"""Serving-DAG scheduling across heterogeneous pods.
 
-from repro.launch.serve import schedule_requests
+Two experiments:
+
+1. the paper's single-interval policy comparison on the request-chain
+   workload of ``launch/serve.py`` (as before);
+2. the **online** comparison: a churning request stream replayed through
+   every policy — including ``incremental-gp`` — by the
+   :class:`repro.core.arena.SchedulerArena`, with a mid-stream worker drop.
+   Emits per-policy makespan / transfer / decision-overhead rows and prints
+   the arena table.
+"""
+
+from repro.launch.serve import run_arena, schedule_requests
+from repro.core.arena import format_table
 from .common import emit
 
 
 def main():
+    # 1) single-interval comparison (the paper's experiment, serving form)
     for n_req in (4, 12, 32):
-        for pol in ("eager", "dmda", "gp", "heft"):
+        for pol in ("eager", "dmda", "gp", "heft", "incremental-gp"):
             r = schedule_requests(n_req, 8, pol)
             emit(f"serve.req{n_req}.{pol}.makespan_ms",
                  f"{r['makespan_ms']:.1f}",
                  f"transfers={r['transfers']};"
                  f"moved_mb={r['bytes_moved_mb']:.0f}")
+
+    # 2) online stream with churn + a worker drop at step 3
+    rows, _ = run_arena(16, 8, steps=6, drop_step=3, seed=0)
+    for row in rows:
+        emit(f"serve.stream.{row.policy}.mean_makespan_ms",
+             f"{row.mean_makespan_ms:.1f}",
+             f"transfers={row.transfers};decision_ms={row.decision_ms:.2f};"
+             f"offline_ms={row.offline_ms:.2f};aborted={row.aborted}")
+    print(format_table(rows))
 
 
 if __name__ == "__main__":

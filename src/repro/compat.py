@@ -1,0 +1,38 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top-level
+namespace (and renamed the replication-check kwarg ``check_rep`` ->
+``check_vma`` along the way).  Every call site in this repo imports the shim
+below instead of picking one spelling, so the code runs on both old
+(0.4.x) and new jax without touching the models.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # new jax: top-level export (check_vma kwarg)
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # old jax (<= 0.4.x): experimental module (check_rep kwarg)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with kwarg-name translation across jax versions."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` context manager; on old jax the Mesh object
+    itself is the context manager that installs the global mesh."""
+    import jax
+
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh

@@ -1,0 +1,176 @@
+"""SchedulerArena: replay a stream of task graphs through competing policies.
+
+The paper compares policies on one static graph (Figs 5/6).  A serving system
+sees a *stream*: every scheduling interval the request DAG has churned (new
+requests admitted, finished ones retired) and the device pool may have changed.
+The arena replays one such stream through every policy on a shared
+:class:`~repro.core.simulate.Platform` (each run gets its own mutable copy)
+and aggregates makespan / transfer / decision-overhead into one table — the
+experiment that shows *why* incremental GP exists: ``gp`` re-partitions from
+scratch every interval, ``incremental-gp`` amortizes, both beat the
+data-oblivious baselines on makespan.
+
+Policy instances persist across the stream, so stateful policies
+(:class:`~repro.core.online.IncrementalGpPolicy`) see the deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from .graph import TaskGraph, _make_lcg
+from .schedulers import Policy, make_policy
+from .simulate import Platform, SimResult, simulate
+
+DEFAULT_POLICIES = ("eager", "dmda", "heft", "gp", "incremental-gp")
+
+
+@dataclasses.dataclass
+class ArenaStep:
+    """One scheduling interval: a graph revision plus its dynamic events."""
+
+    graph: TaskGraph
+    arrivals: Mapping[str, float] | None = None
+    events: Sequence = ()
+    tag: str = ""
+
+
+@dataclasses.dataclass
+class ArenaRow:
+    policy: str
+    steps: int
+    total_makespan_ms: float
+    mean_makespan_ms: float
+    transfers: int
+    bytes_moved: int
+    decision_ms: float       # online (per-ready + platform-event) overhead
+    offline_ms: float        # prepare() time, summed over the stream
+    aborted: int
+
+
+class SchedulerArena:
+    """Run every policy over the same stream; collect comparable totals.
+
+    ``policies`` maps display name -> zero-arg factory; a plain sequence of
+    names uses :func:`~repro.core.schedulers.make_policy` with
+    ``policy_kwargs[name]`` (if given).
+    """
+
+    def __init__(self, platform: Platform,
+                 policies: Sequence[str] | Mapping[str, Callable[[], Policy]]
+                 = DEFAULT_POLICIES, *,
+                 policy_kwargs: Mapping[str, dict] | None = None):
+        self.platform = platform
+        if isinstance(policies, Mapping):
+            self.factories = dict(policies)
+        else:
+            kw = policy_kwargs or {}
+            self.factories = {name: (lambda n=name: make_policy(n, **kw.get(n, {})))
+                              for name in policies}
+        self.results: dict[str, list[SimResult]] = {}
+
+    def run(self, stream: Sequence[ArenaStep]) -> list[ArenaRow]:
+        rows = []
+        for name, factory in self.factories.items():
+            pol = factory()  # one instance for the whole stream (stateful)
+            results = [simulate(s.graph, pol, self.platform,
+                                arrivals=s.arrivals, events=s.events)
+                       for s in stream]
+            self.results[name] = results
+            total_mk = sum(r.makespan_ms for r in results)
+            rows.append(ArenaRow(
+                policy=name,
+                steps=len(results),
+                total_makespan_ms=total_mk,
+                mean_makespan_ms=total_mk / max(len(results), 1),
+                transfers=sum(r.n_transfers for r in results),
+                bytes_moved=sum(r.bytes_transferred for r in results),
+                decision_ms=sum(r.decision_overhead_ms for r in results),
+                offline_ms=sum(r.offline_decision_ms for r in results),
+                aborted=sum(len(r.aborted) for r in results),
+            ))
+        rows.sort(key=lambda r: r.total_makespan_ms)
+        return rows
+
+
+def format_table(rows: Sequence[ArenaRow]) -> str:
+    """Aligned text table, one row per policy, best makespan first."""
+    cols = ("policy", "steps", "mean_mk_ms", "total_mk_ms", "transfers",
+            "moved_mb", "decision_ms", "offline_ms", "aborted")
+    data = [cols] + [
+        (r.policy, str(r.steps), f"{r.mean_makespan_ms:.1f}",
+         f"{r.total_makespan_ms:.1f}", str(r.transfers),
+         f"{r.bytes_moved / 2**20:.0f}", f"{r.decision_ms:.2f}",
+         f"{r.offline_ms:.2f}", str(r.aborted))
+        for r in rows]
+    widths = [max(len(row[i]) for row in data) for i in range(len(cols))]
+    lines = ["  ".join(c.rjust(w) for c, w in zip(row, widths))
+             for row in data]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Serving-stream generator (request chains with churn)
+# ---------------------------------------------------------------------------
+
+def _request_chain(g: TaskGraph, rid: int, decode_chunks: int, *,
+                   costs_prefill: Mapping[str, float],
+                   costs_decode: Mapping[str, float], kv_bytes: int):
+    g.add(f"r{rid}.prefill", op="prefill", costs=dict(costs_prefill),
+          out_bytes=kv_bytes)
+    prev = f"r{rid}.prefill"
+    for c in range(decode_chunks):
+        name = f"r{rid}.dec{c}"
+        g.add(name, op="decode", costs=dict(costs_decode), out_bytes=kv_bytes)
+        g.add_edge(prev, name, nbytes=kv_bytes)
+        prev = name
+
+
+def make_request_stream(
+    n_steps: int = 6, *, base_requests: int = 8, decode_chunks: int = 6,
+    churn: float = 0.3, kv_bytes: int = 16 << 20, seed: int = 0,
+    costs_prefill: Mapping[str, float] | None = None,
+    costs_decode: Mapping[str, float] | None = None,
+    arrival_spread_ms: float = 0.0,
+    events_at: Mapping[int, Sequence] | None = None,
+) -> list[ArenaStep]:
+    """A deterministic stream of evolving request-DAG revisions.
+
+    Each step retires ~``churn`` of the oldest active requests and admits the
+    same number of new ones, so consecutive graphs overlap — the regime where
+    incremental re-partitioning amortizes.  ``arrival_spread_ms`` staggers new
+    requests' prefill arrival inside the step; ``events_at[step]`` injects
+    :class:`WorkerDrop` / ``WorkerAdd`` events into that step's run.
+    """
+    costs_prefill = costs_prefill or {"big": 20.0, "small": 60.0}
+    costs_decode = costs_decode or {"big": 8.0, "small": 24.0}
+    rnd = _make_lcg(seed + 101)
+    active: list[int] = list(range(base_requests))
+    next_rid = base_requests
+    steps: list[ArenaStep] = []
+    for step in range(n_steps):
+        if step > 0:
+            n_churn = max(1, int(len(active) * churn))
+            fresh = list(range(next_rid, next_rid + n_churn))
+            next_rid += n_churn
+            active = active[n_churn:] + fresh  # retire oldest, admit new
+        else:
+            fresh = []
+        g = TaskGraph()
+        for rid in active:
+            _request_chain(g, rid, decode_chunks,
+                           costs_prefill=costs_prefill,
+                           costs_decode=costs_decode, kv_bytes=kv_bytes)
+        g.validate()
+        arrivals = None
+        if arrival_spread_ms > 0 and fresh:
+            arrivals = {f"r{rid}.prefill":
+                        arrival_spread_ms * rnd(1000) / 1000.0
+                        for rid in fresh}
+        steps.append(ArenaStep(
+            graph=g, arrivals=arrivals,
+            events=tuple((events_at or {}).get(step, ())),
+            tag=f"step{step}:{len(active)}req"))
+    return steps

@@ -81,6 +81,19 @@ class TaskGraph:
         self._pred[dst].append(src)
         return e
 
+    def remove_kernel(self, name: str) -> Kernel:
+        """Remove a kernel and all incident edges (online task retirement)."""
+        if name not in self.nodes:
+            raise KeyError(f"unknown kernel {name!r}")
+        k = self.nodes.pop(name)
+        for s in self._succ.pop(name):
+            self._pred[s].remove(name)
+            del self._edges[(name, s)]
+        for p in self._pred.pop(name):
+            self._succ[p].remove(name)
+            del self._edges[(p, name)]
+        return k
+
     # -- queries -------------------------------------------------------------
     def successors(self, name: str) -> list[str]:
         return self._succ[name]

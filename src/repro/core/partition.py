@@ -168,13 +168,18 @@ def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
 # ---------------------------------------------------------------------------
 
 def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
-               epsilon: float, max_passes: int = 8) -> list[int]:
+               epsilon: float, max_passes: int = 8,
+               locked: Sequence[bool] | None = None) -> list[int]:
     """Boundary FM with best-prefix rollback, k-way (single-move granularity).
 
     Balance constraint: partition p weight must stay within
     [targets[p]*total*(1-eps_lo), targets[p]*total*(1+epsilon)] where eps_lo is
     relaxed — we never force moves, only allow those not violating the upper
     bound and not emptying a mandatory partition.
+
+    ``locked[u]`` pins node u to its current partition (online refinement:
+    already-executed or pinned tasks still contribute weight and edge gain but
+    may not move).
     """
     k = len(targets)
     total = g.total_w()
@@ -197,7 +202,7 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
         return ext, internal
 
     for _ in range(max_passes):
-        locked = [False] * g.n
+        moved = list(locked) if locked is not None else [False] * g.n
         moves: list[tuple[int, int, int]] = []  # (node, from, to)
         gains_cum: list[float] = []
         cum = 0.0
@@ -206,7 +211,7 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
         for _step in range(g.n):
             best = None  # (gain, u, to)
             for u in range(g.n):
-                if locked[u]:
+                if moved[u]:
                     continue
                 ext, internal = ext_int(u)
                 if not ext:
@@ -231,7 +236,7 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
             part[u] = to
             pw[frm] -= g.nw[u]
             pw[to] += g.nw[u]
-            locked[u] = True
+            moved[u] = True
             cum += gain
             moves.append((u, frm, to))
             gains_cum.append(cum)
@@ -333,6 +338,24 @@ def partition_indices(g: UGraph, targets: Sequence[float], *, epsilon: float = 0
 # TaskGraph adapter (paper semantics)
 # ---------------------------------------------------------------------------
 
+def node_weight(costs: Mapping[str, float],
+                weight_source: str | Callable[[Mapping[str, float]], float],
+                ) -> float:
+    """The paper's §III.B node-weight choice: which class's time becomes the
+    scalar node weight ("gpu"/"cpu"/any class name, "min", "mean", or a
+    callable over the per-class cost dict).  Floored at 1e-9 so zero-cost
+    kernels stay movable."""
+    if callable(weight_source):
+        w = weight_source(costs)
+    elif weight_source == "min":
+        w = min(costs.values()) if costs else 0.0
+    elif weight_source == "mean":
+        w = sum(costs.values()) / len(costs) if costs else 0.0
+    else:
+        w = costs.get(weight_source, min(costs.values()) if costs else 0.0)
+    return max(w, 1e-9)
+
+
 def weight_graph_of(
     tg: TaskGraph,
     *,
@@ -349,19 +372,7 @@ def weight_graph_of(
     """
     names = list(tg.topo_order())
     index = {n: i for i, n in enumerate(names)}
-    nw: list[float] = []
-    for n in names:
-        k = tg.nodes[n]
-        c = k.costs
-        if callable(weight_source):
-            w = weight_source(c)
-        elif weight_source == "min":
-            w = min(c.values()) if c else 0.0
-        elif weight_source == "mean":
-            w = sum(c.values()) / len(c) if c else 0.0
-        else:
-            w = c.get(weight_source, min(c.values()) if c else 0.0)
-        nw.append(max(w, 1e-9))
+    nw = [node_weight(tg.nodes[n].costs, weight_source) for n in names]
     adj: list[dict[int, float]] = [dict() for _ in names]
     for e in tg.edges:
         u, v = index[e.src], index[e.dst]

@@ -41,6 +41,15 @@ class Policy:
         """Central-queue policies: pick a task for an idle worker (FIFO)."""
         return sim.central[0] if sim.central else None
 
+    def on_worker_drop(self, proc: Processor, sim: Sim) -> float:
+        """Platform lost ``proc`` (already removed from ``sim.platform``).
+        Returns decision time in ms, charged to the overhead metric."""
+        return 0.0
+
+    def on_worker_add(self, proc: Processor, sim: Sim) -> float:
+        """Platform gained ``proc`` (already inserted into ``sim.platform``)."""
+        return 0.0
+
 
 class EagerPolicy(Policy):
     """Greedy work sharing: exploit any idle processor (paper §IV.C)."""
@@ -96,18 +105,24 @@ class GpPolicy(Policy):
         self.assignment: dict[str, str] = {}
         self._rr: dict[str, int] = {}
 
+    def targets_for(self, g: TaskGraph, platform: Platform) -> dict[str, float]:
+        """Formula (1)/(2) targets (or the override), optionally scaled by
+        per-class worker counts — shared with the online variant so the two
+        GP flavours stay comparable."""
+        if self.targets_override:
+            return dict(self.targets_override)
+        classes = platform.classes
+        targets = workload_ratios(g, classes)
+        if self.scale_by_workers:
+            scaled = {c: targets[c] * len(platform.workers_of(c))
+                      for c in classes}
+            s = sum(scaled.values())
+            targets = {c: v / s for c, v in scaled.items()}
+        return targets
+
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
-        classes = platform.classes
-        if self.targets_override:
-            targets = dict(self.targets_override)
-        else:
-            targets = workload_ratios(g, classes)
-            if self.scale_by_workers:
-                scaled = {c: targets[c] * len(platform.workers_of(c))
-                          for c in classes}
-                s = sum(scaled.values())
-                targets = {c: v / s for c, v in scaled.items()}
+        targets = self.targets_for(g, platform)
         link = platform.link
         host_cls = next(p.cls for p in platform.procs
                         if p.node == platform.host_node)
@@ -122,12 +137,18 @@ class GpPolicy(Policy):
     def on_ready(self, task: str, sim: Sim) -> str:
         cls = self.assignment[task]
         workers = sim.platform.workers_of(cls)
-        # least-loaded worker within the pinned class (StarPU would let its
-        # per-class queue do this; we approximate with earliest-available)
+        if not workers:
+            # assigned class lost every worker to drops: fall back to any
+            # live class the kernel has a cost for (least-loaded)
+            costs = sim.g.nodes[task].costs
+            workers = [p for p in sim.platform.procs if p.cls in costs]
+            cls = None
         w = min(workers, key=lambda p: (sim.est_proc_avail[p.name],
                                         len(sim.proc_queue[p.name]), p.name))
+        # least-loaded worker within the pinned class (StarPU would let its
+        # per-class queue do this; we approximate with earliest-available)
         sim.est_proc_avail[w.name] = max(sim.est_proc_avail[w.name], sim.now) \
-            + sim.exec_ms(task, cls)
+            + sim.exec_ms(task, cls if cls is not None else w.cls)
         return w.name
 
 
@@ -226,4 +247,10 @@ ALL_POLICIES = {
 def make_policy(name: str, **kw) -> Policy:
     if name.startswith("only-"):
         return SingleClassPolicy(name[len("only-"):])
+    if name == "incremental-gp":
+        from .online import IncrementalGpPolicy  # lazy: avoids import cycle
+        return IncrementalGpPolicy(**kw)
     return ALL_POLICIES[name](**kw)
+
+
+POLICY_NAMES = tuple(ALL_POLICIES) + ("incremental-gp",)

@@ -15,6 +15,18 @@ Models exactly the effects the paper evaluates:
 
 The simulator also services the TPU adaptation: memory nodes = device groups,
 bus = inter-group link (ICI/DCN), workers = groups' compute streams.
+
+Dynamic events (the online extension, §IV.D's offline restriction lifted):
+
+* **task arrivals** — ``arrivals`` maps task name -> earliest-ready timestamp;
+  a task becomes schedulable at max(arrival, all predecessors finished);
+* **worker drop** — :class:`WorkerDrop` removes a processor mid-run: its queue
+  drains back through the policy, a task running on it is aborted and
+  re-dispatched, and nothing is ever placed on it again;
+* **worker add** — :class:`WorkerAdd` brings a new processor online mid-run.
+
+Policies observe platform changes via ``on_worker_drop`` / ``on_worker_add``
+hooks (returning any decision time in ms, charged to the overhead metric).
 """
 
 from __future__ import annotations
@@ -78,6 +90,22 @@ def make_group_platform(group_sizes: Mapping[str, int], link: Link) -> Platform:
     return Platform(procs, link=link, host_node=0)
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkerDrop:
+    """Processor leaves the platform at ``t_ms`` (failure / elastic scale-in)."""
+
+    t_ms: float
+    proc: str
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerAdd:
+    """Processor joins the platform at ``t_ms`` (elastic scale-out)."""
+
+    t_ms: float
+    proc: Processor
+
+
 @dataclasses.dataclass
 class SimResult:
     makespan_ms: float
@@ -90,6 +118,10 @@ class SimResult:
     offline_decision_ms: float
     trace: list[tuple]          # (task, proc, start, finish)
     transfers: list[tuple]      # (block, src_node, dst_node, start, finish)
+    aborted: list[tuple] = dataclasses.field(default_factory=list)
+    #                           # (task, proc, start, abort_t) — killed by drops
+    dropped_procs: list[str] = dataclasses.field(default_factory=list)
+    added_procs: list[str] = dataclasses.field(default_factory=list)
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -102,7 +134,10 @@ class Sim:
 
     def __init__(self, g: TaskGraph, platform: Platform):
         self.g = g
-        self.platform = platform
+        # own copy of the proc list: dynamic events mutate it, and the caller's
+        # Platform must stay reusable across runs (the arena shares one)
+        self.platform = Platform(list(platform.procs), link=platform.link,
+                                 host_node=platform.host_node)
         self.now = 0.0
         self.proc_free = {p.name: 0.0 for p in platform.procs}
         self.proc_queue: dict[str, deque] = {p.name: deque() for p in platform.procs}
@@ -110,6 +145,7 @@ class Sim:
         self.valid: dict[str, dict[int, float]] = {}   # block -> node -> valid_at
         self.bus_free = 0.0
         self.finished: set[str] = set()
+        self.dead: set[str] = set()          # dropped processor names
         self.proc_by_name = {p.name: p for p in platform.procs}
         # policy estimation helpers (dmda keeps its own view)
         self.est_proc_avail = {p.name: 0.0 for p in platform.procs}
@@ -133,17 +169,28 @@ class Sim:
 
 
 def simulate(g: TaskGraph, policy, platform: Platform, *,
-             host_entry: bool = True) -> SimResult:
+             host_entry: bool = True,
+             arrivals: Mapping[str, float] | None = None,
+             events: Sequence = ()) -> SimResult:
     """Run ``policy`` over task graph ``g`` on ``platform``.
 
     ``host_entry``: initial data lives on the host node (paper §III.B) — entry
     kernels' inputs are host-resident; kernels running elsewhere must pay the
     transfer for blocks they consume (including graph-entry blocks, modeled by
     the virtual source node if present in ``g``).
+
+    ``arrivals``: task name -> timestamp (ms) before which the task cannot be
+    scheduled even if its dependencies are met (online request streams).
+    ``events``: :class:`WorkerDrop` / :class:`WorkerAdd` dynamic events.
+    Events at ``t_ms <= 0`` apply after ``policy.prepare`` but before the
+    first dispatch: the offline decision was made for the full platform, then
+    the platform changed — the regime the online policies exist for.
     """
     g.validate()
     sim = Sim(g, platform)
+    platform = sim.platform  # the mutable copy; dynamic events edit this one
     offline_ms = policy.prepare(g, platform)
+    arrivals = arrivals or {}
 
     pred_count = {n: len(g.predecessors(n)) for n in g.nodes}
     n_tasks = len(g.nodes)
@@ -151,25 +198,47 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
     metrics = dict(n_transfers=0, bytes=0, tbusy=0.0, overhead=0.0)
     busy = {p.name: 0.0 for p in platform.procs}
     per_class: dict[str, int] = {}
-    trace: list[tuple] = []
+    trace: list[tuple | None] = []       # None = slot voided by an abort
     transfers: list[tuple] = []
+    aborted: list[tuple] = []
+    dropped: list[str] = []
+    added: list[str] = []
 
-    events: list[tuple] = []  # (time, seq, kind, payload)
+    # running[proc] = (task, start, finish, trace_idx, dispatch_id); a drop
+    # cancels the in-flight dispatch by id (its "finish" event becomes a no-op)
+    running: dict[str, tuple] = {}
+    cancelled: set[int] = set()
+    did_counter = [0]
+
+    heap: list[tuple] = []  # (time, seq, kind, payload)
     seq = [0]
 
     def push(t: float, kind: str, payload):
-        heapq.heappush(events, (t, seq[0], kind, payload))
+        heapq.heappush(heap, (t, seq[0], kind, payload))
         seq[0] += 1
 
     def mark_ready(task: str, t: float):
         if g.nodes[task].op == "source":
             # the virtual zero-weight kernel always runs on the host node
             # (paper §III.B: all initial data is located on the host memory)
-            host = next(p for p in platform.procs if p.node == platform.host_node)
+            host = next((p for p in platform.procs
+                         if p.node == platform.host_node), platform.procs[0])
             sim.proc_queue[host.name].append(task)
             return
         extra = policy.on_ready(task, sim)
         metrics["overhead"] += getattr(policy, "decision_ms", 0.0)
+        if extra is not None and extra in sim.dead:
+            # static assignments can point at a processor that has since been
+            # dropped: re-route to the earliest-available live worker capable
+            # of running the task
+            costs = g.nodes[task].costs
+            live = [p for p in platform.procs if p.cls in costs]
+            if not live:
+                raise RuntimeError(
+                    f"task {task!r} has no live capable worker after drops")
+            extra = min(live, key=lambda p: (sim.proc_free[p.name],
+                                             len(sim.proc_queue[p.name]),
+                                             p.name)).name
         if extra is None:
             sim.central.append(task)
         else:
@@ -227,8 +296,10 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         sim.proc_free[proc.name] = finish
         busy[proc.name] += dur
         per_class[proc.cls] = per_class.get(proc.cls, 0) + 1
+        did_counter[0] += 1
+        running[proc.name] = (task, start, finish, len(trace), did_counter[0])
         trace.append((task, proc.name, start, finish))
-        push(finish, "finish", (task, proc.name))
+        push(finish, "finish", (task, proc.name, did_counter[0]))
 
     last_dispatch = {p.name: -1.0 for p in platform.procs}
 
@@ -260,22 +331,90 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
                     last_dispatch[p.name] = t
                     progress = True
 
-    # seed: entry tasks ready at t=0; pre-existing input blocks valid on host
+    def ready_or_defer(task: str, t: float):
+        """Deps are met at ``t``; hand to the policy now or at the arrival."""
+        arr = arrivals.get(task, 0.0)
+        if arr > t + 1e-12:
+            push(arr, "ready", task)
+        else:
+            mark_ready(task, t)
+
+    def apply_drop(pname: str, t: float):
+        proc = sim.proc_by_name.get(pname)
+        if proc is None or pname in sim.dead:
+            return
+        sim.dead.add(pname)
+        dropped.append(pname)
+        platform.procs[:] = [p for p in platform.procs if p.name != pname]
+        orphans = list(sim.proc_queue[pname])
+        sim.proc_queue[pname].clear()
+        run = running.pop(pname, None)
+        if run is not None:
+            task, start, finish, ti, did = run
+            if finish > t + 1e-9:  # in flight: abort, void accounting, re-run
+                cancelled.add(did)
+                trace[ti] = None
+                busy[pname] -= finish - start
+                per_class[proc.cls] -= 1
+                aborted.append((task, pname, start, t))
+                orphans.insert(0, task)
+        hook = getattr(policy, "on_worker_drop", None)
+        if hook is not None:
+            metrics["overhead"] += hook(proc, sim) or 0.0
+        for task in orphans:
+            mark_ready(task, t)
+
+    def apply_add(proc: Processor, t: float):
+        if proc.name in sim.proc_by_name and proc.name not in sim.dead:
+            raise ValueError(f"duplicate worker {proc.name!r}")
+        sim.dead.discard(proc.name)
+        added.append(proc.name)
+        platform.procs.append(proc)
+        sim.proc_by_name[proc.name] = proc
+        sim.proc_free[proc.name] = t
+        sim.proc_queue[proc.name] = deque()
+        sim.est_proc_avail[proc.name] = t
+        busy.setdefault(proc.name, 0.0)
+        last_dispatch.setdefault(proc.name, -1.0)
+        hook = getattr(policy, "on_worker_add", None)
+        if hook is not None:
+            metrics["overhead"] += hook(proc, sim) or 0.0
+
+    for ev in events:
+        if isinstance(ev, WorkerDrop):
+            if ev.t_ms <= 0:  # platform starts without this worker
+                apply_drop(ev.proc, 0.0)
+            else:
+                push(ev.t_ms, "drop", ev.proc)
+        elif isinstance(ev, WorkerAdd):
+            if ev.t_ms <= 0:
+                apply_add(ev.proc, 0.0)
+            else:
+                push(ev.t_ms, "add", ev.proc)
+        else:
+            raise TypeError(f"unknown dynamic event {ev!r}")
+
+    # seed: entry tasks ready at t=0 (or their arrival); pre-existing input
+    # blocks valid on host
     for n in g.topo_order():
         if pred_count[n] == 0:
             if host_entry:
                 sim.valid.setdefault("__host_inputs__", {})[platform.host_node] = 0.0
-            mark_ready(n, 0.0)
+            ready_or_defer(n, 0.0)
     try_dispatch(0.0)
 
     done = 0
     makespan = 0.0
-    while events:
-        t, _, kind, payload = heapq.heappop(events)
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
         sim.now = t
         if kind == "finish":
-            task, pname = payload
+            task, pname, did = payload
+            if did in cancelled:
+                continue
             proc = sim.proc_by_name[pname]
+            if running.get(pname, (None,) * 5)[4] == did:
+                del running[pname]
             sim.finished.add(task)
             sim.valid.setdefault(task, {})[proc.node] = t
             done += 1
@@ -283,8 +422,14 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             for s in g.successors(task):
                 pred_count[s] -= 1
                 if pred_count[s] == 0:
-                    mark_ready(s, t)
-            try_dispatch(t)
+                    ready_or_defer(s, t)
+        elif kind == "ready":
+            mark_ready(payload, t)
+        elif kind == "drop":
+            apply_drop(payload, t)
+        elif kind == "add":
+            apply_add(payload, t)
+        try_dispatch(t)
     if done != n_tasks:
         raise RuntimeError(f"deadlock: {done}/{n_tasks} tasks completed")
 
@@ -297,6 +442,9 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         kernels_per_class=per_class,
         decision_overhead_ms=metrics["overhead"],
         offline_decision_ms=offline_ms,
-        trace=trace,
+        trace=[e for e in trace if e is not None],
         transfers=transfers,
+        aborted=aborted,
+        dropped_procs=dropped,
+        added_procs=added,
     )

@@ -6,13 +6,19 @@ Two layers, mirroring the paper's stack:
    host's devices, with continuous slot management.
 2. **Request-DAG scheduling** — a batch of requests forms a task graph
    (prefill -> N decode chunks per request, sharing weights); the
-   ``--scheduler`` flag picks eager / dmda / gp to place request chains on
-   heterogeneous device groups (e.g. a big pod + a small pod).  The
-   placement is evaluated in the discrete-event simulator and (for smoke
-   sizes) executed for real through ``core.executor``.
+   ``--scheduler`` flag picks eager / dmda / gp / incremental-gp to place
+   request chains on heterogeneous device groups (e.g. a big pod + a small
+   pod).  The placement is evaluated in the discrete-event simulator and
+   (for smoke sizes) executed for real through ``core.executor``.  The
+   default is ``incremental-gp``: across serving intervals the request DAG
+   churns, and the online partitioner carries placements over instead of
+   re-partitioning from scratch (``repro.core.online``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b --smoke \
-      --requests 8 --decode-len 16 --scheduler gp
+      --requests 8 --decode-len 16 --scheduler incremental-gp
+
+  # policy-vs-policy on a churning request stream (SchedulerArena):
+  PYTHONPATH=src python -m repro.launch.serve --arena --requests 16 --steps 6
 """
 
 from __future__ import annotations
@@ -26,10 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, canon, make_batch
+from repro.core.arena import (SchedulerArena, format_table,
+                              make_request_stream, DEFAULT_POLICIES)
 from repro.core.cost import Link
 from repro.core.graph import TaskGraph
 from repro.core.schedulers import make_policy
-from repro.core.simulate import Platform, Processor, simulate
+from repro.core.simulate import Platform, Processor, WorkerDrop, simulate
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import DistConfig, make_prefill_step, make_decode_step
 from repro.models import transformer as T
@@ -105,6 +113,14 @@ def heterogeneous_platform(link_gbps: float = 6.25) -> Platform:
                                      latency_ms=0.05), host_node=0)
 
 
+def _policy_kwargs(scheduler: str) -> dict:
+    """Both GP flavours scale Formula (1)/(2) by per-class worker counts here
+    (1 big worker vs 2 small ones — without it the big pod serializes)."""
+    if scheduler in ("gp", "incremental-gp"):
+        return {"scale_by_workers": True}
+    return {}
+
+
 def schedule_requests(n_requests: int, decode_chunks: int, scheduler: str,
                       *, kv_mb: float = 64.0) -> dict:
     g = request_dag(n_requests, decode_chunks,
@@ -112,12 +128,37 @@ def schedule_requests(n_requests: int, decode_chunks: int, scheduler: str,
                     decode_ms_big=8.0, decode_ms_small=24.0,
                     kv_bytes=int(kv_mb * 2**20))
     plat = heterogeneous_platform()
-    pol = make_policy(scheduler)
+    pol = make_policy(scheduler, **_policy_kwargs(scheduler))
     res = simulate(g, pol, plat)
     return {"scheduler": scheduler, "makespan_ms": res.makespan_ms,
             "transfers": res.n_transfers,
             "bytes_moved_mb": res.bytes_transferred / 2**20,
             "per_class": res.kernels_per_class}
+
+
+def run_arena(n_requests: int, decode_chunks: int, *, steps: int = 6,
+              kv_mb: float = 16.0, churn: float = 0.3, seed: int = 0,
+              drop_step: int | None = None, drop_proc: str = "small1",
+              policies=DEFAULT_POLICIES) -> tuple[list, SchedulerArena]:
+    """Replay a churning request stream through every policy (the online
+    serving experiment).  ``drop_step`` optionally kills ``drop_proc``
+    mid-run at that step — the elastic path."""
+    events_at = {}
+    if drop_step is not None:
+        # each step simulates on a fresh platform copy, so the death must be
+        # re-injected: mid-run at the drop step, then at t=0 ever after
+        events_at[drop_step] = (WorkerDrop(30.0, drop_proc),)
+        for later in range(drop_step + 1, steps):
+            events_at[later] = (WorkerDrop(0.0, drop_proc),)
+    stream = make_request_stream(
+        steps, base_requests=n_requests, decode_chunks=decode_chunks,
+        churn=churn, kv_bytes=int(kv_mb * 2**20), seed=seed,
+        arrival_spread_ms=10.0, events_at=events_at)
+    arena = SchedulerArena(
+        heterogeneous_platform(), policies,
+        policy_kwargs={p: _policy_kwargs(p) for p in policies})
+    rows = arena.run(stream)
+    return rows, arena
 
 
 def main(argv=None):
@@ -127,10 +168,24 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-len", type=int, default=16)
-    ap.add_argument("--scheduler", type=str, default="gp",
-                    choices=["gp", "dmda", "eager", "heft", "random"])
+    ap.add_argument("--scheduler", type=str, default="incremental-gp",
+                    choices=["incremental-gp", "gp", "dmda", "eager", "heft",
+                             "random"])
     ap.add_argument("--decode-chunks", type=int, default=8)
+    ap.add_argument("--arena", action="store_true",
+                    help="replay a churning request stream through every "
+                         "policy and print the comparison table")
+    ap.add_argument("--steps", type=int, default=6,
+                    help="stream length (scheduling intervals) for --arena")
+    ap.add_argument("--drop-step", type=int, default=None,
+                    help="kill a small-pod worker at this arena step")
     args = ap.parse_args(argv)
+
+    if args.arena:
+        rows, _ = run_arena(args.requests, args.decode_chunks,
+                            steps=args.steps, drop_step=args.drop_step)
+        print(format_table(rows))
+        return
 
     cfg = get_config(canon(args.arch))
     if args.smoke:

@@ -519,7 +519,7 @@ def decode_attn_seqpar(q, ck, cv, k_new, v_new, pos, *, ctx: Ctx,
         o = o_g / jnp.maximum(l_g, 1e-30)[..., None]
         return o.reshape(-1, H, hd).astype(q.dtype), ck, cv
 
-    from jax import shard_map
+    from ..compat import shard_map
     f = shard_map(
         local, mesh=mesh,
         in_specs=(PS(bspec), PS(bspec, "model"), PS(bspec, "model"),

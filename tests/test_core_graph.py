@@ -1,6 +1,8 @@
 """Task-graph IR, DAG generator and DOT interface (paper §II/§III)."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (TaskGraph, Kernel, SOURCE, generate_dag,

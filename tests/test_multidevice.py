@@ -21,7 +21,8 @@ def _run(code: str):
         [sys.executable, "-c",
          'import os\nos.environ["XLA_FLAGS"] = '
          '"--xla_force_host_platform_device_count=8"\n'
-         'import sys\nsys.path.insert(0, "src")\n' + textwrap.dedent(code)],
+         'import sys\nsys.path.insert(0, "src")\n'
+         'from repro import compat\n' + textwrap.dedent(code)],
         capture_output=True, text=True, cwd=ROOT, timeout=420)
     assert "PASS" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
 
@@ -44,7 +45,7 @@ def test_moe_ep_matches_reference():
     p = init_params(M.moe_params(cfg, tp=4), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
     ref_out, ref_aux = M.moe_ref(p, x, cfg, ctx1)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         ep_out, ep_aux = jax.jit(
             lambda p, x: M.moe_ep(p, x, cfg, ctx8,
                                   capacity_factor=8.0))(p, x)
@@ -79,7 +80,7 @@ def test_moe_ep_expert_perm_preserves_output():
     p2 = dict(p)
     for k in ("w_gate", "w_up", "w_down"):
         p2[k] = p[k][inv]
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         base, _ = jax.jit(lambda p, x: M.moe_ep(p, x, cfg, ctx,
                                                 capacity_factor=8.0))(p, x)
         permed, _ = jax.jit(lambda p, x: M.moe_ep(
@@ -110,7 +111,7 @@ def test_flash_decode_seqpar_matches_dense():
     ctx = Ctx(rules=DECODE_RULES, dtype=jnp.float32, mesh=mesh,
               decode_seqpar=True)
     dense_o, (dk, dv) = L.decode_attn_dense(q, ck, cv, kn, vn, pos)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         sp_o, (sk, sv) = jax.jit(lambda *a: L.decode_attn_seqpar(
             *a, ctx=ctx))(q, ck, cv, kn, vn, pos)
     np.testing.assert_allclose(np.asarray(sp_o), np.asarray(dense_o),
@@ -165,7 +166,7 @@ def test_train_step_runs_on_8_devices():
     fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                  out_shardings=(p_sh, o_sh, replicated(mesh)),
                  donate_argnums=(0, 1))
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params, opt, m = fn(params, opt, batch)
         params, opt, m = fn(params, opt, batch)
     assert jnp.isfinite(m["loss"]), m
@@ -193,7 +194,7 @@ def test_moe_ep_dedup_matches_reference():
     p = init_params(M.moe_params(cfg, tp=4), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
     ref_out, _ = M.moe_ref(p, x, cfg, ctx1)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         dd_out, _ = jax.jit(lambda p, x: M.moe_ep_dedup(
             p, x, cfg, ctx8, dest_k=3.0, capacity_factor=8.0))(p, x)
         perm = jnp.array([0, 4, 1, 5, 2, 6, 3, 7])

@@ -1,0 +1,146 @@
+"""Dynamic-event injection in the discrete-event simulator: task arrival
+timestamps and worker drop/add, with consistent makespan accounting.
+
+Plain pytest — must run without hypothesis (the tier-1 floor)."""
+
+import pytest
+
+from repro.core.cost import paper_calibrated_model
+from repro.core.graph import generate_dag, generate_paper_dag
+from repro.core.schedulers import make_policy
+from repro.core.simulate import (Processor, WorkerAdd, WorkerDrop,
+                                 make_cpu_gpu_platform, simulate)
+
+M = paper_calibrated_model()
+
+
+def _weighted(op="matmul", n=512, kernels=38, seed=7):
+    g = (generate_paper_dag(op) if kernels == 38 else
+         generate_dag(kernels, op=op, seed=seed))
+    return M.weight_graph(g, {op: n})
+
+
+def _check_complete(g, r):
+    names = sorted(t for (t, *_ ) in r.trace)
+    assert names == sorted(g.nodes), "every task runs exactly once"
+    assert r.makespan_ms == pytest.approx(
+        max(f for (*_, f) in r.trace)), "makespan == last trace finish"
+
+
+# -- worker drop --------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["eager", "dmda", "gp", "heft"])
+def test_drop_no_task_on_dead_processor(policy):
+    g = _weighted()
+    plat = make_cpu_gpu_platform()
+    drop_t = 4.0
+    r = simulate(g, make_policy(policy), plat,
+                 events=[WorkerDrop(drop_t, "cpu2")])
+    _check_complete(g, r)
+    assert r.dropped_procs == ["cpu2"]
+    for task, proc, start, finish in r.trace:
+        assert not (proc == "cpu2" and finish > drop_t + 1e-9), \
+            f"{task} ran on dead cpu2 until {finish}"
+    # aborted work is accounted separately and re-ran elsewhere
+    for task, proc, start, abort_t in r.aborted:
+        assert proc == "cpu2" and abort_t == pytest.approx(drop_t)
+        redone = [e for e in r.trace if e[0] == task]
+        assert len(redone) == 1 and redone[0][1] != "cpu2"
+
+
+def test_drop_reassigns_only_affected_tasks():
+    """The completed prefix before the drop is identical to a drop-free run;
+    only tasks alive at/after the drop may move."""
+    g = _weighted()
+    plat = make_cpu_gpu_platform()
+    drop_t = 6.0
+    base = simulate(g, make_policy("gp"), plat)
+    dyn = simulate(g, make_policy("gp"), plat,
+                   events=[WorkerDrop(drop_t, "cpu1")])
+    _check_complete(g, dyn)
+    base_entries = set(base.trace)
+    for e in dyn.trace:
+        if e[3] <= drop_t:  # finished strictly before the platform changed
+            assert e in base_entries, f"pre-drop task moved: {e}"
+
+
+def test_drop_whole_class_falls_back():
+    """Killing the only GPU forces gp's pinned tasks onto live CPU workers."""
+    g = _weighted(n=256)
+    plat = make_cpu_gpu_platform()
+    r = simulate(g, make_policy("gp"), plat, events=[WorkerDrop(0.5, "gpu0")])
+    _check_complete(g, r)
+    late_gpu = [e for e in r.trace if e[1] == "gpu0" and e[3] > 0.5 + 1e-9]
+    assert not late_gpu
+
+
+def test_drop_busy_accounting_consistent():
+    g = _weighted()
+    plat = make_cpu_gpu_platform()
+    r = simulate(g, make_policy("eager"), plat,
+                 events=[WorkerDrop(5.0, "cpu0")])
+    per_proc = {}
+    for task, proc, start, finish in r.trace:
+        per_proc[proc] = per_proc.get(proc, 0.0) + (finish - start)
+    for proc, busy in r.proc_busy_ms.items():
+        assert busy == pytest.approx(per_proc.get(proc, 0.0)), proc
+
+
+# -- worker add ---------------------------------------------------------------
+
+def test_add_worker_is_used_and_helps():
+    g = _weighted(n=1024)
+    plat = make_cpu_gpu_platform(n_cpu=3, n_gpu=1)
+    base = simulate(g, make_policy("eager"), plat)
+    r = simulate(g, make_policy("eager"), plat,
+                 events=[WorkerAdd(1.0, Processor("gpu9", "gpu", 1))])
+    _check_complete(g, r)
+    assert r.added_procs == ["gpu9"]
+    assert any(e[1] == "gpu9" for e in r.trace), "new worker picked up tasks"
+    assert r.makespan_ms <= base.makespan_ms + 1e-6
+
+
+def test_drop_then_add_roundtrip():
+    g = _weighted()
+    plat = make_cpu_gpu_platform()
+    r = simulate(g, make_policy("eager"), plat,
+                 events=[WorkerDrop(2.0, "gpu0"),
+                         WorkerAdd(8.0, Processor("gpu1", "gpu", 1))])
+    _check_complete(g, r)
+    for task, proc, start, finish in r.trace:
+        assert not (proc == "gpu0" and finish > 2.0 + 1e-9)
+    assert r.dropped_procs == ["gpu0"] and r.added_procs == ["gpu1"]
+
+
+# -- arrival timestamps -------------------------------------------------------
+
+def test_arrivals_respected():
+    g = _weighted(kernels=20)
+    plat = make_cpu_gpu_platform()
+    entry = [n for n in g.nodes if not g.predecessors(n)]
+    arrivals = {n: 7.5 for n in entry}
+    r = simulate(g, make_policy("eager"), plat, arrivals=arrivals)
+    _check_complete(g, r)
+    starts = {t: s for (t, p, s, f) in r.trace}
+    for n in entry:
+        assert starts[n] >= 7.5 - 1e-9, (n, starts[n])
+
+
+def test_arrival_delays_interior_task():
+    g = _weighted(kernels=20)
+    plat = make_cpu_gpu_platform()
+    interior = next(n for n in g.topo_order() if g.predecessors(n))
+    r = simulate(g, make_policy("eager"), plat, arrivals={interior: 1e4})
+    _check_complete(g, r)
+    starts = {t: s for (t, p, s, f) in r.trace}
+    assert starts[interior] >= 1e4 - 1e-9
+
+
+def test_platform_not_mutated_by_dynamic_run():
+    g = _weighted(kernels=20)
+    plat = make_cpu_gpu_platform()
+    names_before = [p.name for p in plat.procs]
+    simulate(g, make_policy("eager"), plat,
+             events=[WorkerDrop(1.0, "cpu0"),
+                     WorkerAdd(2.0, Processor("cpuX", "cpu", 0))])
+    assert [p.name for p in plat.procs] == names_before

@@ -1,6 +1,8 @@
 """Discrete-event simulator invariants + the paper's §IV claims."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import generate_dag, generate_paper_dag
