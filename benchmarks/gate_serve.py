@@ -1,0 +1,99 @@
+"""Regression gate for the serving benchmark (the CI ``bench-smoke`` job).
+
+Compares a freshly produced ``BENCH_serve.json`` (written by
+``python -m repro.launch.serve --arena --execute``) against the checked-in
+baseline under ``benchmarks/baselines/``.
+
+What gates, and why:
+
+* **simulated** ``incremental-gp`` total makespan and transfer count must not
+  regress more than ``--max-regress`` (default 20%) over the baseline.  The
+  discrete-event simulator is fully deterministic — identical numbers on any
+  host — so a regression here is a real scheduling-quality change, not noise.
+* the **executed** stream must have *completed*: every executed policy reports
+  at least the baseline's kernel count (the stream graphs are identical;
+  re-executions after drops can only add) over the same number of steps.
+
+Wall-clock quantities (``wall_ms``, ``mean_kernel_ms``, decision overheads)
+are recorded in the artifact but never gated — CI machines are too noisy.
+
+Usage::
+
+    python benchmarks/gate_serve.py BENCH_serve.json \
+        benchmarks/baselines/serve_baseline.json --max-regress 0.20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_POLICY = "incremental-gp"
+
+
+def check(new: dict, base: dict, max_regress: float) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures: list[str] = []
+
+    sim_new = new.get("simulated", {}).get(GATED_POLICY)
+    sim_base = base.get("simulated", {}).get(GATED_POLICY)
+    if not sim_new or not sim_base:
+        found = f"new={bool(sim_new)}, baseline={bool(sim_base)}"
+        return [f"missing simulated rows for {GATED_POLICY!r} ({found})"]
+
+    # absolute slack keeps a zero baseline (e.g. 0 transfers) gateable
+    slack = {"total_makespan_ms": 1.0, "transfers": 10}
+    for field in ("total_makespan_ms", "transfers"):
+        got, ref = sim_new[field], sim_base[field]
+        limit = ref * (1.0 + max_regress) + slack[field]
+        if got > limit + 1e-9:
+            msg = f"{got:.2f} > {ref:.2f} + {max_regress:.0%} = {limit:.2f}"
+            failures.append(f"simulated {GATED_POLICY} {field} regressed: {msg}")
+
+    for policy, ref in base.get("executed", {}).items():
+        got = new.get("executed", {}).get(policy)
+        if got is None:
+            failures.append(f"executed section lost policy {policy!r}")
+            continue
+        if got["kernels"] < ref["kernels"]:
+            have, want = got["kernels"], ref["kernels"]
+            failures.append(f"executed {policy} incomplete: {have} < {want} kernels")
+        if got["steps"] != ref["steps"]:
+            have, want = got["steps"], ref["steps"]
+            failures.append(f"executed {policy} covered {have}/{want} steps")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly produced BENCH_serve.json")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--max-regress", type=float, default=0.20)
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = check(new, base, args.max_regress)
+    sim = new.get("simulated", {}).get(GATED_POLICY, {})
+    ref = base.get("simulated", {}).get(GATED_POLICY, {})
+    mk, ref_mk = sim.get("total_makespan_ms", 0.0), ref.get("total_makespan_ms", 0.0)
+    tr, ref_tr = sim.get("transfers"), ref.get("transfers")
+    print(f"[gate] {GATED_POLICY} simulated makespan {mk:.2f} (baseline {ref_mk:.2f})")
+    print(f"[gate] {GATED_POLICY} simulated transfers {tr} (baseline {ref_tr})")
+    for policy, rep in new.get("executed", {}).items():
+        kern, wall = rep["kernels"], rep["wall_ms"]
+        print(f"[gate] executed {policy}: kernels={kern} wall_ms={wall:.1f} (info)")
+    if failures:
+        for msg in failures:
+            print(f"[gate] FAIL: {msg}")
+        return 1
+    print(f"[gate] PASS (max allowed regression {args.max_regress:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

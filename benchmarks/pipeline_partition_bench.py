@@ -2,7 +2,7 @@
 partitioner vs the DP-optimal contiguous split vs naive uniform, on the
 layer graphs of the assigned architectures."""
 
-from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.registry import get_config
 from repro.core.pipeline_partition import fm_stages, dp_stages, uniform_stages
 from .common import emit
 

@@ -1,7 +1,6 @@
 """Benchmark driver: one section per paper table/figure + the beyond-paper
 feature benches.  Emits ``name,value,derived`` CSV rows."""
 
-import sys
 import time
 
 

@@ -11,14 +11,23 @@ Two experiments:
    the arena table.
 """
 
+import argparse
+
 from repro.launch.serve import run_arena, schedule_requests
 from repro.core.arena import format_table
 from .common import emit
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing: fewer request counts, a shorter "
+                         "stream (same policies and drop coverage)")
+    args = ap.parse_args(argv)
+
     # 1) single-interval comparison (the paper's experiment, serving form)
-    for n_req in (4, 12, 32):
+    req_counts = (4, 12) if args.quick else (4, 12, 32)
+    for n_req in req_counts:
         for pol in ("eager", "dmda", "gp", "heft", "incremental-gp"):
             r = schedule_requests(n_req, 8, pol)
             emit(f"serve.req{n_req}.{pol}.makespan_ms",
@@ -26,8 +35,11 @@ def main():
                  f"transfers={r['transfers']};"
                  f"moved_mb={r['bytes_moved_mb']:.0f}")
 
-    # 2) online stream with churn + a worker drop at step 3
-    rows, _ = run_arena(16, 8, steps=6, drop_step=3, seed=0)
+    # 2) online stream with churn + a mid-stream worker drop
+    if args.quick:
+        rows, _ = run_arena(8, 4, steps=3, drop_step=1, seed=0)
+    else:
+        rows, _ = run_arena(16, 8, steps=6, drop_step=3, seed=0)
     for row in rows:
         emit(f"serve.stream.{row.policy}.mean_makespan_ms",
              f"{row.mean_makespan_ms:.1f}",

@@ -15,7 +15,6 @@ import time
 
 from repro.core.cost import paper_calibrated_model
 from repro.core.graph import generate_dag
-from repro.core.partition import cut_stats
 from repro.ft.elastic import Heartbeat, HeartbeatMonitor, replan
 
 model = paper_calibrated_model()

@@ -13,7 +13,6 @@ Shapes (assigned): train_4k / prefill_32k / decode_32k / long_500k — see
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Literal
 
 Mixer = Literal["attn", "mla", "mamba", "rwkv6"]

@@ -69,6 +69,7 @@ class SchedulerArena:
             self.factories = {name: (lambda n=name: make_policy(n, **kw.get(n, {})))
                               for name in policies}
         self.results: dict[str, list[SimResult]] = {}
+        self.reports: dict = {}   # policy -> ServeReport (run_executed)
 
     def run(self, stream: Sequence[ArenaStep]) -> list[ArenaRow]:
         rows = []
@@ -90,6 +91,28 @@ class SchedulerArena:
                 offline_ms=sum(r.offline_decision_ms for r in results),
                 aborted=sum(len(r.aborted) for r in results),
             ))
+        rows.sort(key=lambda r: r.total_makespan_ms)
+        return rows
+
+    def run_executed(self, stream: Sequence[ArenaStep], executor) -> list[ArenaRow]:
+        """The ``--execute`` mode: replay the same stream on REAL devices.
+
+        ``executor`` is a :class:`repro.core.serving.ServingExecutor`
+        (passed in, not imported — serving imports this module).  Every
+        policy gets one persistent instance, exactly like :meth:`run`, but
+        each interval is dispatched through the JAX executor with measured
+        per-kernel times feeding back into the policy.  Full
+        :class:`~repro.core.serving.ServeReport` objects land in
+        ``self.reports``; the returned rows use the same schema as the
+        simulated table (``aborted`` counts re-dispatched + re-executed
+        kernels)."""
+        self.reports = {}
+        rows = []
+        for name, factory in self.factories.items():
+            pol = factory()
+            rep = executor.run_stream(stream, pol, policy_name=name)
+            self.reports[name] = rep
+            rows.append(rep.to_row())
         rows.sort(key=lambda r: r.total_makespan_ms)
         return rows
 

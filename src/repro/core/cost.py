@@ -167,6 +167,18 @@ class MeasuredCostModel:
     repeats: int = 5
     _cache: dict = dataclasses.field(default_factory=dict)
 
+    def observe(self, op: str, n: int, cls: str, ms: float, *,
+                ewma: float = 0.3) -> float:
+        """Fold one *observed* kernel wall time into the history (StarPU's
+        online history update).  The serving executor feeds every measured
+        per-kernel time back here, so ``kernel_ms`` answers from live data
+        once a kernel has run for real; returns the updated estimate."""
+        key = (op, n, cls)
+        prev = self._cache.get(key)
+        cur = ms if prev is None else (1 - ewma) * prev + ewma * ms
+        self._cache[key] = cur
+        return cur
+
     def kernel_ms(self, op: str, n: int, cls: str) -> float:
         key = (op, n, cls)
         if key not in self._cache:

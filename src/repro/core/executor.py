@@ -13,6 +13,18 @@ threads + MSI, this does with JAX async dispatch + explicit ``device_put``:
 * JAX's async dispatch gives the overlap StarPU gets from worker threads;
   the final ``block_until_ready`` is the makespan barrier.
 
+Two entry points:
+
+* :meth:`JaxExecutor.run` — one-shot batch execution (unchanged API);
+* :class:`ExecSession` — the *online* form: kernels execute one
+  :meth:`~ExecSession.step` at a time, the assignment can be rewritten
+  between steps (:meth:`~ExecSession.reassign`), per-kernel wall times are
+  measured (``time_kernels=True``), and a group that leaves the platform is
+  evicted (:meth:`~ExecSession.evict_group`): its block copies are lost and
+  any producer whose output a pending consumer still needs is transparently
+  re-queued for re-execution — the executor-land analogue of the simulator's
+  in-flight abort + re-dispatch on :class:`~repro.core.simulate.WorkerDrop`.
+
 On this 1-CPU container all groups alias one device (transfers are
 no-op-counted but still exercised); on a real slice, groups are disjoint
 device sets.
@@ -22,11 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping
+from typing import Iterable, Mapping
 
 import jax
-
-from .graph import TaskGraph, SOURCE
 
 
 @dataclasses.dataclass
@@ -36,6 +46,204 @@ class ExecResult:
     n_transfers: int
     bytes_transferred: int
     kernels_per_group: dict
+    kernel_ms: dict = dataclasses.field(default_factory=dict)
+    #                                   # kernel -> wall ms (time_kernels=True)
+    reexecuted: list = dataclasses.field(default_factory=list)
+    #                                   # kernels re-run after group eviction
+
+
+@dataclasses.dataclass
+class KernelRun:
+    """One executed kernel (an :meth:`ExecSession.step` record)."""
+
+    name: str
+    group: str
+    ms: float            # wall ms (0.0 unless the session times kernels)
+    n_transfers: int     # transfers this kernel's input gather caused
+    nbytes: int          # bytes those transfers moved
+
+
+class ExecSession:
+    """Incremental execution of a task graph over device groups.
+
+    The session owns the data-consistency state (block -> group -> array) and
+    executes kernels in dependency order, one per :meth:`step`.  Between steps
+    the caller may rewrite placements and apply platform churn — exactly what
+    an online scheduling policy needs to co-drive real execution.
+    """
+
+    def __init__(self, executor: "JaxExecutor", g, assignment: Mapping[str, str],
+                 inputs: Mapping[str, jax.Array] | None = None, *,
+                 host_group: str | None = None, time_kernels: bool = False,
+                 gated: Iterable[str] = ()):
+        g.validate()
+        self.ex = executor
+        self.g = g
+        self.assignment = dict(assignment)
+        self.host_group = executor.resolve_host_group(host_group)
+        self.time_kernels = time_kernels
+        # gated kernels exist in the graph but may not run until admitted
+        # (online request streams: the task arrived in the revision but its
+        # wall-clock arrival time has not passed yet)
+        self.gated: set[str] = set(gated)
+        self._inputs = dict(inputs or {})
+        self.valid: dict[str, dict[str, jax.Array]] = {}  # block -> group -> arr
+        for name in self._inputs:
+            self._seed(name)
+        self.n_transfers = 0
+        self.nbytes = 0
+        self.per_group: dict[str, int] = {}
+        self.kernel_ms: dict[str, float] = {}
+        self.blocks: dict[str, jax.Array] = {}
+        self.reexecuted: list[str] = []
+        self._order = [n for n in g.topo_order()
+                       if g.nodes[n].op != "source"]
+        self._done: set[str] = set()
+        self._t0 = time.perf_counter()
+
+    # -- state ---------------------------------------------------------------
+
+    def _seed(self, block: str) -> None:
+        """(Re-)materialize a host-resident input block on the host group."""
+        dev = self.ex.groups[self.host_group]
+        self.valid[block] = {self.host_group: jax.device_put(
+            self._inputs[block], dev)}
+
+    def pending(self) -> list[str]:
+        return [n for n in self._order if n not in self._done]
+
+    def done(self) -> bool:
+        return len(self._done) == len(self._order)
+
+    def reassign(self, mapping: Mapping[str, str]) -> None:
+        """Rewrite placements for not-yet-executed kernels (policy refresh)."""
+        self.assignment.update(mapping)
+
+    def admit(self, names) -> None:
+        """Lift the arrival gate from ``names`` (they become schedulable as
+        soon as their dependencies are satisfied)."""
+        self.gated.difference_update(names)
+
+    def next_ready(self) -> str | None:
+        for n in self._order:
+            if n in self._done or n in self.gated:
+                continue
+            if all(p in self._done or self.g.nodes[p].op == "source"
+                   for p in self.g.predecessors(n)):
+                return n
+        return None
+
+    # -- eviction (worker-drop recovery) ---------------------------------------
+
+    def _requeue(self, name: str) -> None:
+        if name not in self._done:
+            return
+        self._done.discard(name)
+        self.reexecuted.append(name)
+        for p in self.g.predecessors(name):
+            if self.g.nodes[p].op != "source" and p not in self.valid:
+                self._requeue(p)
+
+    def evict_group(self, group: str) -> list[str]:
+        """Group memory is gone (worker drop): invalidate its block copies.
+
+        A block whose *last* copy lived there is lost; host input blocks are
+        re-seeded from the caller's arrays, while kernel outputs still needed
+        by a pending consumer force their producer (transitively) back onto
+        the queue.  Returns the kernels re-queued for re-execution."""
+        lost: list[str] = []
+        for block, ent in list(self.valid.items()):
+            if ent.pop(group, None) is not None and not ent:
+                del self.valid[block]
+                lost.append(block)
+        before = len(self.reexecuted)
+        for block in lost:
+            if block in self._inputs:
+                self._seed(block)
+            elif block in self.g.nodes and any(
+                    s not in self._done for s in self.g.successors(block)):
+                self._requeue(block)
+        return self.reexecuted[before:]
+
+    # -- execution -------------------------------------------------------------
+
+    def _gather(self, name: str, grp: str, dev) -> tuple[list, int, int]:
+        """Pull input blocks for ``name`` onto ``grp``; returns (args, nt, nb)."""
+        args: list[jax.Array] = []
+        nt = nb = 0
+        preds = self.g.predecessors(name)
+        keys: list[tuple[str, str | None]] = []
+        if not preds and f"{name}/in" in self.valid:
+            keys.append((f"{name}/in", None))  # source-less entry kernel
+        for pred in preds:
+            # entry kernels read their seeded "<kernel>/in" block
+            key = (name + "/in" if self.g.nodes[pred].op == "source"
+                   else pred)
+            keys.append((key, pred))
+        for key, pred in keys:
+            ent = self.valid.get(key)
+            if ent is None:
+                continue
+            if grp not in ent:
+                donor = next(iter(ent.values()))
+                ent[grp] = jax.device_put(donor, dev)
+                nt += 1
+                if pred is not None:
+                    nb += self.g.edge(pred, name).nbytes or (
+                        donor.size * donor.dtype.itemsize)
+                else:
+                    nb += donor.size * donor.dtype.itemsize
+            args.append(ent[grp])
+        return args, nt, nb
+
+    def step(self) -> KernelRun | None:
+        """Execute the next ready kernel; ``None`` when the graph is drained."""
+        name = self.next_ready()
+        if name is None:
+            return None
+        k = self.g.nodes[name]
+        grp = self.assignment.get(name, self.host_group)
+        dev = self.ex.groups[grp]
+        args, nt, nb = self._gather(name, grp, dev)
+        self.n_transfers += nt
+        self.nbytes += nb
+        if k.fn is None:
+            raise ValueError(f"kernel {name} has no fn")
+        ms = 0.0
+        if self.time_kernels:
+            for a in args:
+                if hasattr(a, "block_until_ready"):
+                    a.block_until_ready()
+            t0 = time.perf_counter()
+        with jax.default_device(dev):
+            out = k.fn(*args)
+        if self.time_kernels:
+            if hasattr(out, "block_until_ready"):
+                out.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
+            self.kernel_ms[name] = ms
+        self.valid[name] = {grp: out}
+        self.blocks[name] = out
+        self.per_group[grp] = self.per_group.get(grp, 0) + 1
+        self._done.add(name)
+        return KernelRun(name, grp, ms, nt, nb)
+
+    def run_all(self) -> None:
+        while self.step() is not None:
+            pass
+
+    def result(self) -> ExecResult:
+        outs = {n: self.blocks[n] for n in self.g.exit_nodes()
+                if n in self.blocks}
+        for a in outs.values():
+            a.block_until_ready()
+        dt = (time.perf_counter() - self._t0) * 1e3
+        return ExecResult(outputs=outs, makespan_ms=dt,
+                          n_transfers=self.n_transfers,
+                          bytes_transferred=self.nbytes,
+                          kernels_per_group=self.per_group,
+                          kernel_ms=dict(self.kernel_ms),
+                          reexecuted=list(self.reexecuted))
 
 
 class JaxExecutor:
@@ -43,79 +251,80 @@ class JaxExecutor:
         """groups: group name -> representative device."""
         self.groups = dict(groups)
 
-    def run(self, g: TaskGraph, assignment: Mapping[str, str],
-            inputs: Mapping[str, jax.Array] | None = None) -> ExecResult:
+    def resolve_host_group(self, host_group: str | None = None) -> str:
+        """The group seeding host-resident inputs.  Defaults to the
+        lexicographically-first group name so multi-group placements never
+        depend on dict insertion order."""
+        if host_group is None:
+            return min(self.groups)
+        if host_group not in self.groups:
+            raise KeyError(f"unknown host group {host_group!r}")
+        return host_group
+
+    def session(self, g, assignment: Mapping[str, str],
+                inputs: Mapping[str, jax.Array] | None = None, *,
+                host_group: str | None = None,
+                time_kernels: bool = False,
+                gated: Iterable[str] = ()) -> ExecSession:
+        return ExecSession(self, g, assignment, inputs,
+                           host_group=host_group, time_kernels=time_kernels,
+                           gated=gated)
+
+    def run(self, g, assignment: Mapping[str, str],
+            inputs: Mapping[str, jax.Array] | None = None, *,
+            host_group: str | None = None,
+            time_kernels: bool = False) -> ExecResult:
         """assignment: kernel -> group name.  ``inputs`` seeds the source
-        blocks (host-resident, like the paper's initial data)."""
-        g.validate()
-        host_group = next(iter(self.groups))
-        valid: dict[str, dict[str, jax.Array]] = {}   # block -> group -> arr
-        if inputs:
-            for name, arr in inputs.items():
-                valid[name] = {host_group: jax.device_put(
-                    arr, self.groups[host_group])}
-        n_transfers = 0
-        nbytes = 0
-        per_group: dict[str, int] = {}
-        blocks: dict[str, jax.Array] = {}
-
-        t0 = time.perf_counter()
-        for name in g.topo_order():
-            k = g.nodes[name]
-            if k.op == "source":
-                continue
-            grp = assignment.get(name, host_group)
-            dev = self.groups[grp]
-            args = []
-            for pred in g.predecessors(name):
-                # entry kernels read their seeded "<kernel>/in" block
-                key = (name + "/in" if g.nodes[pred].op == "source"
-                       else pred)
-                ent = valid.get(key)
-                if ent is None:
-                    continue
-                if grp not in ent:
-                    donor = next(iter(ent.values()))
-                    ent[grp] = jax.device_put(donor, dev)
-                    n_transfers += 1
-                    nbytes += g.edge(pred, name).nbytes or (
-                        donor.size * donor.dtype.itemsize)
-                args.append(ent[grp])
-            if k.fn is None:
-                raise ValueError(f"kernel {name} has no fn")
-            with jax.default_device(dev):
-                out = k.fn(*args)
-            valid[name] = {grp: out}
-            blocks[name] = out
-            per_group[grp] = per_group.get(grp, 0) + 1
-        outs = {n: blocks[n] for n in g.exit_nodes() if n in blocks}
-        for a in outs.values():
-            a.block_until_ready()
-        dt = (time.perf_counter() - t0) * 1e3
-        return ExecResult(outputs=outs, makespan_ms=dt,
-                          n_transfers=n_transfers, bytes_transferred=nbytes,
-                          kernels_per_group=per_group)
+        blocks (host-resident, like the paper's initial data) on
+        ``host_group`` (explicit, or the deterministic default)."""
+        s = self.session(g, assignment, inputs, host_group=host_group,
+                         time_kernels=time_kernels)
+        s.run_all()
+        return s.result()
 
 
-def attach_matrix_kernels(g: TaskGraph, n: int, dtype="float32") -> dict:
-    """Give every kernel a real implementation (the paper's MA/MM kernels
-    via kernels/ops.py) and build seed inputs for entry kernels.
+def _attach_kernels(g, n: int, fns: Mapping, dtype: str, seed: int) -> dict:
+    """Attach real implementations from ``fns`` (op -> callable) to every
+    kernel and seed a ``<kernel>/in`` host input block for each entry kernel
+    (one fed by the virtual source, or one with no predecessors at all).
     Returns the inputs dict for :meth:`JaxExecutor.run`."""
-    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    inputs = {}
+    for name, k in g.nodes.items():
+        if k.op == "source":
+            continue
+        if k.op not in fns:
+            raise KeyError(f"kernel {name!r} has op {k.op!r} without an "
+                           f"implementation (have {sorted(fns)})")
+        k.fn = fns[k.op]
+        preds = g.predecessors(name)
+        if not preds or any(g.nodes[p].op == "source" for p in preds):
+            key, sub = jax.random.split(key)
+            inputs[name + "/in"] = jax.random.normal(sub, (n, n),
+                                                     dtype=dtype)
+    return inputs
+
+
+def attach_matrix_kernels(g, n: int, dtype="float32") -> dict:
+    """The paper's MA/MM kernels (via kernels/ops.py) as real fns."""
     from ..kernels import ops
 
     fns = {"matmul": lambda *xs: ops.matmul(xs[0], xs[1] if len(xs) > 1
                                             else xs[0]),
            "matadd": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1
                                             else xs[0])}
-    key = jax.random.PRNGKey(0)
-    inputs = {}
-    for name, k in g.nodes.items():
-        if k.op == "source":
-            continue
-        k.fn = fns[k.op]
-        if any(g.nodes[p].op == "source" for p in g.predecessors(name)):
-            key, sub = jax.random.split(key)
-            inputs[name + "/in"] = jax.random.normal(sub, (n, n),
-                                                     dtype=dtype)
-    return inputs
+    return _attach_kernels(g, n, fns, dtype, seed=0)
+
+
+def attach_request_kernels(g, n: int, dtype="float32") -> dict:
+    """Real implementations for the serving request-chain DAGs
+    (:func:`repro.core.arena.make_request_stream`): ``prefill`` is the
+    compute-heavy matmul, ``decode`` the bandwidth-bound matadd — mirroring
+    the cost-table asymmetry the scheduler reasons about."""
+    from ..kernels import ops
+
+    fns = {"prefill": lambda *xs: ops.matmul(xs[0], xs[0].T if len(xs) < 2
+                                             else xs[1]),
+           "decode": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1
+                                            else xs[0])}
+    return _attach_kernels(g, n, fns, dtype, seed=1)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, Iterable, Mapping, Sequence
+from typing import Callable
 
 SOURCE = "__source__"  # virtual host node (paper: "empty kernel whose weight is 0")
 

@@ -358,6 +358,13 @@ class IncrementalGpPolicy(GpPolicy):
       places / refines the delta (``min_overlap`` gates the warm path).
     * ``on_worker_drop`` / ``on_worker_add`` recompute Formula (1)/(2) targets
       over the live classes and refine with finished tasks locked.
+    * ``observe_step_ms`` ingests *measured* per-class step times (executor
+      wall clocks / :class:`~repro.ft.elastic.HeartbeatMonitor` EWMAs);
+      :meth:`_targets_for` then corrects the static cost-table targets by the
+      observed throughput, so partition targets track real hardware — the
+      straggler-aware closing of the measurement loop.
+    * ``admit_task`` admits one late-arriving task into the live partition
+      (partial-graph admission for staggered request streams).
     """
 
     name = "incremental-gp"
@@ -376,12 +383,53 @@ class IncrementalGpPolicy(GpPolicy):
         self.cut_trigger = cut_trigger
         self.min_overlap = min_overlap
         self.partitioner: OnlinePartitioner | None = None
+        self.live_step_ms: dict[str, float] = {}   # class -> measured ms
         self.stats = {"prepare_full": 0, "prepare_warm": 0, "carried": 0,
-                      "placed": 0}
+                      "placed": 0, "admitted": 0}
+
+    # -- measured-cost feedback ------------------------------------------------
+
+    def observe_step_ms(self, step_ms: Mapping[str, float]) -> None:
+        """Ingest live per-class step times (already-smoothed EWMAs from a
+        :class:`~repro.ft.elastic.HeartbeatMonitor`, or raw executor means).
+        Non-positive entries are ignored; consumed by :meth:`_targets_for`."""
+        for cls, ms in step_ms.items():
+            if ms > 0:
+                self.live_step_ms[cls] = float(ms)
+
+    def _targets_for(self, g: TaskGraph, platform: Platform) -> dict[str, float]:
+        """Formula (1)/(2) targets corrected by *measured* throughput.
+
+        Each class with a live observation has its static share scaled by
+        (cost-table mean kernel ms / observed ms), then the vector is
+        renormalized.  Unmeasured classes keep their static share, so with no
+        feedback this is exactly :meth:`targets_for` (the paper's offline
+        formula); with feedback, a straggling class's target shrinks in
+        proportion to how much slower it *actually* runs than the table says.
+        Explicit ``targets`` overrides bypass the correction.
+        """
+        targets = self.targets_for(g, platform)
+        if self.targets_override or not self.live_step_ms:
+            return targets
+        kernels = [k for k in g.nodes.values() if k.op != "source"]
+        scaled: dict[str, float] = {}
+        for c, t in targets.items():
+            ratio = 1.0
+            live = self.live_step_ms.get(c, 0.0)
+            if live > 0 and kernels:
+                costs = [k.costs[c] for k in kernels if c in k.costs]
+                table = sum(costs) / len(costs) if costs else 0.0
+                if table > 0:
+                    ratio = table / live
+            scaled[c] = t * ratio
+        s = sum(scaled.values())
+        if s <= 0:
+            return targets
+        return {c: v / s for c, v in scaled.items()}
 
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
-        targets = self.targets_for(g, platform)
+        targets = self._targets_for(g, platform)
         host_cls = next((p.cls for p in platform.procs
                          if p.node == platform.host_node),
                         platform.procs[0].cls)
@@ -412,6 +460,22 @@ class IncrementalGpPolicy(GpPolicy):
         self.targets = dict(p.targets)
         return (time.perf_counter() - t0) * 1e3
 
+    def admit_task(self, kernel: Kernel,
+                   deps: Sequence[tuple[str, int]] = ()) -> float:
+        """Admit one late-arriving task into the live partition (the serving
+        executor admits request chains as their arrival times pass, instead
+        of re-preparing the whole revision).  Mutates the partitioner's graph:
+        callers replaying shared stream revisions must hand ``prepare`` a
+        private copy first.  Returns decision wall-time in ms."""
+        t0 = time.perf_counter()
+        p = self.partitioner
+        if p is None:
+            raise RuntimeError("admit_task() before prepare()")
+        p.add_task(kernel, deps)
+        self.assignment.update(p.assignment)
+        self.stats["admitted"] += 1
+        return (time.perf_counter() - t0) * 1e3
+
     # -- elastic platform events ---------------------------------------------
 
     def _retarget(self, sim: Sim, reason: str) -> float:
@@ -419,8 +483,9 @@ class IncrementalGpPolicy(GpPolicy):
         p = self.partitioner
         if p is not None and sim.platform.procs:
             # recompute Formula (1)/(2) over the live platform; a partial-class
-            # drop changes targets too when worker-count scaling is on
-            targets = self.targets_for(sim.g, sim.platform)
+            # drop changes targets too when worker-count scaling is on, and
+            # live measured costs (if any) fold in via _targets_for
+            targets = self._targets_for(sim.g, sim.platform)
             changed = (set(targets) != set(p.targets)
                        or any(abs(targets[c] - p.targets.get(c, 0.0)) > 1e-6
                               for c in targets))

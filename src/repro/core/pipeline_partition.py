@@ -21,12 +21,11 @@ Two partitioners:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 from .graph import TaskGraph
-from .partition import partition_taskgraph, cut_stats
+from .partition import partition_taskgraph
 from ..configs.base import ModelConfig
-from ..launch.mesh import PEAK_FLOPS_BF16, HBM_BW
+from ..launch.mesh import PEAK_FLOPS_BF16
 
 
 def layer_flops(cfg: ModelConfig, layer_idx: int, batch: int,

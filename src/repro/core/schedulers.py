@@ -15,7 +15,6 @@
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Mapping
 

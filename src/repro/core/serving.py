@@ -1,0 +1,419 @@
+"""Online serving executor: the incremental-GP scheduling loop on real devices.
+
+This is the north-star path the ROADMAP calls "wire ``IncrementalGpPolicy``
+into the real executor": the same churning request streams the
+:class:`~repro.core.arena.SchedulerArena` replays through the *simulator* are
+dispatched here through :class:`~repro.core.executor.JaxExecutor` onto real
+device groups, while the scheduling policy keeps co-evolving with the
+measured hardware:
+
+* every arriving graph revision is (re-)prepared by the policy — for
+  :class:`~repro.core.online.IncrementalGpPolicy` that is a warm ingest which
+  carries persisting placements over;
+* staggered request chains (``ArenaStep.arrivals``) are *admitted* as the
+  stream clock passes their arrival: the executor's arrival gate opens and the
+  policy places just the delta (``admit_task`` — partial-graph admission);
+* :class:`~repro.core.simulate.WorkerDrop` / ``WorkerAdd`` events fire on the
+  stream clock: the platform copy mutates, the policy's elastic hooks retarget
+  Formula (1)/(2) over the survivors, a fully-dead class has its device-group
+  memory evicted (lost blocks transparently recomputed) and its pending
+  kernels re-dispatched onto live groups;
+* the **measurement loop closes**: each kernel's observed wall time updates a
+  :class:`~repro.core.cost.MeasuredCostModel` history and per-class
+  :class:`~repro.ft.elastic.HeartbeatMonitor` EWMAs, which feed
+  ``IncrementalGpPolicy._targets_for`` — partition targets track *observed*
+  throughput instead of static cost tables (straggler-aware targets).
+
+The stream clock is *virtual*: measured kernel milliseconds plus modeled
+transfer milliseconds, so event/arrival semantics are stable across hosts of
+very different speeds while the quantities fed back to the policy stay real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+import jax
+
+from .arena import ArenaRow, ArenaStep
+from .cost import Link, MeasuredCostModel
+from .executor import JaxExecutor, attach_request_kernels
+from .graph import TaskGraph
+from .simulate import Platform, WorkerAdd, WorkerDrop
+from ..ft.elastic import Heartbeat, HeartbeatMonitor, feed_policy
+
+
+@dataclasses.dataclass
+class StepReport:
+    """One executed scheduling interval."""
+
+    tag: str
+    n_kernels: int                  # kernel executions (incl. re-executions)
+    makespan_ms: float              # virtual stream clock at drain
+    wall_ms: float                  # real wall time for the interval
+    n_transfers: int
+    bytes_transferred: int
+    offline_ms: float               # policy.prepare wall time
+    decision_ms: float              # admissions + elastic hooks wall time
+    admitted_late: int              # tasks admitted after t=0 (arrival gate)
+    redispatched: int               # pending kernels moved off a dead group
+    reexecuted: int                 # finished kernels re-run after eviction
+    kernel_ms_by_class: dict        # class -> mean observed kernel ms
+    dropped: list
+    added: list
+    events_missed: list             # events past the interval's drain clock
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """A whole stream, executed for real under one policy."""
+
+    policy: str
+    steps: list[StepReport] = dataclasses.field(default_factory=list)
+
+    def total(self, field: str) -> float:
+        return sum(getattr(s, field) for s in self.steps)
+
+    def to_row(self) -> ArenaRow:
+        n = max(len(self.steps), 1)
+        total_mk = self.total("makespan_ms")
+        return ArenaRow(
+            policy=self.policy,
+            steps=len(self.steps),
+            total_makespan_ms=total_mk,
+            mean_makespan_ms=total_mk / n,
+            transfers=int(self.total("n_transfers")),
+            bytes_moved=int(self.total("bytes_transferred")),
+            decision_ms=self.total("decision_ms"),
+            offline_ms=self.total("offline_ms"),
+            aborted=int(self.total("redispatched") + self.total("reexecuted")),
+        )
+
+    def to_dict(self) -> dict:
+        classes: dict[str, list[float]] = {}
+        for s in self.steps:
+            for cls, ms in s.kernel_ms_by_class.items():
+                classes.setdefault(cls, []).append(ms)
+        return {
+            "policy": self.policy,
+            "steps": len(self.steps),
+            "total_makespan_ms": self.total("makespan_ms"),
+            "wall_ms": self.total("wall_ms"),
+            "kernels": int(self.total("n_kernels")),
+            "transfers": int(self.total("n_transfers")),
+            "bytes_moved": int(self.total("bytes_transferred")),
+            "offline_ms": self.total("offline_ms"),
+            "decision_ms": self.total("decision_ms"),
+            "admitted_late": int(self.total("admitted_late")),
+            "redispatched": int(self.total("redispatched")),
+            "reexecuted": int(self.total("reexecuted")),
+            "mean_kernel_ms": {c: sum(v) / len(v) for c, v in classes.items()},
+        }
+
+
+@dataclasses.dataclass
+class _LiveState:
+    """Duck-typed subset of :class:`repro.core.simulate.Sim` that the elastic
+    policy hooks (``on_worker_drop`` / ``on_worker_add``) consume."""
+
+    g: TaskGraph
+    platform: Platform
+    finished: set
+
+
+def groups_for_platform(platform: Platform,
+                        devices: Sequence[jax.Device] | None = None
+                        ) -> dict[str, jax.Device]:
+    """One device group per processor class, round-robined over ``devices``
+    (all classes alias the single device on a CPU-only container)."""
+    devices = list(devices if devices is not None else jax.devices())
+    return {cls: devices[i % len(devices)]
+            for i, cls in enumerate(platform.classes)}
+
+
+def subgraph_of(g: TaskGraph, names) -> TaskGraph:
+    """Copy of the induced subgraph on ``names`` (admitted-task prefix)."""
+    keep = set(names)
+    sub = TaskGraph()
+    for n in g.topo_order():
+        if n in keep:
+            k = g.nodes[n]
+            sub.add_kernel(dataclasses.replace(k, costs=dict(k.costs),
+                                               meta=dict(k.meta)))
+    for e in g.edges:
+        if e.src in keep and e.dst in keep:
+            sub.add_edge(e.src, e.dst, e.nbytes, e.blocks)
+    return sub
+
+
+def _downstream_of(g: TaskGraph, roots) -> set[str]:
+    out = set(roots)
+    for n in g.topo_order():
+        if n not in out and any(p in out for p in g.predecessors(n)):
+            out.add(n)
+    return out
+
+
+class ServingExecutor:
+    """Run request streams on real device groups under an online policy.
+
+    ``groups`` maps processor class -> device; ``platform`` carries the worker
+    metadata (classes must be a subset of the groups).  ``side`` is the square
+    matrix size real kernels run at; ``attach`` turns a revision's kernels
+    into real callables + host inputs (defaults to the request-chain ops).
+    """
+
+    def __init__(self, groups: Mapping[str, jax.Device], platform: Platform,
+                 *, side: int = 64, host_group: str | None = None,
+                 attach: Callable[[TaskGraph, int], dict] | None = None,
+                 monitor: HeartbeatMonitor | None = None,
+                 cost_model: MeasuredCostModel | None = None,
+                 link: Link | None = None):
+        missing = [c for c in platform.classes if c not in groups]
+        if missing:
+            raise KeyError(f"platform classes without a device group: {missing}")
+        self.executor = JaxExecutor(groups)
+        self.platform = platform
+        self.side = side
+        self.host_group = self.executor.resolve_host_group(host_group)
+        self.attach = attach or attach_request_kernels
+        self.link = link or platform.link
+        self.monitor = monitor or HeartbeatMonitor(
+            list(platform.classes), straggle_factor=1.5)
+        self.cost_model = cost_model or MeasuredCostModel(impls={},
+                                                          link=self.link)
+
+    def reset_measurements(self) -> None:
+        """Fresh measurement state (monitor EWMAs + cost history).  Called at
+        the top of every :meth:`run_stream` so back-to-back runs — e.g. the
+        arena executing several policies through one executor — never leak
+        one policy's observed step times into another's live targets."""
+        m = self.monitor
+        self.monitor = HeartbeatMonitor(list(m.groups), timeout_s=m.timeout_s,
+                                        straggle_factor=m.straggle_factor,
+                                        ewma=m.ewma)
+        c = self.cost_model
+        self.cost_model = MeasuredCostModel(impls=c.impls, link=c.link,
+                                            repeats=c.repeats)
+
+    # -- elastic events --------------------------------------------------------
+
+    def _fallback_class(self, g: TaskGraph, name: str,
+                        platform: Platform) -> str:
+        costs = g.nodes[name].costs
+        live = [c for c in platform.classes if c in costs]
+        if not live:
+            raise RuntimeError(
+                f"task {name!r} has no live capable class after drops")
+        return min(live, key=lambda c: (costs[c], c))
+
+    def _apply_drop(self, pname: str, state: _LiveState, session,
+                    policy) -> tuple[float, int]:
+        procs = state.platform.procs
+        proc = next((p for p in procs if p.name == pname), None)
+        if proc is None:
+            return 0.0, 0
+        procs.remove(proc)
+        hook = getattr(policy, "on_worker_drop", None)
+        overhead = (hook(proc, state) or 0.0) if hook else 0.0
+        redispatched = 0
+        if not any(p.cls == proc.cls for p in procs):
+            # the whole class died: its group memory is gone — evict (lost
+            # blocks recompute lazily; the session tracks re-executions) and
+            # pull pending kernels off it
+            in_flight = [n for n in session.pending()
+                         if session.assignment.get(n) == proc.cls]
+            session.evict_group(proc.cls)
+            assignment = getattr(policy, "assignment", {})
+            session.reassign({n: assignment[n] for n in session.pending()
+                              if n in assignment})
+            for n in session.pending():
+                if session.assignment.get(n) == proc.cls:
+                    session.assignment[n] = self._fallback_class(
+                        state.g, n, state.platform)
+            redispatched = sum(1 for n in in_flight
+                               if session.assignment.get(n) != proc.cls)
+        else:
+            # capacity shrank but the group survives: adopt any retargeted
+            # placements the policy produced
+            assignment = getattr(policy, "assignment", {})
+            session.reassign({n: assignment[n] for n in session.pending()
+                              if n in assignment})
+        return overhead, redispatched
+
+    def _apply_add(self, proc, state: _LiveState, session, policy) -> float:
+        if proc.cls not in self.executor.groups:
+            raise KeyError(f"no device group for joining class {proc.cls!r}")
+        state.platform.procs.append(proc)
+        hook = getattr(policy, "on_worker_add", None)
+        overhead = (hook(proc, state) or 0.0) if hook else 0.0
+        assignment = getattr(policy, "assignment", {})
+        session.reassign({n: assignment[n] for n in session.pending()
+                          if n in assignment})
+        return overhead
+
+    # -- one interval ----------------------------------------------------------
+
+    def run_step(self, step: ArenaStep, policy, step_idx: int = 0
+                 ) -> StepReport:
+        wall0 = time.perf_counter()
+        g = step.graph.copy()
+        inputs = self.attach(g, self.side)
+
+        # split the revision: tasks whose arrival has passed vs gated chains
+        arrivals = dict(step.arrivals or {})
+        late_entries = {n: t for n, t in arrivals.items() if t > 0}
+        topo_idx = {n: i for i, n in enumerate(g.topo_order())}
+        arrival_of: dict[str, float] = {}
+        for root, t in late_entries.items():
+            for n in _downstream_of(g, [root]):
+                arrival_of[n] = max(arrival_of.get(n, 0.0), t)
+        gated = set(arrival_of)
+
+        # platform copy for this interval (events mutate it).  Unlike the
+        # simulator — which prepares on the full platform and THEN applies
+        # t<=0 events to demo the offline-restriction regime — a t<=0 event
+        # here edits the platform *before* prepare: in a live system a worker
+        # that left a previous interval is simply absent from this one.
+        platform = Platform(list(self.platform.procs), link=self.platform.link,
+                            host_node=self.platform.host_node)
+        events = sorted(step.events or (), key=lambda e: e.t_ms)
+        pre = [e for e in events if e.t_ms <= 0]
+        timed = [e for e in events if e.t_ms > 0]
+
+        state = _LiveState(g=g, platform=platform, finished=set())
+        for ev in pre:
+            if isinstance(ev, WorkerDrop):
+                platform.procs[:] = [p for p in platform.procs
+                                     if p.name != ev.proc]
+            elif isinstance(ev, WorkerAdd):
+                platform.procs.append(ev.proc)
+
+        # an online policy prepares on the *admitted* prefix and places the
+        # rest via admit_task as arrivals pass; a purely offline policy (no
+        # admit_task) would otherwise never place the late tasks, so it
+        # prepares on the full revision — the arrival gate still holds
+        # execution back, only the placement decision is made up front
+        admit_fn = getattr(policy, "admit_task", None)
+        if admit_fn is None:
+            prep_g = g
+        else:
+            admitted = [n for n in g.nodes if n not in gated]
+            prep_g = subgraph_of(g, admitted)
+        offline_ms = policy.prepare(prep_g, platform)
+        assignment = dict(getattr(policy, "assignment", {}))
+        for n in g.nodes:
+            if g.nodes[n].op != "source" and n not in assignment:
+                assignment[n] = self._fallback_class(g, n, platform)
+
+        session = self.executor.session(
+            g, assignment, inputs, host_group=self.host_group,
+            time_kernels=True, gated=gated)
+
+        clock = 0.0
+        decision_ms = 0.0
+        admitted_late = redispatched = 0
+        dropped: list[str] = []
+        added: list[str] = []
+        cls_ms: dict[str, list[float]] = {}
+        pending_events = list(timed)
+        pending_admits = sorted(arrival_of.items(), key=lambda kv: (kv[1], kv[0]))
+
+        def fire_due():
+            nonlocal decision_ms, redispatched, admitted_late
+            nonlocal pending_events, pending_admits
+            while pending_events and pending_events[0].t_ms <= clock + 1e-12:
+                ev = pending_events.pop(0)
+                if isinstance(ev, WorkerDrop):
+                    oh, rd = self._apply_drop(ev.proc, state, session,
+                                              policy)
+                    decision_ms += oh
+                    redispatched += rd
+                    dropped.append(ev.proc)
+                elif isinstance(ev, WorkerAdd):
+                    decision_ms += self._apply_add(ev.proc, state, session,
+                                                   policy)
+                    added.append(ev.proc.name)
+            due = [n for n, t in pending_admits if t <= clock + 1e-12]
+            if due:
+                done = set(due)
+                pending_admits = [(n, t) for n, t in pending_admits
+                                  if n not in done]
+                admitted_late += len(due)
+                admit_fn = getattr(policy, "admit_task", None)
+                if admit_fn is not None:
+                    for n in sorted(due, key=topo_idx.__getitem__):
+                        k = g.nodes[n]
+                        deps = [(p, g.edge(p, n).nbytes)
+                                for p in g.predecessors(n)
+                                if g.nodes[p].op != "source"]
+                        decision_ms += admit_fn(
+                            dataclasses.replace(k, costs=dict(k.costs),
+                                                meta=dict(k.meta)), deps)
+                    session.reassign(dict(policy.assignment))
+                session.admit(due)
+
+        fire_due()
+        while True:
+            run = session.step()
+            if run is None:
+                if session.done():
+                    break
+                future = [t for _, t in pending_admits]
+                future += [e.t_ms for e in pending_events]
+                if not future:
+                    raise RuntimeError(
+                        f"serving deadlock: pending {session.pending()!r}")
+                clock = max(clock, min(future))
+                fire_due()
+                continue
+            # close the measurement loop: observed wall time -> cost history,
+            # virtual clock advances by measured compute + modeled transfer
+            clock += run.ms + (self.link.transfer_ms(run.nbytes)
+                               if run.n_transfers else 0.0)
+            state.finished.add(run.name)
+            op = g.nodes[run.name].op
+            self.cost_model.observe(op, self.side, run.group, run.ms)
+            cls_ms.setdefault(run.group, []).append(run.ms)
+            fire_due()
+
+        # heartbeat per class for this interval; EWMAs feed the policy's
+        # live-cost view so the *next* prepare is straggler-aware
+        t_wall = time.time()
+        for cls, samples in cls_ms.items():
+            self.monitor.report(Heartbeat(group=cls, step=step_idx,
+                                          step_time_ms=sum(samples)
+                                          / len(samples), t_wall=t_wall))
+        if hasattr(policy, "observe_step_ms"):
+            feed_policy(policy, self.monitor)
+
+        return StepReport(
+            tag=step.tag,
+            n_kernels=sum(session.per_group.values()),
+            makespan_ms=clock,
+            wall_ms=(time.perf_counter() - wall0) * 1e3,
+            n_transfers=session.n_transfers,
+            bytes_transferred=session.nbytes,
+            offline_ms=offline_ms,
+            decision_ms=decision_ms,
+            admitted_late=admitted_late,
+            redispatched=redispatched,
+            reexecuted=len(session.reexecuted),
+            kernel_ms_by_class={c: sum(v) / len(v) for c, v in cls_ms.items()},
+            dropped=dropped,
+            added=added,
+            events_missed=list(pending_events),
+        )
+
+    # -- whole stream ----------------------------------------------------------
+
+    def run_stream(self, stream: Sequence[ArenaStep], policy,
+                   policy_name: str | None = None) -> ServeReport:
+        name = policy_name or getattr(policy, "name", type(policy).__name__)
+        self.reset_measurements()
+        report = ServeReport(policy=name)
+        for i, step in enumerate(stream):
+            report.steps.append(self.run_step(step, policy, step_idx=i))
+        return report

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping
+from typing import Callable, Iterable, Mapping
 
 from ..core.graph import TaskGraph
 from ..core.partition import partition_taskgraph, cut_stats
@@ -80,6 +80,31 @@ class ReplanResult:
     reason: str
 
 
+def throughput_targets(step_ms: Mapping[str, float], *,
+                       workers: Mapping[str, int] | None = None,
+                       dead: Iterable[str] = ()) -> dict[str, float]:
+    """Target work fractions proportional to *measured* throughput
+    (1 / step-time, optionally scaled by worker count) — the paper's
+    Formula (1)/(2) with live data instead of offline profiles.  Dead or
+    unmeasured groups get zero share."""
+    gone = set(dead)
+    alive = {g_: t for g_, t in step_ms.items() if g_ not in gone and t > 0}
+    assert alive, "no surviving groups"
+    inv = {g_: (workers or {}).get(g_, 1) / t for g_, t in alive.items()}
+    s = sum(inv.values())
+    return {g_: v / s for g_, v in inv.items()}
+
+
+def feed_policy(policy, monitor: HeartbeatMonitor) -> dict[str, float]:
+    """Monitor -> policy wiring: push per-group EWMA step times into an
+    online policy's live-cost view
+    (:meth:`repro.core.online.IncrementalGpPolicy.observe_step_ms`), so the
+    next target computation is straggler-aware.  Returns the pushed view."""
+    view = {g_: t for g_, t in monitor.step_ms.items() if t > 0}
+    policy.observe_step_ms(view)
+    return view
+
+
 def replan(g: TaskGraph, step_ms: Mapping[str, float],
            dead: list[str], *, edge_ms: Callable[[int], float] | None = None,
            seed: int = 1) -> ReplanResult:
@@ -89,12 +114,7 @@ def replan(g: TaskGraph, step_ms: Mapping[str, float],
     throughput (1 / step_time) — the paper's ratio formula with live data
     instead of offline profiles.  Dead groups get zero.
     """
-    alive = {g_: t for g_, t in step_ms.items()
-             if g_ not in dead and t > 0}
-    assert alive, "no surviving groups"
-    inv = {g_: 1.0 / t for g_, t in alive.items()}
-    s = sum(inv.values())
-    targets = {g_: v / s for g_, v in inv.items()}
+    targets = throughput_targets(step_ms, dead=dead)
     assignment = partition_taskgraph(g, targets, edge_ms=edge_ms, seed=seed)
     stats = cut_stats(g, assignment, edge_ms=edge_ms)
     reason = f"dead={dead}" if dead else "straggler rebalance"

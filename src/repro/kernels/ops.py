@@ -9,7 +9,6 @@ for kernel tests, pure-jnp oracles otherwise (this CPU container).
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

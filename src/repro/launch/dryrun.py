@@ -35,8 +35,6 @@ from repro.launch.steps import (DistConfig, make_train_step,
                                 make_prefill_step, make_decode_step,
                                 param_shardings, shardings_for_batch,
                                 replicated)
-from repro.models.params import eval_specs, logical_axes
-from repro.optim import adamw
 from repro.parallel import sharding as shd
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
@@ -72,7 +70,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         p_sh = param_shardings(p_specs, mesh, ctx.rules)
         batch = input_specs(cfg, shape)
         b_sh = shardings_for_batch(batch, mesh, ctx.rules)
-        cache_sh = None  # inferred from rules on outputs
         fn = jax.jit(step, in_shardings=(p_sh, b_sh))
         args = (eval_specs(p_specs, _pdt(cfg)), batch)
     else:  # decode

@@ -16,7 +16,6 @@ Global FLOPs / n_chips = per-device FLOPs for evenly-partitioned modules
 from __future__ import annotations
 
 import numpy as np
-from jax import core as jcore
 
 
 _ELEMENTWISE_2X = {"exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "erf",
@@ -63,7 +62,6 @@ def _dot_general_flops(eqn) -> int:
 
 def _conv_flops(eqn) -> int:
     # conv_general_dilated: 2 * out_elems * (k_spatial * in_features)
-    lhs = eqn.invars[0].aval
     rhs = eqn.invars[1].aval
     out = eqn.outvars[0].aval
     kernel_elems = int(np.prod(rhs.shape))

@@ -20,7 +20,6 @@ All quantities are per-device (the module is the partitioned SPMD module).
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 

@@ -19,12 +19,19 @@ Two layers, mirroring the paper's stack:
 
   # policy-vs-policy on a churning request stream (SchedulerArena):
   PYTHONPATH=src python -m repro.launch.serve --arena --requests 16 --steps 6
+
+  # the same stream EXECUTED on real device groups (gp vs incremental-gp),
+  # measured per-kernel times feeding back into the online targets; metrics
+  # land in BENCH_serve.json (the CI bench-smoke gate consumes it):
+  PYTHONPATH=src python -m repro.launch.serve --arena --execute
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import sys
 import time
 
 import jax
@@ -37,12 +44,17 @@ from repro.core.arena import (SchedulerArena, format_table,
 from repro.core.cost import Link
 from repro.core.graph import TaskGraph
 from repro.core.schedulers import make_policy
+from repro.core.serving import ServingExecutor, groups_for_platform
 from repro.core.simulate import Platform, Processor, WorkerDrop, simulate
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import DistConfig, make_prefill_step, make_decode_step
+from repro.launch.steps import DistConfig
 from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.launch.steps import make_ctx
+
+# assignment-producing policies the real executor can honor (reactive
+# queue policies like eager/dmda decide per-dispatch inside the simulator
+# and have no kernel->class map to execute)
+EXECUTED_POLICIES = ("gp", "incremental-gp")
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +173,55 @@ def run_arena(n_requests: int, decode_chunks: int, *, steps: int = 6,
     return rows, arena
 
 
+def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
+                       kv_mb: float = 16.0, churn: float = 0.3, seed: int = 0,
+                       drop_step: int | None = None, drop_proc: str = "small1",
+                       policies=EXECUTED_POLICIES, side: int = 48,
+                       drop_t_ms: float = 1.0) -> tuple[list, SchedulerArena]:
+    """The arena stream EXECUTED on real device groups.
+
+    Same stream construction as :func:`run_arena`, but each interval is
+    dispatched through :class:`~repro.core.serving.ServingExecutor`:
+    kernels run for real, per-kernel wall times feed the measured-cost /
+    heartbeat loop, and drop events fire on the virtual stream clock
+    (``drop_t_ms`` — virtual milliseconds, so a mid-interval drop actually
+    lands mid-interval regardless of host speed)."""
+    events_at = {}
+    if drop_step is not None:
+        events_at[drop_step] = (WorkerDrop(drop_t_ms, drop_proc),)
+        for later in range(drop_step + 1, steps):
+            events_at[later] = (WorkerDrop(0.0, drop_proc),)
+    stream = make_request_stream(
+        steps, base_requests=n_requests, decode_chunks=decode_chunks,
+        churn=churn, kv_bytes=int(kv_mb * 2**20), seed=seed,
+        arrival_spread_ms=0.5, events_at=events_at)
+    plat = heterogeneous_platform()
+    executor = ServingExecutor(groups_for_platform(plat), plat, side=side)
+    arena = SchedulerArena(plat, policies,
+                           policy_kwargs={p: _policy_kwargs(p)
+                                          for p in policies})
+    rows = arena.run_executed(stream, executor)
+    return rows, arena
+
+
+def write_bench(path: str, *, meta: dict, sim_rows=(), arena=None) -> dict:
+    """Dump the serving benchmark to JSON (the CI ``bench-smoke`` artifact).
+
+    ``simulated`` rows are fully deterministic (the regression gate compares
+    them against a checked-in baseline); ``executed`` rows carry measured
+    wall quantities (the gate only sanity-checks their counters)."""
+    doc = {
+        "meta": dict(meta, jax=jax.__version__,
+                     python=sys.version.split()[0]),
+        "simulated": {r.policy: dataclasses.asdict(r) for r in sim_rows},
+        "executed": {name: rep.to_dict()
+                     for name, rep in (arena.reports if arena else {}).items()},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default="granite_3_2b")
@@ -179,12 +240,37 @@ def main(argv=None):
                     help="stream length (scheduling intervals) for --arena")
     ap.add_argument("--drop-step", type=int, default=None,
                     help="kill a small-pod worker at this arena step")
+    ap.add_argument("--execute", action="store_true",
+                    help="with --arena: also run the stream on real device "
+                         "groups (gp vs incremental-gp) through the serving "
+                         "executor and dump metrics to --bench-out")
+    ap.add_argument("--bench-out", type=str, default="BENCH_serve.json",
+                    help="JSON metrics path for --execute")
+    ap.add_argument("--kernel-side", type=int, default=48,
+                    help="square matrix side for executed kernels")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     if args.arena:
         rows, _ = run_arena(args.requests, args.decode_chunks,
-                            steps=args.steps, drop_step=args.drop_step)
+                            steps=args.steps, drop_step=args.drop_step,
+                            seed=args.seed)
         print(format_table(rows))
+        if args.execute:
+            xrows, xarena = run_arena_executed(
+                args.requests, args.decode_chunks, steps=args.steps,
+                drop_step=args.drop_step, seed=args.seed,
+                side=args.kernel_side)
+            print("\n[serve] executed on device groups "
+                  f"({', '.join(r.policy for r in xrows)}):")
+            print(format_table(xrows))
+            meta = {"requests": args.requests,
+                    "decode_chunks": args.decode_chunks,
+                    "steps": args.steps, "drop_step": args.drop_step,
+                    "seed": args.seed, "kernel_side": args.kernel_side}
+            write_bench(args.bench_out, meta=meta, sim_rows=rows,
+                        arena=xarena)
+            print(f"[serve] wrote {args.bench_out}")
         return
 
     cfg = get_config(canon(args.arch))

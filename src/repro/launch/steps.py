@@ -6,17 +6,15 @@ from the logical-axis rules.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from ..configs.base import ModelConfig, ShapeConfig, pad_for_tp
+from ..configs.base import ModelConfig, pad_for_tp
 from ..models import transformer as T
 from ..models.layers import Ctx
-from ..models.params import eval_specs, logical_axes, init_params
 from ..optim import adamw
 from ..parallel import sharding as shd
 

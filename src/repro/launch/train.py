@@ -16,9 +16,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import SHAPES, ShapeConfig, pad_for_tp
 from repro.configs.registry import get_config, canon
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, batches
@@ -26,8 +24,7 @@ from repro.ft.elastic import Heartbeat, HeartbeatMonitor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import (DistConfig, make_train_step, param_shardings,
                                 shardings_for_batch, replicated)
-from repro.models.params import init_params, eval_specs, count_params
-from repro.optim import adamw
+from repro.models.params import init_params, count_params
 
 
 def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
@@ -37,7 +34,6 @@ def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
     step_fn, p_specs, o_specs, ctx = make_train_step(cfg, mesh, dist)
     p_sh = param_shardings(p_specs, mesh, ctx.rules)
     o_sh = param_shardings(o_specs, mesh, ctx.rules)
-    cfgp = pad_for_tp(cfg, mesh.shape.get("model", 1))
 
     dummy = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
              "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}

@@ -61,7 +61,6 @@ class Ctx:
         if not self.fsdp_gather:
             return p
         import jax as _jax
-        from jax.sharding import PartitionSpec as _PS
         return _jax.tree.map(lambda a: shd.constraint(
             a, (None,) * a.ndim, self.rules), p)
 
@@ -615,7 +614,6 @@ def mla_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     cache: {"latent": (B,S,r_kv), "k_rope": (B,S,dr)}."""
     B = x.shape[0]
     H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    r_kv = cfg.kv_lora_rank
     posv = jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope = _mla_q(p, x, cfg, ctx, posv)        # (B,1,H,·)
     latent_new, k_rope_new = _mla_latent(p, x, cfg, ctx, posv)

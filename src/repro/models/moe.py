@@ -21,9 +21,7 @@ that fire together reduces duplicate token sends (see
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ across heads).  40 heads over 16 shards is uneven — GSPMD pads; see DESIGN.md.
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

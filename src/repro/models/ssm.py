@@ -132,9 +132,7 @@ def mamba_block(p, x, cfg, ctx: Ctx):
 def mamba_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     """One-token step.  x: (B, 1, d); cache {"h": (B,di,ds), "conv":
     (B, dc-1, di)} -> (out (B,1,d), new cache)."""
-    B = x.shape[0]
     di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
-    dc = cfg.mamba_d_conv
     dt_rank = math.ceil(cfg.d_model / 16)
     xz = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"].astype(x.dtype))
     xs, z = jnp.split(xz, 2, axis=-1)

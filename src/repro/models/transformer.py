@@ -13,9 +13,6 @@ Each unit body is rematerialized (``jax.checkpoint``) when cfg.remat.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -232,7 +229,6 @@ def forward(params, batch, cfg: ModelConfig, ctx: Ctx, *, collect_cache=False):
     aux_total = jnp.zeros((), jnp.float32)
     caches: dict = {}
 
-    specs = cfg.layer_specs()
     if cfg.prefix:
         caches["prefix"] = {}
         for i, spec in enumerate(cfg.prefix):
@@ -277,7 +273,6 @@ def chunked_ce(params, hidden, labels, mask, cfg, ctx: Ctx, chunk: int = 256):
     (B, chunk, V) slab (vocab-sharded).  Returns (loss, n_tokens)."""
     B, S, d = hidden.shape
     W = _unembed_matrix(params, cfg)
-    V = W.shape[1]
     chunk = min(chunk, S)
     assert S % chunk == 0, (S, chunk)
     n = S // chunk
@@ -378,7 +373,6 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx,
     the serving layer).  Returns (logits (B,V), new cache)."""
     x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(ctx.dtype)
     x = ctx.cs(x, "batch", "seq", "embed")
-    specs = cfg.layer_specs()
     if cfg.prefix:
         for i, spec in enumerate(cfg.prefix):
             x, nc, _ = apply_layer_decode(

@@ -5,7 +5,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.graph import (TaskGraph, Kernel, SOURCE, generate_dag,
+from repro.core.graph import (TaskGraph, SOURCE, generate_dag,
                               generate_paper_dag, resolve_edge_bytes)
 from repro.core.dot import parse_dot, to_dot, roundtrip
 

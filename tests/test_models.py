@@ -10,7 +10,7 @@ from repro.configs.base import ModelConfig, LayerSpec
 from repro.models import transformer as T
 from repro.models import layers as L
 from repro.models.layers import Ctx
-from repro.models.params import init_params, count_params
+from repro.models.params import init_params
 from repro.parallel.sharding import TRAIN_RULES
 
 

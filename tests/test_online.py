@@ -9,9 +9,8 @@ import pytest
 from repro.core.arena import (ArenaStep, SchedulerArena, format_table,
                               make_request_stream)
 from repro.core.cost import Link, paper_calibrated_model
-from repro.core.graph import Kernel, TaskGraph, generate_paper_dag
+from repro.core.graph import Kernel, generate_paper_dag
 from repro.core.online import IncrementalGpPolicy, OnlinePartitioner
-from repro.core.schedulers import make_policy
 from repro.core.simulate import (Platform, Processor, WorkerDrop, simulate,
                                  make_cpu_gpu_platform)
 

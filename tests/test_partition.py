@@ -1,6 +1,5 @@
 """Multilevel partitioner properties (the METIS role) — hypothesis-driven."""
 
-import math
 
 import pytest
 
@@ -58,7 +57,6 @@ def test_cut_beats_random_assignment(seed):
     g = _random_ugraph(40, seed, p_edge=0.25)
     part = partition_indices(g, [0.5, 0.5], seed=1)
     rnd = _lcg(seed + 99)
-    rand_part = [rnd(2) for _ in range(g.n)]
     # random may accidentally be unbalanced-but-lower-cut; compare to the
     # best of several random tries to be fair, still expect to win
     best_rand = min(g.edge_cut([rnd(2) for _ in range(g.n)])

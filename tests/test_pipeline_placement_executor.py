@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.registry import get_config
 from repro.core.pipeline_partition import (fm_stages, dp_stages,
-                                           uniform_stages, layer_graph)
+                                           uniform_stages)
 from repro.core.placement import (place_experts, random_placement,
                                   synth_coactivation)
 from repro.core.executor import JaxExecutor, attach_matrix_kernels
