@@ -47,6 +47,8 @@ class ArenaRow:
     decision_ms: float       # online (per-ready + platform-event) overhead
     offline_ms: float        # prepare() time, summed over the stream
     aborted: int
+    spills: int = 0          # forced KV evictions (memory-capacity overflow)
+    spilled_bytes: int = 0
 
 
 class SchedulerArena:
@@ -90,6 +92,8 @@ class SchedulerArena:
                 decision_ms=sum(r.decision_overhead_ms for r in results),
                 offline_ms=sum(r.offline_decision_ms for r in results),
                 aborted=sum(len(r.aborted) for r in results),
+                spills=sum(r.spill_events for r in results),
+                spilled_bytes=sum(r.spilled_bytes for r in results),
             ))
         rows.sort(key=lambda r: r.total_makespan_ms)
         return rows
@@ -120,12 +124,12 @@ class SchedulerArena:
 def format_table(rows: Sequence[ArenaRow]) -> str:
     """Aligned text table, one row per policy, best makespan first."""
     cols = ("policy", "steps", "mean_mk_ms", "total_mk_ms", "transfers",
-            "moved_mb", "decision_ms", "offline_ms", "aborted")
+            "moved_mb", "decision_ms", "offline_ms", "aborted", "spills")
     data = [cols] + [
         (r.policy, str(r.steps), f"{r.mean_makespan_ms:.1f}",
          f"{r.total_makespan_ms:.1f}", str(r.transfers),
          f"{r.bytes_moved / 2**20:.0f}", f"{r.decision_ms:.2f}",
-         f"{r.offline_ms:.2f}", str(r.aborted))
+         f"{r.offline_ms:.2f}", str(r.aborted), str(r.spills))
         for r in rows]
     widths = [max(len(row[i]) for row in data) for i in range(len(cols))]
     lines = ["  ".join(c.rjust(w) for c, w in zip(row, widths))
@@ -141,12 +145,18 @@ def format_table(rows: Sequence[ArenaRow]) -> str:
 def _request_chain(g: TaskGraph, rid: int, decode_chunks: int, *,
                    costs_prefill: Mapping[str, float],
                    costs_decode: Mapping[str, float], kv_bytes: int):
+    """One request: prefill -> decode chain.  Every kernel pins ``kv_bytes``
+    of resident KV cache (``mem_bytes``) and carries its request id in
+    ``meta["req"]`` so residency grows over the chain and frees when the
+    whole request retires (simulator + online partitioner semantics)."""
+    meta = {"req": f"r{rid}"}
     g.add(f"r{rid}.prefill", op="prefill", costs=dict(costs_prefill),
-          out_bytes=kv_bytes)
+          out_bytes=kv_bytes, mem_bytes=kv_bytes, meta=dict(meta))
     prev = f"r{rid}.prefill"
     for c in range(decode_chunks):
         name = f"r{rid}.dec{c}"
-        g.add(name, op="decode", costs=dict(costs_decode), out_bytes=kv_bytes)
+        g.add(name, op="decode", costs=dict(costs_decode),
+              out_bytes=kv_bytes, mem_bytes=kv_bytes, meta=dict(meta))
         g.add_edge(prev, name, nbytes=kv_bytes)
         prev = name
 
@@ -157,6 +167,8 @@ def make_request_stream(
     costs_prefill: Mapping[str, float] | None = None,
     costs_decode: Mapping[str, float] | None = None,
     arrival_spread_ms: float = 0.0,
+    arrival_mode: str = "uniform",
+    burst_factor: float = 6.0,
     events_at: Mapping[int, Sequence] | None = None,
 ) -> list[ArenaStep]:
     """A deterministic stream of evolving request-DAG revisions.
@@ -166,10 +178,49 @@ def make_request_stream(
     incremental re-partitioning amortizes.  ``arrival_spread_ms`` staggers new
     requests' prefill arrival inside the step; ``events_at[step]`` injects
     :class:`WorkerDrop` / ``WorkerAdd`` events into that step's run.
+
+    ``arrival_mode`` shapes the stagger:
+
+    * ``"uniform"`` — i.i.d. arrival offsets in ``[0, arrival_spread_ms)``;
+    * ``"onoff"`` — a Markov-modulated ON/OFF process (bursty serving
+      traffic): the chain alternates between an ON state emitting arrivals
+      ``burst_factor``x denser than the uniform mean gap and an OFF state
+      ``burst_factor``x sparser, with state persisting *across steps*.
+      Deterministic in ``seed`` like everything else.
     """
     costs_prefill = costs_prefill or {"big": 20.0, "small": 60.0}
     costs_decode = costs_decode or {"big": 8.0, "small": 24.0}
+    if arrival_mode not in ("uniform", "onoff"):
+        raise ValueError(f"unknown arrival_mode {arrival_mode!r}")
     rnd = _make_lcg(seed + 101)
+    on_state = [True]  # ON/OFF chain state, persists across stream steps
+    # transition probabilities per arrival: ON sticks (bursts have length),
+    # OFF exits faster (silences are shorter than bursts)
+    p_exit_on, p_exit_off = 0.30, 0.45
+
+    def _onoff_offsets(rids: list[int]) -> dict[str, float]:
+        # rate-matched to the uniform mode: normalize the base gap by the
+        # chain's stationary mean modulation factor, so ON compresses and
+        # OFF stretches (classic MMPP burstiness) around the same mean
+        # inter-arrival time the uniform mode would use
+        pi_on = p_exit_off / (p_exit_on + p_exit_off)
+        rate_norm = pi_on / burst_factor + (1.0 - pi_on) * burst_factor
+        base = arrival_spread_ms / max(len(rids), 1) / rate_norm
+        t = 0.0
+        out: dict[str, float] = {}
+        for rid in rids:
+            jitter = 0.5 + rnd(1000) / 1000.0
+            gap = (base / burst_factor if on_state[0]
+                   else base * burst_factor) * jitter
+            t += gap
+            out[f"r{rid}.prefill"] = t
+            if on_state[0]:
+                if rnd(1000) < int(p_exit_on * 1000):
+                    on_state[0] = False
+            elif rnd(1000) < int(p_exit_off * 1000):
+                on_state[0] = True
+        return out
+
     active: list[int] = list(range(base_requests))
     next_rid = base_requests
     steps: list[ArenaStep] = []
@@ -189,9 +240,12 @@ def make_request_stream(
         g.validate()
         arrivals = None
         if arrival_spread_ms > 0 and fresh:
-            arrivals = {f"r{rid}.prefill":
-                        arrival_spread_ms * rnd(1000) / 1000.0
-                        for rid in fresh}
+            if arrival_mode == "onoff":
+                arrivals = _onoff_offsets(fresh)
+            else:
+                arrivals = {f"r{rid}.prefill":
+                            arrival_spread_ms * rnd(1000) / 1000.0
+                            for rid in fresh}
         steps.append(ArenaStep(
             graph=g, arrivals=arrivals,
             events=tuple((events_at or {}).get(step, ())),

@@ -39,6 +39,9 @@ class ProcClass:
     mem_bw: float
     n_workers: int = 1
     overhead_ms: float = 0.0  # per-kernel launch overhead
+    mem_capacity_bytes: float = math.inf  # discrete-memory budget (HBM/DRAM)
+    #   per worker of this class; math.inf = capacity-unconstrained (the
+    #   paper's regime — its platform never saturates GDDR5)
 
 
 # Hardware profiles ---------------------------------------------------------
@@ -111,6 +114,16 @@ def kernel_flops_bytes(op: str, n: int, dtype_bytes: int = 4) -> tuple[float, fl
     raise KeyError(f"unknown analytic op {op!r}")
 
 
+def kernel_mem_bytes(op: str, n: int, dtype_bytes: int = 4) -> int:
+    """Resident footprint a kernel's live output pins on its memory node —
+    the partitioner's second (capacity) dimension.  For the paper's matrix
+    ops that is the output block; serving ops (prefill/decode) account their
+    KV-cache slice via ``Kernel.mem_bytes`` directly."""
+    if op == "source":
+        return 0
+    return n * n * dtype_bytes  # square output block (matmul/matadd/generic)
+
+
 @dataclasses.dataclass
 class AnalyticCostModel:
     classes: Mapping[str, ProcClass]
@@ -134,8 +147,10 @@ class AnalyticCostModel:
 
     def weight_graph(self, g: TaskGraph, op_sizes: Mapping[str, int],
                      dtype_bytes: int = 4) -> TaskGraph:
-        """Fill in node costs (per class) and edge byte counts for a DAG whose
-        kernels are the paper's matrix ops of per-op square size."""
+        """Fill in node costs (per class), edge byte counts and resident
+        footprints for a DAG whose kernels are the paper's matrix ops of
+        per-op square size — the vector (compute ms, memory bytes) weights
+        the multi-constraint partitioner consumes."""
         from .graph import resolve_edge_bytes
         out = g.copy()
         for k in out.nodes.values():
@@ -145,6 +160,7 @@ class AnalyticCostModel:
             n = op_sizes[k.op]
             k.costs = {c: self.kernel_ms(k.op, n, c, dtype_bytes) for c in self.classes}
             k.out_bytes = n * n * dtype_bytes
+            k.mem_bytes = kernel_mem_bytes(k.op, n, dtype_bytes)
         resolve_edge_bytes(out)
         return out
 
@@ -211,6 +227,7 @@ class MeasuredCostModel:
             n = op_sizes[k.op]
             k.costs = {c: self.kernel_ms(k.op, n, c) for c in classes}
             k.out_bytes = n * n * dtype_bytes
+            k.mem_bytes = kernel_mem_bytes(k.op, n, dtype_bytes)
         resolve_edge_bytes(out)
         return out
 

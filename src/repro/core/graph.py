@@ -31,6 +31,8 @@ class Kernel:
     op: str = "generic"               # kernel type, e.g. "matmul" / "matadd"
     costs: dict[str, float] = dataclasses.field(default_factory=dict)  # class -> ms
     out_bytes: int = 0                # size of the (single) output block
+    mem_bytes: int = 0                # resident footprint while the kernel's
+    #                                   output lives on a memory node (KV state)
     meta: dict = dataclasses.field(default_factory=dict)
     fn: Callable | None = None        # optional real implementation (executor)
 
@@ -152,11 +154,26 @@ class TaskGraph:
     def total_work_ms(self, proc_class_best: Callable[[Kernel], float]) -> float:
         return sum(proc_class_best(k) for k in self.nodes.values())
 
+    def total_mem_bytes(self) -> int:
+        """Aggregate resident footprint of the whole graph (the second balance
+        dimension: every kernel's live output simultaneously resident)."""
+        return sum(k.mem_bytes for k in self.nodes.values())
+
+    def mem_bytes_by(self, group_of: Callable[[str], str]) -> dict[str, int]:
+        """Footprint aggregated by an arbitrary grouping of kernels (e.g. an
+        assignment's class, or a request id from ``meta``)."""
+        out: dict[str, int] = {}
+        for n, k in self.nodes.items():
+            g = group_of(n)
+            out[g] = out.get(g, 0) + k.mem_bytes
+        return out
+
     def fingerprint(self) -> str:
         h = hashlib.sha256()
         for n in sorted(self.nodes):
             k = self.nodes[n]
-            h.update(f"{n}|{k.op}|{sorted(k.costs.items())}|{k.out_bytes}".encode())
+            h.update(f"{n}|{k.op}|{sorted(k.costs.items())}|{k.out_bytes}"
+                     f"|{k.mem_bytes}".encode())
         for (s, d), e in sorted(self._edges.items()):
             h.update(f"{s}->{d}|{e.nbytes}".encode())
         return h.hexdigest()[:16]

@@ -23,6 +23,12 @@ between requests:
   recomputing the paper's Formula (1)/(2) targets over the *live* classes and
   refining with all finished tasks locked.
 
+* **Memory capacity is a first-class dimension**: the partitioner tracks
+  exact per-class KV residency across every delta, refuses placements that
+  breach a class's byte budget, treats capacity pressure as a refinement
+  trigger of its own, and caps Formula (1)/(2) work targets by the memory a
+  class can actually hold (:meth:`IncrementalGpPolicy._cap_targets_by_memory`).
+
 Everything is deterministic in ``seed``; wall-clock is only *reported*
 (decision-overhead metric), never used for decisions.
 """
@@ -30,12 +36,13 @@ Everything is deterministic in ``seed``; wall-clock is only *reported*
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Mapping, Sequence
 
 from .graph import Kernel, TaskGraph
-from .partition import (UGraph, _fm_refine, node_weight, partition_indices,
-                        weight_graph_of)
+from .partition import (UGraph, _fm_refine, _repair_capacity, node_weight,
+                        partition_indices, weight_graph_of)
 from .schedulers import GpPolicy
 from .simulate import Platform, Processor, Sim
 
@@ -70,6 +77,11 @@ class OnlinePartitioner:
     refinement (default ``2 * epsilon``).
     ``cut_trigger``: cut growth factor over the post-refinement baseline that
     triggers a refinement.
+    ``capacities``: class -> resident-memory budget in bytes (KV capacity).
+    Live per-class residency is tracked exactly across every delta
+    (:meth:`mem_loads`); capacity pressure is a refinement trigger of its own,
+    and greedy placement / FM moves never breach a budget that any live class
+    can still satisfy.
     """
 
     def __init__(self, targets: Mapping[str, float], *, epsilon: float = 0.05,
@@ -77,7 +89,8 @@ class OnlinePartitioner:
                  edge_ms: Callable[[int], float] | None = None,
                  imbalance_trigger: float | None = None,
                  cut_trigger: float = 1.5,
-                 pin: Mapping[str, str] | None = None):
+                 pin: Mapping[str, str] | None = None,
+                 capacities: Mapping[str, float] | None = None):
         self.targets = _normalize(targets)
         self.epsilon = epsilon
         self.seed = seed
@@ -87,6 +100,7 @@ class OnlinePartitioner:
                                   is not None else 2.0 * epsilon)
         self.cut_trigger = cut_trigger
         self.pin = dict(pin or {})
+        self.capacities = dict(capacities or {})
         self.g = TaskGraph()
         self.assignment: dict[str, str] = {}
         self.history: list[RefineRecord] = []
@@ -98,7 +112,11 @@ class OnlinePartitioner:
         # achieved value becomes the effective trigger so every subsequent
         # delta does not re-run a provably futile repartition
         self._imb_floor = 0.0
+        # analogous floor for irreducible memory overflow (bytes): a demand
+        # that simply exceeds total capacity must not re-trigger every delta
+        self._mem_floor = 0.0
         self._nw: dict[str, float] = {}   # node-weight cache (costs are stable)
+        self._mem_loads: dict[str, float] = {}  # exact live residency / class
 
     # -- weights -------------------------------------------------------------
 
@@ -111,8 +129,29 @@ class OnlinePartitioner:
                                              self.weight_source)
         return w
 
+    def _node_m(self, name: str) -> float:
+        return float(self.g.nodes[name].mem_bytes)
+
     def _total_w(self) -> float:
         return sum(self._node_w(n) for n in self.g.nodes)
+
+    def _cap_of(self, cls: str) -> float:
+        return self.capacities.get(cls, math.inf)
+
+    def _caps_vector(self, classes: Sequence[str]) -> list[float] | None:
+        if not self.capacities:
+            return None
+        return [self._cap_of(c) for c in classes]
+
+    def _recount_mem(self) -> None:
+        """Rebuild the residency ledger from the assignment (refinements
+        rewrite placements wholesale; deltas update it incrementally)."""
+        loads: dict[str, float] = {}
+        for n in self.g.nodes:
+            c = self.assignment.get(n)
+            if c is not None:
+                loads[c] = loads.get(c, 0.0) + self._node_m(n)
+        self._mem_loads = loads
 
     def _edge_w(self, nbytes: int) -> float:
         return max(self.edge_ms(nbytes) if self.edge_ms else float(nbytes),
@@ -154,6 +193,23 @@ class OnlinePartitioner:
                 cut += self._edge_w(e.nbytes)
         return cut
 
+    def mem_loads(self) -> dict[str, float]:
+        """Exact live residency (bytes) per class — maintained incrementally
+        across :meth:`add_task` / :meth:`retire_task` and rebuilt whenever a
+        refinement rewrites the assignment."""
+        out = {c: 0.0 for c in self.targets}
+        out.update(self._mem_loads)
+        return out
+
+    def mem_overflow(self) -> float:
+        """Worst per-class residency overflow above its budget, in bytes
+        (0 = every class within capacity, or no capacities declared)."""
+        if not self.capacities:
+            return 0.0
+        return max(0.0, max((load - self._cap_of(c)
+                             for c, load in self._mem_loads.items()),
+                            default=0.0))
+
     # -- graph deltas --------------------------------------------------------
 
     def reset(self, g: TaskGraph, targets: Mapping[str, float] | None = None):
@@ -163,6 +219,7 @@ class OnlinePartitioner:
         self.g = g
         self._nw.clear()
         self._imb_floor = 0.0
+        self._mem_floor = 0.0
         self._full_repartition("reset")
 
     def ingest(self, g: TaskGraph,
@@ -175,12 +232,16 @@ class OnlinePartitioner:
         self.g = g
         self._nw.clear()
         self._imb_floor = 0.0  # new revision: the old quantization floor is stale
+        self._mem_floor = 0.0
         self.assignment = {}
+        self._mem_loads = {}
         fresh: list[str] = []
         for name in self.g.topo_order():
             cls = self.pin.get(name) or old.get(name)
             if cls is not None and self.targets.get(cls, 0.0) > 1e-12:
                 self.assignment[name] = cls
+                self._mem_loads[cls] = (self._mem_loads.get(cls, 0.0)
+                                        + self._node_m(name))
             else:
                 fresh.append(name)
         # amortized placement: one load scan, then O(degree) per fresh node
@@ -190,24 +251,34 @@ class OnlinePartitioner:
             cls = self._greedy_class(name, pw=pw, total=total)
             self.assignment[name] = cls
             pw[cls] = pw.get(cls, 0.0) + self._node_w(name)
+            self._mem_loads[cls] = (self._mem_loads.get(cls, 0.0)
+                                    + self._node_m(name))
         return self.maybe_refine("ingest")
 
     def add_task(self, kernel: Kernel,
                  deps: Sequence[tuple[str, int]] = (), *,
                  refine: bool = True) -> RefineRecord | None:
         """Task arrival: add node + dependency edges, greedy-place it near its
-        neighbours, then refine if the thresholds trip."""
+        neighbours (within free memory budgets), then refine if the
+        thresholds trip.  Residency accounting updates exactly."""
         self.g.add_kernel(kernel)
         for src, nbytes in deps:
             self.g.add_edge(src, kernel.name, nbytes=nbytes)
-        self.assignment[kernel.name] = (
-            self.pin.get(kernel.name) or self._greedy_class(kernel.name))
+        cls = self.pin.get(kernel.name) or self._greedy_class(kernel.name)
+        self.assignment[kernel.name] = cls
+        self._mem_loads[cls] = (self._mem_loads.get(cls, 0.0)
+                                + self._node_m(kernel.name))
         if refine:
             return self.maybe_refine(f"arrival:{kernel.name}")
         return None
 
     def retire_task(self, name: str, *, refine: bool = True) -> RefineRecord | None:
-        """Task retirement (request finished): drop node + incident edges."""
+        """Task retirement (request finished): drop node + incident edges and
+        release its resident bytes from the class that held it."""
+        cls = self.assignment.get(name)
+        if cls is not None:
+            self._mem_loads[cls] = max(
+                0.0, self._mem_loads.get(cls, 0.0) - self._node_m(name))
         self.g.remove_kernel(name)
         self.assignment.pop(name, None)
         self._nw.pop(name, None)
@@ -218,18 +289,32 @@ class OnlinePartitioner:
 
     def set_targets(self, targets: Mapping[str, float], *,
                     locked: Sequence[str] = (),
+                    capacities: Mapping[str, float] | None = None,
                     reason: str = "platform-change") -> RefineRecord:
-        """Processor join/leave: new work fractions.  Tasks stranded on a
-        class whose target dropped to ~0 (all its workers left) are greedily
-        evacuated first; then normal threshold-gated refinement runs with
-        ``locked`` tasks (e.g. already-executed ones) pinned in place."""
+        """Processor join/leave: new work fractions (and optionally new
+        memory budgets — a dead class's capacity leaves with it).  Tasks
+        stranded on a class whose target dropped to ~0 (all its workers left)
+        are greedily evacuated first; then normal threshold-gated refinement
+        runs with ``locked`` tasks (e.g. already-executed ones) pinned in
+        place."""
         self.targets = _normalize(targets)
+        if capacities is not None:
+            self.capacities = dict(capacities)
+            self._mem_floor = 0.0
         lock = set(locked)
         for name in self.g.topo_order():
             cls = self.assignment.get(name)
             if (cls not in self.targets or self.targets[cls] <= 1e-12) \
                     and name not in lock and name not in self.pin:
-                self.assignment[name] = self._greedy_class(name)
+                new_cls = self._greedy_class(name)
+                self.assignment[name] = new_cls
+                m = self._node_m(name)
+                if m and cls is not None:
+                    self._mem_loads[cls] = max(
+                        0.0, self._mem_loads.get(cls, 0.0) - m)
+                if m:
+                    self._mem_loads[new_cls] = (
+                        self._mem_loads.get(new_cls, 0.0) + m)
         return self.maybe_refine(reason, locked=lock, force=True)
 
     # -- placement -----------------------------------------------------------
@@ -238,8 +323,11 @@ class OnlinePartitioner:
                       total: float | None = None) -> str:
         """Deterministic affinity + capacity placement for one node: prefer
         the class holding the heaviest incident edges, subject to the epsilon
-        capacity band; break ties toward the most underloaded class."""
+        work band AND the memory budget (a class without free bytes for the
+        node is outranked by any class that still fits); break ties toward
+        the most underloaded class."""
         w = self._node_w(name)
+        m = self._node_m(name)
         if pw is None:
             pw = self.loads()
         if total is None:
@@ -258,9 +346,11 @@ class OnlinePartitioner:
             if t <= 1e-12:
                 continue
             goal = t * total
+            mem_fits = (self._mem_loads.get(c, 0.0) + m
+                        <= self._cap_of(c) + 1e-6)
             fits = pw.get(c, 0.0) + w <= goal * (1 + self.epsilon) + 1e-12
             rel_load = (pw.get(c, 0.0) + w) / max(goal, 1e-12)
-            cand = (fits, aff.get(c, 0.0), -rel_load, -i)
+            cand = (mem_fits, fits, aff.get(c, 0.0), -rel_load, -i)
             if best is None or cand > best[0]:
                 best = (cand, c)
         assert best is not None, "no live class to place on"
@@ -270,12 +360,18 @@ class OnlinePartitioner:
 
     def maybe_refine(self, reason: str, *, locked: Sequence[str] = (),
                      force: bool = False) -> RefineRecord:
-        """Threshold gate -> boundary-local FM -> full-repartition escalation."""
+        """Threshold gate -> boundary-local FM -> full-repartition escalation.
+
+        Triggers: work imbalance above the trigger, cut degradation above the
+        baseline factor, or **capacity pressure** — any class resident above
+        its memory budget (beyond the proven-irreducible floor)."""
         t0 = time.perf_counter()
         imb0, cut0 = self.imbalance(), self.cut()
         cut_ok = cut0 <= self.cut_trigger * self._baseline_cut + 1e-9
         trigger = max(self.imbalance_trigger, self._imb_floor)
-        if not force and imb0 <= trigger + 1e-12 and cut_ok:
+        mem_over0 = self.mem_overflow()
+        mem_ok = mem_over0 <= self._mem_floor + 1e-6
+        if not force and imb0 <= trigger + 1e-12 and cut_ok and mem_ok:
             rec = RefineRecord("none", reason, (time.perf_counter() - t0) * 1e3,
                                cut0, cut0, imb0, imb0)
             self.history.append(rec)
@@ -283,8 +379,9 @@ class OnlinePartitioner:
 
         kind = self._incremental_refine(locked)
         imb1 = self.imbalance()
-        if imb1 > trigger and not locked:
-            # local moves could not restore balance: escalate
+        if (imb1 > trigger or self.mem_overflow() > self._mem_floor + 1e-6) \
+                and not locked:
+            # local moves could not restore balance/capacity: escalate
             self._full_repartition(reason)
             kind = "full"
             imb1 = self.imbalance()
@@ -293,10 +390,15 @@ class OnlinePartitioner:
         # only an *unconstrained* refinement proves the residual imbalance
         # unreachable (quantization); a lock-constrained failure must not
         # suppress later attempts once the locks are gone
+        mem_over1 = self.mem_overflow()
         if not locked:
             self._imb_floor = imb1 if imb1 > self.imbalance_trigger else 0.0
-        elif imb1 <= self.imbalance_trigger:
-            self._imb_floor = 0.0
+            self._mem_floor = mem_over1 if mem_over1 > 1e-6 else 0.0
+        else:
+            if imb1 <= self.imbalance_trigger:
+                self._imb_floor = 0.0
+            if mem_over1 <= 1e-6:
+                self._mem_floor = 0.0
         rec = RefineRecord(kind, reason, (time.perf_counter() - t0) * 1e3,
                            cut0, cut1, imb0, imb1)
         self.history.append(rec)
@@ -316,22 +418,32 @@ class OnlinePartitioner:
         part = [cidx[self.assignment[n]] for n in names]
         lock = set(locked) | set(self.pin)
         mask = [n in lock for n in names]
+        caps = self._caps_vector(classes)
+        if caps is not None:
+            # arrivals may have left a class over budget: evacuate first so
+            # FM starts feasible, then keep every move capacity-legal
+            part = _repair_capacity(ug, part, caps, locked=mask)
         part = _fm_refine(ug, part, [self.targets.get(c, 0.0) for c in classes],
-                          self.epsilon, max_passes=2, locked=mask)
+                          self.epsilon, max_passes=2, locked=mask,
+                          mem_caps=caps)
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         self.assignment.update(self.pin)
+        self._recount_mem()
         self.n_incremental += 1
         return "incremental"
 
     def _full_repartition(self, reason: str):
         if self.g.num_nodes() == 0:
             self.assignment = {}
+            self._mem_loads = {}
             self._baseline_cut = 0.0
             return
         ug, names = self._ugraph()
         classes = list(self.targets)
+        caps = self._caps_vector(classes)
         part = partition_indices(ug, [self.targets[c] for c in classes],
-                                 epsilon=self.epsilon, seed=self.seed)
+                                 epsilon=self.epsilon, seed=self.seed,
+                                 capacities=caps)
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         if self.pin:
             self.assignment.update(self.pin)
@@ -339,9 +451,11 @@ class OnlinePartitioner:
             fixed = [cidx[self.assignment[n]] for n in names]
             mask = [n in self.pin for n in names]
             fixed = _fm_refine(ug, fixed, [self.targets[c] for c in classes],
-                               self.epsilon, max_passes=2, locked=mask)
+                               self.epsilon, max_passes=2, locked=mask,
+                               mem_caps=caps)
             self.assignment = {n: classes[fixed[i]] for i, n in enumerate(names)}
             self.assignment.update(self.pin)
+        self._recount_mem()
         self.n_full += 1
         self._baseline_cut = self.cut()
 
@@ -374,10 +488,13 @@ class IncrementalGpPolicy(GpPolicy):
                  scale_by_workers: bool = False,
                  imbalance_trigger: float | None = None,
                  cut_trigger: float = 1.5, min_overlap: float = 0.5,
-                 decision_ms: float = 0.0):
+                 decision_ms: float = 0.0,
+                 capacities: Mapping[str, float] | None = None,
+                 mem_aware: bool = True):
         super().__init__(weight_source=weight_source, epsilon=epsilon,
                          seed=seed, targets=targets,
-                         scale_by_workers=scale_by_workers)
+                         scale_by_workers=scale_by_workers,
+                         capacities=capacities, mem_aware=mem_aware)
         self.decision_ms = decision_ms
         self.imbalance_trigger = imbalance_trigger
         self.cut_trigger = cut_trigger
@@ -398,7 +515,8 @@ class IncrementalGpPolicy(GpPolicy):
                 self.live_step_ms[cls] = float(ms)
 
     def _targets_for(self, g: TaskGraph, platform: Platform) -> dict[str, float]:
-        """Formula (1)/(2) targets corrected by *measured* throughput.
+        """Formula (1)/(2) targets corrected by *measured* throughput, then
+        capped by free memory.
 
         Each class with a live observation has its static share scaled by
         (cost-table mean kernel ms / observed ms), then the vector is
@@ -406,26 +524,69 @@ class IncrementalGpPolicy(GpPolicy):
         feedback this is exactly :meth:`targets_for` (the paper's offline
         formula); with feedback, a straggling class's target shrinks in
         proportion to how much slower it *actually* runs than the table says.
-        Explicit ``targets`` overrides bypass the correction.
+
+        On a capacity-declaring platform the result is then passed through
+        :meth:`_cap_targets_by_memory`: a class cannot be asked to hold a
+        work share whose footprint exceeds its KV budget.  Explicit
+        ``targets`` overrides bypass both corrections.
         """
         targets = self.targets_for(g, platform)
-        if self.targets_override or not self.live_step_ms:
+        if self.targets_override:
             return targets
-        kernels = [k for k in g.nodes.values() if k.op != "source"]
-        scaled: dict[str, float] = {}
-        for c, t in targets.items():
-            ratio = 1.0
-            live = self.live_step_ms.get(c, 0.0)
-            if live > 0 and kernels:
-                costs = [k.costs[c] for k in kernels if c in k.costs]
-                table = sum(costs) / len(costs) if costs else 0.0
-                if table > 0:
-                    ratio = table / live
-            scaled[c] = t * ratio
-        s = sum(scaled.values())
+        if self.live_step_ms:
+            kernels = [k for k in g.nodes.values() if k.op != "source"]
+            scaled: dict[str, float] = {}
+            for c, t in targets.items():
+                ratio = 1.0
+                live = self.live_step_ms.get(c, 0.0)
+                if live > 0 and kernels:
+                    costs = [k.costs[c] for k in kernels if c in k.costs]
+                    table = sum(costs) / len(costs) if costs else 0.0
+                    if table > 0:
+                        ratio = table / live
+                scaled[c] = t * ratio
+            s = sum(scaled.values())
+            if s > 0:
+                targets = {c: v / s for c, v in scaled.items()}
+        return self._cap_targets_by_memory(targets, g, platform)
+
+    def _cap_targets_by_memory(self, targets: Mapping[str, float],
+                               g: TaskGraph, platform: Platform,
+                               ) -> dict[str, float]:
+        """Clamp each class's work share at its share of the graph's resident
+        footprint it can actually hold (water-filling: clamped classes stick
+        at capacity, the remainder redistributes over the others
+        proportionally).  Assumes footprint roughly tracks work share — exact
+        balance is still enforced by the partitioner's hard capacity vector;
+        this only keeps Formula (1)/(2) from *asking* for an impossible
+        split.  No-op without declared capacities or footprints."""
+        caps = self.capacities_for(platform)
+        if not caps:
+            return dict(targets)
+        total_mem = float(g.total_mem_bytes())
+        if total_mem <= 0:
+            return dict(targets)
+        frac = {c: caps.get(c, math.inf) / total_mem for c in targets}
+        clamped: dict[str, float] = {}
+        for _ in range(len(targets) + 1):
+            used = sum(clamped.values())
+            rest = {c: targets[c] for c in targets if c not in clamped}
+            rest_sum = sum(rest.values())
+            if used >= 1.0 - 1e-12 or rest_sum <= 0:
+                break
+            scale = (1.0 - used) / rest_sum
+            over = [c for c in rest if rest[c] * scale > frac[c] + 1e-12]
+            if not over:
+                return {c: clamped.get(c, targets[c] * scale) for c in targets}
+            for c in over:
+                clamped[c] = frac[c]
+        # demand exceeds total capacity: best effort, shares ~ capacity
+        cap_frac = {c: (frac[c] if math.isfinite(frac[c]) else 1.0)
+                    for c in targets}
+        s = sum(cap_frac.values())
         if s <= 0:
-            return targets
-        return {c: v / s for c, v in scaled.items()}
+            return dict(targets)
+        return {c: v / s for c, v in cap_frac.items()}
 
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
@@ -439,19 +600,22 @@ class IncrementalGpPolicy(GpPolicy):
         overlap = 0.0
         if p is not None and g.num_nodes():
             overlap = len(p.g.nodes.keys() & g.nodes.keys()) / g.num_nodes()
+        caps = self.capacities_for(platform)
         if p is None or overlap < self.min_overlap:
             p = OnlinePartitioner(
                 targets, epsilon=self.epsilon, seed=self.seed,
                 weight_source=self.weight_source,
                 edge_ms=lambda nb: link.transfer_ms(nb),
                 imbalance_trigger=self.imbalance_trigger,
-                cut_trigger=self.cut_trigger, pin=pin)
+                cut_trigger=self.cut_trigger, pin=pin,
+                capacities=caps)
             p.reset(g)
             self.partitioner = p
             self.stats["prepare_full"] += 1
         else:
             carried = len(p.g.nodes.keys() & g.nodes.keys())
             p.pin = dict(pin)
+            p.capacities = dict(caps or {})
             p.ingest(g, targets=targets)
             self.stats["prepare_warm"] += 1
             self.stats["carried"] += carried
@@ -491,7 +655,9 @@ class IncrementalGpPolicy(GpPolicy):
                               for c in targets))
             if changed:
                 locked = set(sim.finished) & set(p.g.nodes)
-                p.set_targets(targets, locked=locked, reason=reason)
+                # a class's memory budget joins/leaves with its workers
+                p.set_targets(targets, locked=locked, reason=reason,
+                              capacities=self.capacities_for(sim.platform))
                 self.assignment.update(p.assignment)
                 self.targets = dict(p.targets)
         return (time.perf_counter() - t0) * 1e3

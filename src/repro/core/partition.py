@@ -13,12 +13,23 @@ k-way partitions are produced by recursive bisection with target-weight
 splitting, then a final k-way FM pass.  Everything is deterministic in
 ``seed`` (own LCG; no global RNG).
 
+**Multi-constraint extension** (beyond the paper): every node carries a weight
+*vector* — compute milliseconds (``nw``, the balance objective) and resident
+memory bytes (``nm``, e.g. a request's KV-cache footprint).  Each part may
+declare an absolute memory budget (``capacities``); coarsening aggregates both
+dimensions, the initial growth and every FM move reject placements that would
+breach a part's budget, and a greedy repair pass evacuates over-budget parts
+when a warm start arrives infeasible.  The work dimension stays *balanced to
+targets*; the memory dimension is a *hard cap* — the discrete-memory reality
+("a distributed system within a computer") a serving system dies on first.
+
 The partitioner consumes a generic undirected weighted graph; `weight_graph_of`
 adapts a :class:`TaskGraph` using the paper's conventions:
 
 * node weight = kernel time on a *chosen* class (`weight_source`).  The paper
   (§III.B) discusses choosing GPU time (small node weights -> edge weights
   dominate -> fewer cuts) vs CPU time (opposite); we expose exactly that knob.
+* node memory = ``Kernel.mem_bytes`` (the resident footprint);
 * edge weight = transfer time of the producer block over the bus (ms), merged
   for parallel edges.
 """
@@ -36,12 +47,19 @@ from .graph import TaskGraph
 # plain array graph
 # ---------------------------------------------------------------------------
 
+
 @dataclasses.dataclass
 class UGraph:
-    """Undirected weighted graph in index space."""
+    """Undirected weighted graph in index space.
 
-    nw: list[float]                       # node weights
-    adj: list[dict[int, float]]           # adj[u][v] = edge weight (sym)
+    ``nw`` is the balance dimension (compute ms); ``nm`` is the optional
+    second constraint dimension (resident memory bytes) — ``None`` means the
+    graph has no memory dimension and capacity vectors are ignored.
+    """
+
+    nw: list[float]  # node weights (compute)
+    adj: list[dict[int, float]]  # adj[u][v] = edge weight (sym)
+    nm: list[float] | None = None  # node memory (bytes), optional
 
     @property
     def n(self) -> int:
@@ -49,6 +67,19 @@ class UGraph:
 
     def total_w(self) -> float:
         return sum(self.nw)
+
+    def mem(self, u: int) -> float:
+        return self.nm[u] if self.nm is not None else 0.0
+
+    def total_m(self) -> float:
+        return sum(self.nm) if self.nm is not None else 0.0
+
+    def part_mem(self, part: list[int], k: int) -> list[float]:
+        pm = [0.0] * k
+        if self.nm is not None:
+            for u in range(self.n):
+                pm[part[u]] += self.nm[u]
+        return pm
 
     def edge_cut(self, part: list[int]) -> float:
         cut = 0.0
@@ -70,12 +101,21 @@ def _lcg(seed: int):
     return rnd
 
 
+def _caps_active(g: UGraph, caps: Sequence[float] | None) -> bool:
+    return caps is not None and g.nm is not None and any(c != math.inf for c in caps)
+
+
 # ---------------------------------------------------------------------------
 # coarsening: heavy-edge matching
 # ---------------------------------------------------------------------------
 
+
 def _coarsen(g: UGraph, rnd) -> tuple[UGraph, list[int]]:
-    """One level of heavy-edge matching.  Returns (coarse graph, mapping)."""
+    """One level of heavy-edge matching.  Returns (coarse graph, mapping).
+
+    Both weight dimensions aggregate: a coarse node's compute weight and
+    memory footprint are the sums over its matched pair.
+    """
     n = g.n
     order = list(range(n))
     for i in range(n - 1, 0, -1):  # Fisher-Yates with our LCG
@@ -102,10 +142,13 @@ def _coarsen(g: UGraph, rnd) -> tuple[UGraph, list[int]]:
                 cmap[match[u]] = nc
             nc += 1
     nw = [0.0] * nc
+    nm = [0.0] * nc if g.nm is not None else None
     adj: list[dict[int, float]] = [dict() for _ in range(nc)]
     for u in range(n):
         cu = cmap[u]
         nw[cu] += g.nw[u]
+        if nm is not None:
+            nm[cu] += g.nm[u]
         for v, w in g.adj[u].items():
             cv = cmap[v]
             if cu != cv:
@@ -114,21 +157,33 @@ def _coarsen(g: UGraph, rnd) -> tuple[UGraph, list[int]]:
     for u in range(nc):
         for v in list(adj[u]):
             adj[u][v] *= 0.5
-    return UGraph(nw, adj), cmap
+    return UGraph(nw, adj, nm), cmap
 
 
 # ---------------------------------------------------------------------------
 # initial bisection: greedy graph growing
 # ---------------------------------------------------------------------------
 
-def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
-    """Grow partition 0 from a random seed until its weight reaches t0*total."""
+
+def _grow_bisection(
+    g: UGraph,
+    t0: float,
+    rnd,
+    trials: int = 8,
+    caps: Sequence[float] | None = None,
+) -> list[int]:
+    """Grow partition 0 from a random seed until its weight reaches t0*total.
+
+    With ``caps``, a node never joins partition 0 past its memory budget
+    (partition 1's budget is restored afterwards by the repair pass)."""
     total = g.total_w()
+    cap0 = caps[0] if _caps_active(g, caps) else math.inf
     best_part, best_cut = None, math.inf
     for _ in range(max(1, trials)):
         start = rnd(g.n)
         part = [1] * g.n
         w0 = 0.0
+        m0 = 0.0
         # frontier with gains: prefer nodes most connected into partition 0
         in0 = [False] * g.n
         gain = {start: 0.0}
@@ -137,14 +192,17 @@ def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
             if not gain:
                 # disconnected graph (e.g. independent request chains):
                 # re-seed the growth from an unassigned node
-                rest = [u for u in range(g.n)
-                        if not in0[u] and u not in skipped]
+                rest = [u for u in range(g.n) if not in0[u] and u not in skipped]
                 if not rest:
                     break
                 gain = {rest[rnd(len(rest))]: 0.0}
             u = max(gain, key=lambda x: (gain[x], -x))
             del gain[u]
             if in0[u]:
+                continue
+            if m0 + g.mem(u) > cap0 + 1e-9:
+                # memory budget of partition 0 exhausted for this node
+                skipped.add(u)
                 continue
             if w0 + g.nw[u] > t0 * total * 1.25 and w0 > 0:
                 # adding u overshoots badly; try another frontier node
@@ -153,6 +211,7 @@ def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
             in0[u] = True
             part[u] = 0
             w0 += g.nw[u]
+            m0 += g.mem(u)
             for v, w in g.adj[u].items():
                 if not in0[v]:
                     gain[v] = gain.get(v, 0.0) + w
@@ -164,18 +223,82 @@ def _grow_bisection(g: UGraph, t0: float, rnd, trials: int = 8) -> list[int]:
 
 
 # ---------------------------------------------------------------------------
+# capacity repair (memory dimension)
+# ---------------------------------------------------------------------------
+
+
+def _repair_capacity(
+    g: UGraph,
+    part: list[int],
+    caps: Sequence[float] | None,
+    locked: Sequence[bool] | None = None,
+) -> list[int]:
+    """Evacuate over-budget parts: greedily move nodes out of any part whose
+    resident memory exceeds its capacity, into parts with free budget,
+    preferring moves that hurt the edge cut least (then moves that relieve
+    the most bytes).  Best-effort: an infeasible instance (total footprint
+    above total capacity, or a single node above every free budget) leaves
+    the smallest achievable overflow in place."""
+    if not _caps_active(g, caps):
+        return part
+    k = len(caps)
+    pm = g.part_mem(part, k)
+    for _ in range(2 * g.n):  # each move strictly shrinks an over-budget part
+        over = [p for p in range(k) if pm[p] > caps[p] + 1e-6]
+        if not over:
+            break
+        p = max(over, key=lambda q: pm[q] - caps[q])
+        best = None
+        for u in range(g.n):
+            if part[u] != p or g.mem(u) <= 0 or (locked is not None and locked[u]):
+                continue
+            ext: dict[int, float] = {}
+            internal = 0.0
+            for v, w in g.adj[u].items():
+                if part[v] == p:
+                    internal += w
+                else:
+                    ext[part[v]] = ext.get(part[v], 0.0) + w
+            for q in range(k):
+                if q == p or pm[q] + g.mem(u) > caps[q] + 1e-6:
+                    continue
+                cand = (ext.get(q, 0.0) - internal, g.mem(u), -u, q)
+                if best is None or cand > best[0]:
+                    best = (cand, u, q)
+        if best is None:
+            break  # stuck: no movable node fits anywhere
+        _, u, q = best
+        pm[p] -= g.mem(u)
+        pm[q] += g.mem(u)
+        part[u] = q
+    return part
+
+
+# ---------------------------------------------------------------------------
 # FM refinement (2-way and k-way passes)
 # ---------------------------------------------------------------------------
 
-def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
-               epsilon: float, max_passes: int = 8,
-               locked: Sequence[bool] | None = None) -> list[int]:
+
+def _fm_refine(
+    g: UGraph,
+    part: list[int],
+    targets: Sequence[float],
+    epsilon: float,
+    max_passes: int = 8,
+    locked: Sequence[bool] | None = None,
+    mem_caps: Sequence[float] | None = None,
+) -> list[int]:
     """Boundary FM with best-prefix rollback, k-way (single-move granularity).
 
     Balance constraint: partition p weight must stay within
     [targets[p]*total*(1-eps_lo), targets[p]*total*(1+epsilon)] where eps_lo is
     relaxed — we never force moves, only allow those not violating the upper
     bound and not emptying a mandatory partition.
+
+    Capacity constraint: with ``mem_caps``, a move whose destination part
+    would exceed its memory budget is rejected outright (gain-ordered moves,
+    capacity-vetoed) — the multi-constraint invariant: FM never *creates* a
+    capacity violation.
 
     ``locked[u]`` pins node u to its current partition (online refinement:
     already-executed or pinned tasks still contribute weight and edge gain but
@@ -187,6 +310,8 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
     for u in range(g.n):
         pw[part[u]] += g.nw[u]
     cap = [targets[p] * total * (1 + epsilon) + 1e-12 for p in range(k)]
+    caps_on = _caps_active(g, mem_caps)
+    pm = g.part_mem(part, k) if caps_on else None
 
     def ext_int(u: int) -> tuple[dict[int, float], float]:
         """edge weight from u to each other partition, and internal weight."""
@@ -220,6 +345,8 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
                 for to, wext in ext.items():
                     if pw[to] + g.nw[u] > cap[to]:
                         continue
+                    if caps_on and pm[to] + g.mem(u) > mem_caps[to] + 1e-6:
+                        continue
                     # don't empty a partition that has a nonzero target
                     if targets[pu] > 0 and pw[pu] - g.nw[u] < 0:
                         continue
@@ -236,6 +363,9 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
             part[u] = to
             pw[frm] -= g.nw[u]
             pw[to] += g.nw[u]
+            if caps_on:
+                pm[frm] -= g.mem(u)
+                pm[to] += g.mem(u)
             moved[u] = True
             cum += gain
             moves.append((u, frm, to))
@@ -255,6 +385,9 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
             part[u] = frm
             pw[to] -= g.nw[u]
             pw[frm] += g.nw[u]
+            if caps_on:
+                pm[to] -= g.mem(u)
+                pm[frm] += g.mem(u)
         if best_i == -1 or not improved_in_pass:
             break
     return part
@@ -264,7 +397,14 @@ def _fm_refine(g: UGraph, part: list[int], targets: Sequence[float],
 # multilevel driver
 # ---------------------------------------------------------------------------
 
-def _bisect_multilevel(g: UGraph, t0: float, epsilon: float, seed: int) -> list[int]:
+
+def _bisect_multilevel(
+    g: UGraph,
+    t0: float,
+    epsilon: float,
+    seed: int,
+    caps: Sequence[float] | None = None,
+) -> list[int]:
     rnd = _lcg(seed)
     levels: list[tuple[UGraph, list[int]]] = []
     cur = g
@@ -274,73 +414,111 @@ def _bisect_multilevel(g: UGraph, t0: float, epsilon: float, seed: int) -> list[
             break
         levels.append((cur, cmap))
         cur = coarse
-    part = _grow_bisection(cur, t0, rnd)
-    part = _fm_refine(cur, part, [t0, 1 - t0], epsilon)
+    part = _grow_bisection(cur, t0, rnd, caps=caps)
+    part = _repair_capacity(cur, part, caps)
+    part = _fm_refine(cur, part, [t0, 1 - t0], epsilon, mem_caps=caps)
     while levels:
         fine, cmap = levels.pop()
         part = [part[cmap[u]] for u in range(fine.n)]
-        part = _fm_refine(fine, part, [t0, 1 - t0], epsilon)
+        # projection preserves both weight dimensions, so a feasible coarse
+        # partition projects to a feasible fine one; FM keeps it that way
+        part = _fm_refine(fine, part, [t0, 1 - t0], epsilon, mem_caps=caps)
     return part
 
 
-def partition_indices(g: UGraph, targets: Sequence[float], *, epsilon: float = 0.05,
-                      seed: int = 1) -> list[int]:
+def partition_indices(
+    g: UGraph,
+    targets: Sequence[float],
+    *,
+    epsilon: float = 0.05,
+    seed: int = 1,
+    capacities: Sequence[float] | None = None,
+) -> list[int]:
     """k-way partition of an index graph into parts with target weight
-    fractions ``targets`` (sum to 1)."""
+    fractions ``targets`` (sum to 1) and optional absolute memory budgets
+    ``capacities`` (same units as ``g.nm``; ``math.inf`` = unconstrained).
+
+    The capacity vector is a hard constraint: whenever a feasible assignment
+    is reachable by the greedy repair + capacity-vetoed FM moves, no part
+    exceeds its budget in the returned partition."""
     k = len(targets)
     tsum = sum(targets)
     if not math.isclose(tsum, 1.0, rel_tol=1e-6):
         targets = [t / tsum for t in targets]
+    if capacities is not None and len(capacities) != k:
+        raise ValueError(f"capacities has {len(capacities)} entries for {k} targets")
     if k == 1:
         return [0] * g.n
     # Degenerate targets (paper Fig 6: R_cpu ~ 0): assign everything to the
-    # dominant side directly, then let FM move nothing.
+    # dominant side directly — unless budgets force spreading the footprint.
     live = [i for i, t in enumerate(targets) if t > 1e-9]
     if len(live) == 1:
-        return [live[0]] * g.n
+        part = [live[0]] * g.n
+        return _repair_capacity(g, part, capacities)
 
     if k == 2:
-        part = _bisect_multilevel(g, targets[0], epsilon, seed)
-        return _fm_refine(g, part, targets, epsilon)
+        part = _bisect_multilevel(g, targets[0], epsilon, seed, caps=capacities)
+        part = _repair_capacity(g, part, capacities)
+        return _fm_refine(g, part, targets, epsilon, mem_caps=capacities)
 
     # recursive bisection: split target list into two halves with closest sums
     order = sorted(range(k), key=lambda i: -targets[i])
     ga, gb, wa, wb = [], [], 0.0, 0.0
     for i in order:
         if wa <= wb:
-            ga.append(i); wa += targets[i]
+            ga.append(i)
+            wa += targets[i]
         else:
-            gb.append(i); wb += targets[i]
-    part2 = _bisect_multilevel(g, wa, epsilon, seed)
-    part2 = _fm_refine(g, part2, [wa, wb], epsilon)
+            gb.append(i)
+            wb += targets[i]
+    caps2 = None
+    if capacities is not None:
+        caps2 = [
+            sum(capacities[i] for i in ga),
+            sum(capacities[i] for i in gb),
+        ]
+    part2 = _bisect_multilevel(g, wa, epsilon, seed, caps=caps2)
+    part2 = _repair_capacity(g, part2, caps2)
+    part2 = _fm_refine(g, part2, [wa, wb], epsilon, mem_caps=caps2)
     out = [-1] * g.n
     for side, group, wsum in ((0, ga, wa), (1, gb, wb)):
         idx = [u for u in range(g.n) if part2[u] == side]
         if not idx:
             continue
         sub_nw = [g.nw[u] for u in idx]
+        sub_nm = [g.nm[u] for u in idx] if g.nm is not None else None
         remap = {u: i for i, u in enumerate(idx)}
         sub_adj: list[dict[int, float]] = [dict() for _ in idx]
         for u in idx:
             for v, w in g.adj[u].items():
                 if v in remap:
                     sub_adj[remap[u]][remap[v]] = w
-        sub = UGraph(sub_nw, sub_adj)
+        sub = UGraph(sub_nw, sub_adj, sub_nm)
         sub_targets = [targets[i] / wsum for i in group]
-        sub_part = partition_indices(sub, sub_targets, epsilon=epsilon, seed=seed + 17)
+        sub_caps = [capacities[i] for i in group] if capacities else None
+        sub_part = partition_indices(
+            sub,
+            sub_targets,
+            epsilon=epsilon,
+            seed=seed + 17,
+            capacities=sub_caps,
+        )
         for u in idx:
             out[u] = group[sub_part[remap[u]]]
-    # final k-way polish
-    return _fm_refine(g, out, targets, epsilon)
+    # final k-way polish; repair first so FM starts feasible
+    out = _repair_capacity(g, out, capacities)
+    return _fm_refine(g, out, targets, epsilon, mem_caps=capacities)
 
 
 # ---------------------------------------------------------------------------
 # TaskGraph adapter (paper semantics)
 # ---------------------------------------------------------------------------
 
-def node_weight(costs: Mapping[str, float],
-                weight_source: str | Callable[[Mapping[str, float]], float],
-                ) -> float:
+
+def node_weight(
+    costs: Mapping[str, float],
+    weight_source: str | Callable[[Mapping[str, float]], float],
+) -> float:
     """The paper's §III.B node-weight choice: which class's time becomes the
     scalar node weight ("gpu"/"cpu"/any class name, "min", "mean", or a
     callable over the per-class cost dict).  Floored at 1e-9 so zero-cost
@@ -364,15 +542,21 @@ def weight_graph_of(
 ) -> tuple[UGraph, list[str]]:
     """Build the undirected weighted graph the partitioner consumes.
 
-    ``weight_source``: which class's time becomes the (scalar) node weight —
+    ``weight_source``: which class's time becomes the compute node weight —
     the paper's §III.B discussion.  "gpu"/"cpu"/any class name, "min", "mean",
     or a callable over the per-class cost dict.
     ``edge_ms``: bytes -> transfer ms; defaults to identity on bytes (pure cut
     minimization in byte space).
-    """
+
+    The memory dimension rides along: ``UGraph.nm`` carries each kernel's
+    ``mem_bytes`` (``None`` when the graph declares no footprints, keeping
+    scalar-weight behaviour bit-identical)."""
     names = list(tg.topo_order())
     index = {n: i for i, n in enumerate(names)}
     nw = [node_weight(tg.nodes[n].costs, weight_source) for n in names]
+    nm: list[float] | None = [float(tg.nodes[n].mem_bytes) for n in names]
+    if not any(nm):
+        nm = None
     adj: list[dict[int, float]] = [dict() for _ in names]
     for e in tg.edges:
         u, v = index[e.src], index[e.dst]
@@ -380,7 +564,7 @@ def weight_graph_of(
         w = max(w, 1e-9)
         adj[u][v] = adj[u].get(v, 0.0) + w
         adj[v][u] = adj[v].get(u, 0.0) + w
-    return UGraph(nw, adj), names
+    return UGraph(nw, adj, nm), names
 
 
 def partition_taskgraph(
@@ -392,6 +576,7 @@ def partition_taskgraph(
     epsilon: float = 0.05,
     seed: int = 1,
     pin: Mapping[str, str] | None = None,
+    capacities: Mapping[str, float] | None = None,
 ) -> dict[str, str]:
     """Partition a TaskGraph into processor classes with target work fractions
     (the paper's full gp pipeline minus the runtime).
@@ -399,21 +584,33 @@ def partition_taskgraph(
     Returns kernel name -> class name.  ``pin`` forces given kernels onto a
     class (e.g. the virtual source onto the host); pins are applied after
     partitioning by overriding the assignment (their weight contribution is
-    negligible for the source node, which has zero cost).
+    negligible for the source node, which has zero cost).  ``capacities``
+    maps a class to its memory budget in bytes (absent class = unconstrained).
     """
     classes = list(targets)
     ug, names = weight_graph_of(tg, weight_source=weight_source, edge_ms=edge_ms)
-    part = partition_indices(ug, [targets[c] for c in classes],
-                             epsilon=epsilon, seed=seed)
+    caps = None
+    if capacities is not None:
+        caps = [float(capacities.get(c, math.inf)) for c in classes]
+    part = partition_indices(
+        ug,
+        [targets[c] for c in classes],
+        epsilon=epsilon,
+        seed=seed,
+        capacities=caps,
+    )
     out = {names[i]: classes[part[i]] for i in range(len(names))}
     if pin:
         out.update(pin)
     return out
 
 
-def cut_stats(tg: TaskGraph, assignment: Mapping[str, str],
-              edge_ms: Callable[[int], float] | None = None) -> dict:
-    """Cut edges / bytes / ms and per-class node-weight sums for reporting."""
+def cut_stats(
+    tg: TaskGraph,
+    assignment: Mapping[str, str],
+    edge_ms: Callable[[int], float] | None = None,
+) -> dict:
+    """Cut edges / bytes / ms plus per-class node-weight and footprint sums."""
     cut_edges = 0
     cut_bytes = 0
     cut_ms = 0.0
@@ -423,8 +620,15 @@ def cut_stats(tg: TaskGraph, assignment: Mapping[str, str],
             cut_bytes += e.nbytes
             cut_ms += edge_ms(e.nbytes) if edge_ms else 0.0
     loads: dict[str, float] = {}
+    mem: dict[str, int] = {}
     for n, k in tg.nodes.items():
         c = assignment[n]
         loads[c] = loads.get(c, 0.0) + (k.costs.get(c, 0.0))
-    return {"cut_edges": cut_edges, "cut_bytes": cut_bytes, "cut_ms": cut_ms,
-            "loads_ms": loads}
+        mem[c] = mem.get(c, 0) + k.mem_bytes
+    return {
+        "cut_edges": cut_edges,
+        "cut_bytes": cut_bytes,
+        "cut_ms": cut_ms,
+        "loads_ms": loads,
+        "mem_bytes": mem,
+    }

@@ -51,22 +51,52 @@ class Policy:
 
 
 class EagerPolicy(Policy):
-    """Greedy work sharing: exploit any idle processor (paper §IV.C)."""
+    """Greedy work sharing: exploit any idle processor (paper §IV.C).
+
+    ``mem_aware=True`` (default) adds the capacity admission check on
+    platforms that declare memory budgets: an idle worker skips central-queue
+    tasks that no longer fit its node's free KV budget while some other live
+    class still could take them (overflow-bound tasks dispatch anyway and pay
+    the spill).  Capacity-free platforms behave exactly as before."""
 
     name = "eager"
 
+    def __init__(self, mem_aware: bool = True):
+        self.mem_aware = mem_aware
+
+    def on_idle(self, proc: Processor, sim: Sim) -> str | None:
+        if not self.mem_aware or not sim.platform.mem_capacity_bytes:
+            return super().on_idle(proc, sim)
+        for task in sim.central:
+            if sim.mem_fits(task, proc.cls):
+                return task
+            if not any(sim.mem_fits(task, c) for c in sim.platform.classes):
+                return task  # fits nowhere live: run here, spill pays
+        return None
+
 
 class DmdaPolicy(Policy):
-    """Data-aware earliest-estimated-completion assignment at ready time."""
+    """Data-aware earliest-estimated-completion assignment at ready time.
+
+    With ``mem_aware`` (default) and a capacity-declaring platform, workers
+    whose memory node cannot hold the task's footprint are excluded from the
+    ETA race unless no live worker fits — the same admission check the GP
+    flavours apply, keeping the five-policy comparison fair."""
 
     name = "dmda"
 
-    def __init__(self, decision_ms: float = 0.005):
+    def __init__(self, decision_ms: float = 0.005, mem_aware: bool = True):
         self.decision_ms = decision_ms
+        self.mem_aware = mem_aware
 
     def on_ready(self, task: str, sim: Sim) -> str:
+        procs = sim.platform.procs
+        if self.mem_aware and sim.platform.mem_capacity_bytes:
+            fitting = [p for p in procs if sim.mem_fits(task, p.cls)]
+            if fitting:
+                procs = fitting
         best_proc, best_eta = None, None
-        for p in sim.platform.procs:
+        for p in procs:
             nbytes = sim.missing_input_bytes(task, p.node)
             ttrans = sim.platform.link.transfer_ms(nbytes) if nbytes else 0.0
             texec = sim.exec_ms(task, p.cls)
@@ -91,18 +121,35 @@ class GpPolicy(Policy):
 
     def __init__(self, *, weight_source: str = "gpu", epsilon: float = 0.05,
                  seed: int = 1, targets: Mapping[str, float] | None = None,
-                 scale_by_workers: bool = False):
+                 scale_by_workers: bool = False,
+                 capacities: Mapping[str, float] | None = None,
+                 mem_aware: bool = True):
         """``scale_by_workers=False`` is the paper's literal Formula (1)/(2)
         (per-kernel times only); True additionally scales each class's share
         by its worker count (a natural extension when classes have several
-        independent workers — used by the TPU-group adaptation)."""
+        independent workers — used by the TPU-group adaptation).
+
+        ``capacities`` (class -> bytes) overrides the platform's declared
+        memory budgets; ``mem_aware=False`` partitions capacity-blind even on
+        a budgeted platform (the ablation baseline)."""
         self.weight_source = weight_source
         self.epsilon = epsilon
         self.seed = seed
         self.targets_override = dict(targets) if targets else None
         self.scale_by_workers = scale_by_workers
+        self.capacities_override = dict(capacities) if capacities else None
+        self.mem_aware = mem_aware
         self.assignment: dict[str, str] = {}
         self._rr: dict[str, int] = {}
+
+    def capacities_for(self, platform: Platform) -> dict[str, float] | None:
+        """Per-class memory budgets the partitioner must respect (None =
+        capacity-blind: no override, opted out, or an unbudgeted platform)."""
+        if self.capacities_override is not None:
+            return dict(self.capacities_override)
+        if not self.mem_aware or not platform.mem_capacity_bytes:
+            return None
+        return {c: platform.mem_cap_of(c) for c in platform.classes}
 
     def targets_for(self, g: TaskGraph, platform: Platform) -> dict[str, float]:
         """Formula (1)/(2) targets (or the override), optionally scaled by
@@ -129,7 +176,8 @@ class GpPolicy(Policy):
         self.assignment = partition_taskgraph(
             g, targets, weight_source=self.weight_source,
             edge_ms=lambda nb: link.transfer_ms(nb),
-            epsilon=self.epsilon, seed=self.seed, pin=pin)
+            epsilon=self.epsilon, seed=self.seed, pin=pin,
+            capacities=self.capacities_for(platform))
         self.targets = targets
         return (time.perf_counter() - t0) * 1e3
 

@@ -64,6 +64,9 @@ class StepReport:
     dropped: list
     added: list
     events_missed: list             # events past the interval's drain clock
+    spills: int = 0                 # completions past a group's KV budget
+    peak_mem_bytes: dict = dataclasses.field(default_factory=dict)
+    #                               # group -> peak resident bytes (KV)
 
 
 @dataclasses.dataclass
@@ -89,7 +92,15 @@ class ServeReport:
             decision_ms=self.total("decision_ms"),
             offline_ms=self.total("offline_ms"),
             aborted=int(self.total("redispatched") + self.total("reexecuted")),
+            spills=int(self.total("spills")),
         )
+
+    def peak_mem_bytes(self) -> dict[str, float]:
+        peaks: dict[str, float] = {}
+        for s in self.steps:
+            for grp, b in s.peak_mem_bytes.items():
+                peaks[grp] = max(peaks.get(grp, 0.0), b)
+        return peaks
 
     def to_dict(self) -> dict:
         classes: dict[str, list[float]] = {}
@@ -110,17 +121,22 @@ class ServeReport:
             "redispatched": int(self.total("redispatched")),
             "reexecuted": int(self.total("reexecuted")),
             "mean_kernel_ms": {c: sum(v) / len(v) for c, v in classes.items()},
+            "spills": int(self.total("spills")),
+            "peak_mem_bytes": self.peak_mem_bytes(),
         }
 
 
 @dataclasses.dataclass
 class _LiveState:
     """Duck-typed subset of :class:`repro.core.simulate.Sim` that the elastic
-    policy hooks (``on_worker_drop`` / ``on_worker_add``) consume."""
+    policy hooks (``on_worker_drop`` / ``on_worker_add``) consume, plus the
+    executor's live KV-residency ledger (group -> resident bytes)."""
 
     g: TaskGraph
     platform: Platform
     finished: set
+    resident: dict = dataclasses.field(default_factory=dict)
+    task_group: dict = dataclasses.field(default_factory=dict)
 
 
 def groups_for_platform(platform: Platform,
@@ -226,6 +242,10 @@ class ServingExecutor:
             in_flight = [n for n in session.pending()
                          if session.assignment.get(n) == proc.cls]
             session.evict_group(proc.cls)
+            # the group's KV residency is gone with its memory
+            state.resident[proc.cls] = 0.0
+            state.task_group = {n: grp for n, grp in state.task_group.items()
+                                if grp != proc.cls}
             assignment = getattr(policy, "assignment", {})
             session.reassign({n: assignment[n] for n in session.pending()
                               if n in assignment})
@@ -277,8 +297,7 @@ class ServingExecutor:
         # t<=0 events to demo the offline-restriction regime — a t<=0 event
         # here edits the platform *before* prepare: in a live system a worker
         # that left a previous interval is simply absent from this one.
-        platform = Platform(list(self.platform.procs), link=self.platform.link,
-                            host_node=self.platform.host_node)
+        platform = self.platform.copy()
         events = sorted(step.events or (), key=lambda e: e.t_ms)
         pre = [e for e in events if e.t_ms <= 0]
         timed = [e for e in events if e.t_ms > 0]
@@ -315,9 +334,19 @@ class ServingExecutor:
         clock = 0.0
         decision_ms = 0.0
         admitted_late = redispatched = 0
+        spills = 0
         dropped: list[str] = []
         added: list[str] = []
         cls_ms: dict[str, list[float]] = {}
+        peak_mem: dict[str, float] = {}
+        # request-granular KV lifetime: a chain's footprint frees when its
+        # whole request has executed (meta["req"], as in the simulator)
+        req_tasks: dict[str, list[str]] = {}
+        for n, k in g.nodes.items():
+            r = k.meta.get("req")
+            if r is not None:
+                req_tasks.setdefault(r, []).append(n)
+        req_left = {r: len(v) for r, v in req_tasks.items()}
         pending_events = list(timed)
         pending_admits = sorted(arrival_of.items(), key=lambda kv: (kv[1], kv[0]))
 
@@ -373,8 +402,32 @@ class ServingExecutor:
             # virtual clock advances by measured compute + modeled transfer
             clock += run.ms + (self.link.transfer_ms(run.nbytes)
                                if run.n_transfers else 0.0)
+            first = run.name not in state.finished
             state.finished.add(run.name)
-            op = g.nodes[run.name].op
+            kern = g.nodes[run.name]
+            r = kern.meta.get("req")
+            req_live = r is None or req_left.get(r, 0) > 0
+            # residency: add once per live block — a kernel re-executed after
+            # a group eviction re-homes its KV (its old entry was cleared
+            # with the dead group), but a block already accounted or whose
+            # request has retired must not inflate the ledger
+            if kern.mem_bytes and run.name not in state.task_group and req_live:
+                state.resident[run.group] = (state.resident.get(run.group, 0.0)
+                                             + kern.mem_bytes)
+                state.task_group[run.name] = run.group
+                peak_mem[run.group] = max(peak_mem.get(run.group, 0.0),
+                                          state.resident[run.group])
+                if (state.resident[run.group]
+                        > platform.mem_cap_of(run.group) + 1e-6):
+                    spills += 1
+            if first and r is not None and r in req_left:
+                req_left[r] -= 1
+                if req_left[r] == 0:  # request retired: free its KV
+                    for n in req_tasks[r]:
+                        grp = state.task_group.pop(n, None)
+                        if grp is not None:
+                            state.resident[grp] -= g.nodes[n].mem_bytes
+            op = kern.op
             self.cost_model.observe(op, self.side, run.group, run.ms)
             cls_ms.setdefault(run.group, []).append(run.ms)
             fire_due()
@@ -405,6 +458,8 @@ class ServingExecutor:
             dropped=dropped,
             added=added,
             events_missed=list(pending_events),
+            spills=spills,
+            peak_mem_bytes=peak_mem,
         )
 
     # -- whole stream ----------------------------------------------------------

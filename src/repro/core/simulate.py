@@ -11,7 +11,14 @@ Models exactly the effects the paper evaluates:
   no dual copy engines, §III.B);
 * transfer counting / byte accounting (the paper's second metric);
 * scheduling-decision overhead (paper §IV.D: dmda pays per-task decision time,
-  gp decides once offline).
+  gp decides once offline);
+* **discrete-memory capacity**: every class's memory node has a resident-byte
+  budget (``Platform.mem_capacity_bytes``); a kernel's ``mem_bytes`` is
+  reserved at dispatch, a request chain's KV footprint grows over its decode
+  chunks and frees when the whole request retires, and an overflow forces a
+  *spill* of the oldest finished resident block to the host over the bus
+  (counted in ``SimResult.spill_events`` / ``spilled_bytes``, with per-class
+  peaks in ``peak_mem_bytes``).
 
 The simulator also services the TPU adaptation: memory nodes = device groups,
 bus = inter-group link (ICI/DCN), workers = groups' compute streams.
@@ -52,6 +59,18 @@ class Platform:
     procs: list[Processor]
     link: Link = PCIE3_X16
     host_node: int = 0
+    # class -> total resident-memory budget in bytes (KV-cache capacity of
+    # that class's memory node); absent class = unconstrained.  The "second
+    # partition constraint" besides work balance.
+    mem_capacity_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def mem_cap_of(self, cls: str) -> float:
+        return self.mem_capacity_bytes.get(cls, float("inf"))
+
+    def copy(self) -> "Platform":
+        return Platform(list(self.procs), link=self.link,
+                        host_node=self.host_node,
+                        mem_capacity_bytes=dict(self.mem_capacity_bytes))
 
     @property
     def classes(self) -> list[str]:
@@ -80,14 +99,18 @@ def make_cpu_gpu_platform(n_cpu: int = 3, n_gpu: int = 1,
     return Platform(procs, link=link, host_node=0)
 
 
-def make_group_platform(group_sizes: Mapping[str, int], link: Link) -> Platform:
+def make_group_platform(group_sizes: Mapping[str, int], link: Link,
+                        mem_capacity_bytes: Mapping[str, float] | None = None,
+                        ) -> Platform:
     """TPU adaptation: one worker per device *group*; each group has its own
-    memory node; groups talk over ``link`` (the slow inter-group fabric)."""
+    memory node; groups talk over ``link`` (the slow inter-group fabric).
+    ``mem_capacity_bytes`` optionally budgets each group's HBM (KV capacity)."""
     procs = []
     for i, (cls, n) in enumerate(group_sizes.items()):
         for j in range(n):
             procs.append(Processor(f"{cls}.w{j}", cls, i))
-    return Platform(procs, link=link, host_node=0)
+    return Platform(procs, link=link, host_node=0,
+                    mem_capacity_bytes=dict(mem_capacity_bytes or {}))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +145,11 @@ class SimResult:
     #                           # (task, proc, start, abort_t) — killed by drops
     dropped_procs: list[str] = dataclasses.field(default_factory=list)
     added_procs: list[str] = dataclasses.field(default_factory=list)
+    # memory-capacity accounting (KV-cache pressure): spills are forced
+    # evictions to host when a class's resident bytes would exceed its budget
+    spill_events: int = 0
+    spilled_bytes: int = 0
+    peak_mem_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -136,9 +164,12 @@ class Sim:
         self.g = g
         # own copy of the proc list: dynamic events mutate it, and the caller's
         # Platform must stay reusable across runs (the arena shares one)
-        self.platform = Platform(list(platform.procs), link=platform.link,
-                                 host_node=platform.host_node)
+        self.platform = platform.copy()
         self.now = 0.0
+        # live KV residency per class: insertion-ordered block -> bytes (the
+        # order is the FIFO spill victim order); mem_load is the running sum
+        self.resident: dict[str, dict[str, int]] = {}
+        self.mem_load: dict[str, float] = {}
         self.proc_free = {p.name: 0.0 for p in platform.procs}
         self.proc_queue: dict[str, deque] = {p.name: deque() for p in platform.procs}
         self.central: deque = deque()
@@ -166,6 +197,14 @@ class Sim:
 
     def exec_ms(self, task: str, cls: str) -> float:
         return self.g.nodes[task].cost_on(cls)
+
+    # -- memory-capacity helpers (policies' admission checks) -----------------
+    def mem_free(self, cls: str) -> float:
+        """Free KV-cache budget on ``cls``'s memory node (inf = uncapped)."""
+        return self.platform.mem_cap_of(cls) - self.mem_load.get(cls, 0.0)
+
+    def mem_fits(self, task: str, cls: str) -> bool:
+        return self.g.nodes[task].mem_bytes <= self.mem_free(cls) + 1e-6
 
 
 def simulate(g: TaskGraph, policy, platform: Platform, *,
@@ -195,7 +234,19 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
     pred_count = {n: len(g.predecessors(n)) for n in g.nodes}
     n_tasks = len(g.nodes)
 
-    metrics = dict(n_transfers=0, bytes=0, tbusy=0.0, overhead=0.0)
+    metrics = dict(n_transfers=0, bytes=0, tbusy=0.0, overhead=0.0,
+                   spills=0, spilled=0)
+    peak_mem: dict[str, float] = {}
+    # KV-residency grouping: a request chain's footprint stays resident until
+    # the whole request retires (kernels tagged meta["req"]); ungrouped blocks
+    # free once every consumer has finished (plain dataflow buffer lifetime)
+    req_of = {n: k.meta.get("req") for n, k in g.nodes.items()}
+    req_tasks: dict = {}
+    for n, r in req_of.items():
+        if r is not None:
+            req_tasks.setdefault(r, []).append(n)
+    req_left = {r: len(ts) for r, ts in req_tasks.items()}
+    block_cls: dict[str, str] = {}  # resident block -> class holding it
     busy = {p.name: 0.0 for p in platform.procs}
     per_class: dict[str, int] = {}
     trace: list[tuple | None] = []       # None = slot voided by an abort
@@ -262,9 +313,58 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             return None
         return ent.get(node)
 
+    def mem_spill(cls: str, need: int, t: float, protect: str):
+        """Forced KV eviction: push oldest finished-resident blocks of ``cls``
+        to the host over the bus until ``need`` bytes fit.  The class's copy
+        is invalidated, so a later consumer pays the transfer back."""
+        res = sim.resident.get(cls, {})
+        cap = platform.mem_cap_of(cls)
+        for block in list(res):
+            if sim.mem_load.get(cls, 0.0) + need <= cap + 1e-6:
+                break
+            if block == protect or block not in sim.finished:
+                continue
+            nb = res.pop(block)
+            sim.mem_load[cls] -= nb
+            block_cls.pop(block, None)
+            ts = max(sim.bus_free, t)
+            te = ts + platform.link.transfer_ms(nb)
+            sim.bus_free = te
+            metrics["spills"] += 1
+            metrics["spilled"] += nb
+            metrics["tbusy"] += te - ts
+            # only this class's memory-node copy is evicted; other nodes keep
+            # theirs, and the host gains one (at the earlier of any existing
+            # host copy and this spill's completion)
+            node = next((p.node for p in platform.procs if p.cls == cls), None)
+            ent = sim.valid.setdefault(block, {})
+            if node is not None:
+                ent.pop(node, None)
+            ent.setdefault(platform.host_node, te)
+
+    def mem_add(cls: str, block: str, nb: int, t: float):
+        """Reserve ``nb`` resident bytes on ``cls`` for ``block`` (spilling
+        first if the budget would overflow); tracks the per-class peak."""
+        if nb <= 0:
+            return
+        if sim.mem_load.get(cls, 0.0) + nb > platform.mem_cap_of(cls) + 1e-6:
+            mem_spill(cls, nb, t, protect=block)
+        res = sim.resident.setdefault(cls, {})
+        res[block] = res.get(block, 0) + nb
+        sim.mem_load[cls] = sim.mem_load.get(cls, 0.0) + nb
+        block_cls[block] = cls
+        peak_mem[cls] = max(peak_mem.get(cls, 0.0), sim.mem_load[cls])
+
+    def mem_remove(block: str):
+        cls = block_cls.pop(block, None)
+        if cls is None:
+            return
+        sim.mem_load[cls] -= sim.resident[cls].pop(block, 0)
+
     def start_task(proc: Processor, task: str, t: float):
         """Reserve bus for missing inputs, then run. Returns finish time."""
         arrival = t
+        mem_add(proc.cls, task, g.nodes[task].mem_bytes, t)
         for pred in g.predecessors(task):
             e = g.edge(pred, task)
             # each entry kernel's host input is its OWN block (paper §III.B:
@@ -357,6 +457,7 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
                 busy[pname] -= finish - start
                 per_class[proc.cls] -= 1
                 aborted.append((task, pname, start, t))
+                mem_remove(task)  # its KV reservation re-reserves on restart
                 orphans.insert(0, task)
         hook = getattr(policy, "on_worker_drop", None)
         if hook is not None:
@@ -419,6 +520,19 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             sim.valid.setdefault(task, {})[proc.node] = t
             done += 1
             makespan = max(makespan, t)
+            # KV lifetime: a request's footprint frees when its whole chain
+            # retires; ungrouped blocks free once every consumer finished
+            r = req_of.get(task)
+            if r is not None:
+                req_left[r] -= 1
+                if req_left[r] == 0:
+                    for m in req_tasks[r]:
+                        mem_remove(m)
+            else:
+                for p in g.predecessors(task):
+                    if req_of.get(p) is None and all(
+                            s in sim.finished for s in g.successors(p)):
+                        mem_remove(p)
             for s in g.successors(task):
                 pred_count[s] -= 1
                 if pred_count[s] == 0:
@@ -447,4 +561,7 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         aborted=aborted,
         dropped_procs=dropped,
         added_procs=added,
+        spill_events=metrics["spills"],
+        spilled_bytes=metrics["spilled"],
+        peak_mem_bytes=peak_mem,
     )

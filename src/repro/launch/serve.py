@@ -117,12 +117,16 @@ def request_dag(n_requests: int, decode_chunks: int, *, prefill_ms_big: float,
     return g
 
 
-def heterogeneous_platform(link_gbps: float = 6.25) -> Platform:
-    """A big pod (fast class) + a small pod (slow class) over DCN."""
+def heterogeneous_platform(link_gbps: float = 6.25,
+                           mem_capacity_bytes: dict | None = None) -> Platform:
+    """A big pod (fast class) + a small pod (slow class) over DCN.
+    ``mem_capacity_bytes`` optionally budgets each pod's KV capacity
+    (class -> bytes), turning memory pressure on in the simulator."""
     procs = [Processor("big0", "big", 0), Processor("small0", "small", 1),
              Processor("small1", "small", 1)]
     return Platform(procs, link=Link("dcn", bw=link_gbps * 1e9,
-                                     latency_ms=0.05), host_node=0)
+                                     latency_ms=0.05), host_node=0,
+                    mem_capacity_bytes=dict(mem_capacity_bytes or {}))
 
 
 def _policy_kwargs(scheduler: str) -> dict:

@@ -1,0 +1,313 @@
+"""Multi-constraint (memory-capacity) partitioning core.
+
+Plain pytest — must run without hypothesis (the tier-1 floor).  Randomized
+coverage uses the repo's own deterministic LCG over many seeds instead.
+"""
+
+import math
+
+import pytest
+
+from repro.core.arena import make_request_stream
+from repro.core.graph import Kernel, TaskGraph
+from repro.core.online import IncrementalGpPolicy, OnlinePartitioner
+from repro.core.partition import (
+    UGraph,
+    _lcg,
+    partition_indices,
+    partition_taskgraph,
+    weight_graph_of,
+)
+from repro.core.schedulers import make_policy
+from repro.core.simulate import Platform, Processor, simulate
+
+KV = 1 << 20
+
+
+def _random_ugraph(n, seed, p_edge=0.25):
+    rnd = _lcg(seed)
+    nw = [1.0 + rnd(100) / 25.0 for _ in range(n)]
+    nm = [1.0 + rnd(10) for _ in range(n)]
+    adj = [dict() for _ in range(n)]
+    for u in range(n):
+        for v in range(u + 1, n):
+            if rnd(100) < p_edge * 100:
+                w = 1.0 + rnd(50)
+                adj[u][v] = w
+                adj[v][u] = w
+    return UGraph(nw, adj, nm)
+
+
+def _part_mem(g, part, k):
+    pm = [0.0] * k
+    for u in range(g.n):
+        pm[part[u]] += g.nm[u]
+    return pm
+
+
+# -- partition_indices never exceeds capacity vectors -------------------------
+
+
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("k", (2, 3))
+def test_partition_respects_capacity_vectors(seed, k):
+    """Feasible random instances: no part ever exceeds its memory budget."""
+    n = 16 + (seed % 3) * 12
+    g = _random_ugraph(n, seed)
+    total_m = g.total_m()
+    # binding but feasible: 120% of a proportional split per part, and every
+    # node fits each part's budget with room to spare
+    caps = [1.2 * total_m / k] * k
+    assert max(g.nm) < min(caps) / 2
+    part = partition_indices(g, [1.0 / k] * k, seed=seed, capacities=caps)
+    assert len(part) == n and all(0 <= p < k for p in part)
+    pm = _part_mem(g, part, k)
+    for p in range(k):
+        assert pm[p] <= caps[p] + 1e-6, (seed, k, pm, caps)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_partition_respects_asymmetric_capacities(seed):
+    """The bench scenario shape: the dominant-work part gets the small
+    budget, so capacity must win against the balance pull."""
+    g = _random_ugraph(24, seed)
+    total_m = g.total_m()
+    caps = [0.45 * total_m, 0.80 * total_m]
+    part = partition_indices(g, [0.7, 0.3], seed=seed, capacities=caps)
+    pm = _part_mem(g, part, 2)
+    assert pm[0] <= caps[0] + 1e-6
+    assert pm[1] <= caps[1] + 1e-6
+
+
+def test_capacity_none_matches_scalar_behaviour():
+    """Without capacities the memory dimension must not change results."""
+    g = _random_ugraph(30, 3)
+    scalar = UGraph(list(g.nw), [dict(a) for a in g.adj])
+    a = partition_indices(g, [0.5, 0.5], seed=1)
+    b = partition_indices(scalar, [0.5, 0.5], seed=1)
+    assert a == b
+
+
+def test_taskgraph_capacities_end_to_end():
+    """partition_taskgraph(capacities=...) respects per-class budgets."""
+    g = TaskGraph()
+    for i in range(20):
+        g.add(
+            f"k{i}",
+            op="decode",
+            costs={"big": 4.0, "small": 12.0},
+            mem_bytes=KV,
+        )
+        if i:
+            g.add_edge(f"k{i - 1}", f"k{i}", nbytes=KV)
+    caps = {"big": 9 * KV, "small": 20 * KV}
+    asg = partition_taskgraph(
+        g, {"big": 0.7, "small": 0.3}, weight_source="min", capacities=caps
+    )
+    mem = {"big": 0, "small": 0}
+    for n in g.nodes:
+        mem[asg[n]] += KV
+    assert mem["big"] <= caps["big"]
+    assert mem["small"] <= caps["small"]
+
+
+def test_weight_graph_of_carries_mem_dimension():
+    g = TaskGraph()
+    g.add("a", costs={"x": 1.0}, mem_bytes=64)
+    g.add("b", costs={"x": 2.0}, mem_bytes=128)
+    g.add_edge("a", "b", nbytes=8)
+    ug, names = weight_graph_of(g, weight_source="min")
+    assert ug.nm == [64.0, 128.0]
+    g2 = TaskGraph()
+    g2.add("a", costs={"x": 1.0})
+    ug2, _ = weight_graph_of(g2, weight_source="min")
+    assert ug2.nm is None  # no footprints declared -> scalar behaviour
+
+
+# -- OnlinePartitioner residency accounting -----------------------------------
+
+
+def _brute_mem(part):
+    out = {}
+    for n, k in part.g.nodes.items():
+        c = part.assignment[n]
+        out[c] = out.get(c, 0.0) + float(k.mem_bytes)
+    return out
+
+
+def _assert_exact(part):
+    got = part.mem_loads()
+    want = _brute_mem(part)
+    for c in set(got) | set(want):
+        assert got.get(c, 0.0) == pytest.approx(want.get(c, 0.0)), c
+
+
+def _add_chain(part, rid, n, mem=KV):
+    prev = None
+    for c in range(n):
+        name = f"r{rid}.d{c}"
+        deps = [(prev, KV)] if prev else []
+        part.add_task(
+            Kernel(
+                name,
+                op="decode",
+                costs={"big": 4.0, "small": 12.0},
+                mem_bytes=mem,
+                meta={"req": f"r{rid}"},
+            ),
+            deps,
+        )
+        prev = name
+
+
+def test_residency_exact_across_adds_and_retires():
+    part = OnlinePartitioner(
+        {"big": 0.6, "small": 0.4},
+        capacities={"big": 40 * KV, "small": 60 * KV},
+        edge_ms=lambda nb: nb / 6.25e9 * 1e3,
+    )
+    for rid in range(10):
+        _add_chain(part, rid, 4)
+        _assert_exact(part)
+    for rid in range(5):
+        for c in range(4):
+            part.retire_task(f"r{rid}.d{c}")
+            _assert_exact(part)
+    assert sum(part.mem_loads().values()) == pytest.approx(5 * 4 * KV)
+
+
+def test_residency_exact_across_worker_drop():
+    part = OnlinePartitioner(
+        {"big": 0.6, "small": 0.4},
+        capacities={"big": 80 * KV, "small": 80 * KV},
+        edge_ms=lambda nb: nb / 6.25e9 * 1e3,
+    )
+    for rid in range(8):
+        _add_chain(part, rid, 4)
+    # the whole "big" pod leaves: evacuate, budgets leave with the class
+    part.set_targets(
+        {"big": 0.0, "small": 1.0},
+        capacities={"small": 200 * KV},
+        reason="big died",
+    )
+    _assert_exact(part)
+    assert part.mem_loads().get("big", 0.0) == 0.0
+    assert part.mem_overflow() == 0.0
+
+
+def test_capacity_pressure_triggers_refinement_and_stays_feasible():
+    caps = {"big": 12 * KV, "small": 30 * KV}
+    part = OnlinePartitioner(
+        {"big": 0.75, "small": 0.25},
+        capacities=caps,
+        edge_ms=lambda nb: nb / 6.25e9 * 1e3,
+    )
+    for rid in range(10):
+        _add_chain(part, rid, 4)
+    loads = part.mem_loads()
+    assert loads["big"] <= caps["big"] + 1e-6
+    assert loads["small"] <= caps["small"] + 1e-6
+    assert part.mem_overflow() == 0.0
+    _assert_exact(part)
+
+
+# -- memory-capped Formula (1)/(2) targets ------------------------------------
+
+
+def test_targets_capped_by_free_memory():
+    g = TaskGraph()
+    for i in range(10):
+        g.add(
+            f"k{i}",
+            op="decode",
+            costs={"big": 4.0, "small": 12.0},
+            mem_bytes=10 * KV,
+        )
+    plat = Platform(
+        [Processor("big0", "big", 0), Processor("small0", "small", 1)],
+        mem_capacity_bytes={"big": 40 * KV, "small": 200 * KV},
+    )
+    pol = IncrementalGpPolicy()
+    targets = pol._targets_for(g, plat)
+    # static Formula (1)/(2) wants big=0.75; its capacity share is 0.4
+    assert targets["big"] == pytest.approx(0.4)
+    assert targets["small"] == pytest.approx(0.6)
+    assert sum(targets.values()) == pytest.approx(1.0)
+
+
+def test_targets_untouched_without_pressure():
+    g = TaskGraph()
+    for i in range(4):
+        g.add(f"k{i}", op="decode", costs={"big": 4.0, "small": 12.0})
+    plat = Platform(
+        [Processor("big0", "big", 0), Processor("small0", "small", 1)],
+        mem_capacity_bytes={"big": 100 * KV, "small": 100 * KV},
+    )
+    pol = IncrementalGpPolicy()
+    targets = pol._targets_for(g, plat)
+    assert targets["big"] == pytest.approx(0.75)
+
+
+# -- simulator spill accounting + end-to-end policy comparison ----------------
+
+
+def _pressure_setup(ratio=0.9, seed=0):
+    stream = make_request_stream(
+        2,
+        base_requests=8,
+        decode_chunks=4,
+        churn=0.3,
+        kv_bytes=KV,
+        seed=seed,
+    )
+    demand = max(s.graph.total_mem_bytes() for s in stream)
+    caps = {"big": 0.4 * demand / ratio, "small": 0.6 * demand / ratio}
+    plat = Platform(
+        [
+            Processor("big0", "big", 0),
+            Processor("small0", "small", 1),
+            Processor("small1", "small", 1),
+        ],
+        mem_capacity_bytes=caps,
+    )
+    return stream, plat
+
+
+def test_blind_policy_overflows_aware_does_not():
+    stream, plat = _pressure_setup()
+    blind = make_policy("incremental-gp", scale_by_workers=True, mem_aware=False)
+    aware = make_policy("incremental-gp", scale_by_workers=True)
+    blind_spills = aware_spills = 0
+    for s in stream:
+        blind_spills += simulate(s.graph, blind, plat).spill_events
+        aware_spills += simulate(s.graph, aware, plat).spill_events
+    assert blind_spills > 0
+    assert aware_spills == 0
+
+
+def test_simulator_tracks_peak_and_spilled_bytes():
+    stream, plat = _pressure_setup()
+    pol = make_policy("eager", mem_aware=False)
+    r = simulate(stream[0].graph, pol, plat)
+    assert r.peak_mem_bytes  # residency observed on at least one class
+    for cls, peak in r.peak_mem_bytes.items():
+        assert peak > 0
+    if r.spill_events:
+        assert r.spilled_bytes > 0
+    # spilled blocks are gone from residency: peak never exceeds cap by more
+    # than one chain's worth of reservation racing the spill
+    assert math.isfinite(r.makespan_ms) and r.makespan_ms > 0
+
+
+def test_uncapped_platform_never_spills():
+    stream, _ = _pressure_setup()
+    plat = Platform(
+        [
+            Processor("big0", "big", 0),
+            Processor("small0", "small", 1),
+            Processor("small1", "small", 1),
+        ]
+    )
+    pol = make_policy("eager")
+    r = simulate(stream[0].graph, pol, plat)
+    assert r.spill_events == 0 and r.spilled_bytes == 0
