@@ -1,0 +1,176 @@
+"""Compute/transfer overlap sweep: overlap-on vs overlap-off makespan.
+
+The axis is the paper's Fig. 3 ratio — how transfer-heavy a kernel stream is
+(per-hop transfer time / per-hop compute time).  The workload forces a cut on
+every hop: parallel request chains whose kernels alternate their cheap class,
+pinned alternately, so every dependency crosses the inter-class link.  That
+is the worst case for a single serialized bus and exactly the case the
+:class:`~repro.core.comm.CommEngine` exists for: with per-link lanes and
+prefetch, the cut-edge transfers hide under the previous kernels' compute.
+
+Acceptance (``--check``):
+
+* overlap NEVER regresses: at every ratio, overlapped makespan <= serialized
+  makespan (compute-bound streams lose nothing);
+* at transfer-heavy ratios (>= 0.5) overlap wins by at least 10%.
+
+Everything is deterministic (no RNG at all).  Usage::
+
+    PYTHONPATH=src python -m benchmarks.comm_overlap_bench [--quick]
+        [--out BENCH_comm_overlap.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.comm import Topology
+from repro.core.cost import Link
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import Policy
+from repro.core.simulate import Platform, Processor, Sim, simulate
+
+from .common import emit
+
+COMPUTE_MS = 4.0
+LINK_BW = 2e9  # bytes/s on the inter-class link
+WIN_RATIO = 0.5  # ratios at or above this must win >= WIN_MIN
+WIN_MIN = 0.10
+
+
+class PinnedPolicy(Policy):
+    """Fixed kernel -> class placement (the ablation isolates the comm
+    engine: same placement, overlap on vs off)."""
+
+    name = "pinned"
+
+    def __init__(self, assignment: dict[str, str]):
+        self.assignment = dict(assignment)
+
+    def on_ready(self, task: str, sim: Sim) -> str:
+        workers = sim.platform.workers_of(self.assignment[task])
+        w = min(workers, key=lambda p: (sim.est_proc_avail[p.name], p.name))
+        sim.est_proc_avail[w.name] = (
+            max(sim.est_proc_avail[w.name], sim.now) + sim.exec_ms(task, w.cls)
+        )
+        return w.name
+
+
+def build_workload(n_chains: int, length: int, ratio: float):
+    """Alternating-class chains with per-hop transfer = ratio * compute."""
+    nbytes = max(1, int(ratio * COMPUTE_MS / 1e3 * LINK_BW))
+    g = TaskGraph()
+    assignment: dict[str, str] = {}
+    for c in range(n_chains):
+        prev = None
+        for i in range(length):
+            name = f"c{c}.k{i}"
+            cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+            g.add(
+                name,
+                op="decode",
+                costs={cheap: COMPUTE_MS, dear: 10 * COMPUTE_MS},
+                out_bytes=nbytes,
+            )
+            assignment[name] = cheap
+            if prev is not None:
+                g.add_edge(prev, name, nbytes=nbytes)
+            prev = name
+    g.validate()
+    return g, assignment
+
+
+def make_platform(lanes: int = 2) -> Platform:
+    link = Link("xclass", bw=LINK_BW, latency_ms=0.01)
+    return Platform(
+        [Processor("a0", "a", 0), Processor("b0", "b", 1)],
+        link=link,
+        host_node=0,
+        topology=Topology.dedicated(link, lanes=lanes),
+    )
+
+
+def run_ratio(ratio: float, n_chains: int, length: int) -> dict:
+    g, assignment = build_workload(n_chains, length, ratio)
+    plat = make_platform()
+    serial = simulate(g, PinnedPolicy(assignment), plat, overlap=False)
+    overlapped = simulate(g, PinnedPolicy(assignment), plat, overlap=True)
+    win = 1.0 - overlapped.makespan_ms / serial.makespan_ms
+    return {
+        "ratio": ratio,
+        "serialized_ms": serial.makespan_ms,
+        "overlapped_ms": overlapped.makespan_ms,
+        "win": win,
+        "transfers": overlapped.n_transfers,
+        "prefetched": overlapped.n_prefetched,
+        "lane_busy_ms": overlapped.lane_busy_ms,
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        r, win = row["ratio"], row["win"]
+        if row["overlapped_ms"] > row["serialized_ms"] + 1e-6:
+            failures.append(
+                f"ratio {r}: overlap REGRESSED "
+                f"({row['overlapped_ms']:.1f} > {row['serialized_ms']:.1f} ms)"
+            )
+        if r >= WIN_RATIO - 1e-9 and win < WIN_MIN:
+            failures.append(
+                f"ratio {r}: overlap won only {win:.1%} (need >= {WIN_MIN:.0%})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true", help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    ratios = (0.1, 0.5, 1.0) if args.quick else (0.05, 0.1, 0.25, 0.5, 1.0, 2.0)
+    n_chains, length = (6, 5) if args.quick else (8, 6)
+
+    rows = [run_ratio(r, n_chains, length) for r in ratios]
+    print(f"{'ratio':>6}  {'serial_ms':>10}  {'overlap_ms':>10}  {'win':>6}")
+    for row in rows:
+        print(
+            f"{row['ratio']:>6.2f}  {row['serialized_ms']:>10.1f}  "
+            f"{row['overlapped_ms']:>10.1f}  {row['win']:>6.1%}"
+        )
+        emit(
+            f"comm_overlap.r{row['ratio']}.win",
+            f"{row['win']:.3f}",
+            f"serial_ms={row['serialized_ms']:.1f};"
+            f"overlap_ms={row['overlapped_ms']:.1f};"
+            f"prefetched={row['prefetched']}",
+        )
+
+    if args.out:
+        doc = {
+            "meta": {"n_chains": n_chains, "length": length, "quick": args.quick},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[comm-overlap] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[comm-overlap] FAIL: {msg}")
+        if failures:
+            return 1
+        print(
+            "[comm-overlap] PASS: overlap never regresses; "
+            f">= {WIN_MIN:.0%} win at transfer-heavy ratios"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

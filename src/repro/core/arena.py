@@ -73,12 +73,17 @@ class SchedulerArena:
         self.results: dict[str, list[SimResult]] = {}
         self.reports: dict = {}   # policy -> ServeReport (run_executed)
 
-    def run(self, stream: Sequence[ArenaStep]) -> list[ArenaRow]:
+    def run(self, stream: Sequence[ArenaStep], *,
+            overlap: bool = True) -> list[ArenaRow]:
+        """``overlap=False`` replays the stream with transfers serialized at
+        task start (the paper's single-copy-engine semantics) — the ablation
+        axis ``benchmarks/comm_overlap_bench.py`` sweeps."""
         rows = []
         for name, factory in self.factories.items():
             pol = factory()  # one instance for the whole stream (stateful)
             results = [simulate(s.graph, pol, self.platform,
-                                arrivals=s.arrivals, events=s.events)
+                                arrivals=s.arrivals, events=s.events,
+                                overlap=overlap)
                        for s in stream]
             self.results[name] = results
             total_mk = sum(r.makespan_ms for r in results)

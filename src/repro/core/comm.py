@@ -1,0 +1,302 @@
+"""Topology-aware communication engine: per-link transfer lanes.
+
+The paper's platform model (§IV) is a single PCIe bus with one copy engine,
+and until this module both backends mirrored it: the simulator kept one FIFO
+``bus_free`` clock and the executor serialized modeled transfer time onto its
+virtual clock.  Real heterogeneous fabrics are not one bus: host<->accelerator
+and accelerator<->accelerator links have distinct bandwidths and latencies
+(PCIe vs ICI vs DCN), links have *multiple* concurrent copy engines (lanes),
+and a transfer in flight on one link does not serialize against compute or
+against traffic on another link.
+
+Two pieces, shared by the simulator and the real-device executor — one
+communication model, two backends:
+
+* :class:`Topology` — the link graph between memory nodes.  ``single_bus``
+  reproduces the paper (every node pair shares one link object, so all
+  transfers serialize through its lanes); ``dedicated`` gives every node pair
+  its own lane set; :meth:`~Topology.add_link` overrides individual pairs
+  (e.g. a fast host link next to a slow cross-pod DCN).
+* :class:`CommEngine` — an event-driven transfer scheduler over the
+  topology's lanes.  :meth:`~CommEngine.fetch` books one copy onto the
+  earliest-free lane of the right link and returns its completion time; the
+  caller owns data-validity bookkeeping (the simulator's ``valid`` map, the
+  session's virtual block times), the engine owns *when the wire is busy*.
+  Per-lane busy intervals never overlap — the conservation invariant
+  ``tests/test_comm.py`` checks.
+
+Transfers booked before their consumer runs (``kind="prefetch"``) are how
+compute/transfer overlap happens: the copy proceeds while the destination
+worker is still busy with the previous kernel, so the cut edges the
+graph-partition policy minimizes are exactly the transfers that can hide
+under compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .cost import Link
+
+REF_BYTES = 1 << 20  # representative block for relative link pricing
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One booked copy: ``block`` moved ``src`` -> ``dst`` on ``lane``."""
+
+    block: str
+    src: int
+    dst: int
+    nbytes: int
+    start: float
+    finish: float
+    lane: str
+    kind: str = "demand"  # "demand" | "prefetch" | "spill"
+
+
+class Topology:
+    """Per-link bandwidth/latency/lane model between memory nodes.
+
+    ``shared_bus=True`` (the paper's platform): every node pair resolves to
+    the ONE default link object, so all traffic serializes through its lanes.
+    ``shared_bus=False``: every node pair gets its own dedicated lane set of
+    the default link.  :meth:`add_link` overrides individual pairs either way
+    (host<->class and class<->class links with distinct speeds).
+    """
+
+    def __init__(
+        self,
+        default: Link,
+        *,
+        default_lanes: int = 1,
+        shared_bus: bool = True,
+    ):
+        if default_lanes < 1:
+            raise ValueError("a link needs at least one lane")
+        self.default = default
+        self.default_lanes = default_lanes
+        self.shared_bus = shared_bus
+        self._links: dict[tuple[int, int], tuple[str, Link, int]] = {}
+
+    @classmethod
+    def single_bus(cls, link: Link, *, lanes: int = 1) -> "Topology":
+        """The paper's model: one shared bus, ``lanes`` copy engines."""
+        return cls(link, default_lanes=lanes, shared_bus=True)
+
+    @classmethod
+    def dedicated(cls, link: Link, *, lanes: int = 1) -> "Topology":
+        """Every node pair gets its own ``lanes``-wide instance of ``link``."""
+        return cls(link, default_lanes=lanes, shared_bus=False)
+
+    def add_link(self, a: int, b: int, link: Link, *, lanes: int = 1) -> "Topology":
+        """Dedicated link between memory nodes ``a`` and ``b`` (symmetric).
+        Returns self, so topologies chain: ``Topology(...).add_link(...)``."""
+        if lanes < 1:
+            raise ValueError("a link needs at least one lane")
+        key = (min(a, b), max(a, b))
+        self._links[key] = (f"{link.name}:{key[0]}-{key[1]}", link, lanes)
+        return self
+
+    def copy(self) -> "Topology":
+        t = Topology(
+            self.default,
+            default_lanes=self.default_lanes,
+            shared_bus=self.shared_bus,
+        )
+        t._links = dict(self._links)
+        return t
+
+    # -- resolution ----------------------------------------------------------
+
+    def link_of(self, src: int, dst: int) -> tuple[str, Link, int]:
+        """(lane-group key, link, lanes) for a ``src`` -> ``dst`` copy."""
+        key = (min(src, dst), max(src, dst))
+        ent = self._links.get(key)
+        if ent is not None:
+            return ent
+        if self.shared_bus:
+            return (f"{self.default.name}:bus", self.default, self.default_lanes)
+        name = f"{self.default.name}:{key[0]}-{key[1]}"
+        return (name, self.default, self.default_lanes)
+
+    def links(self) -> list[tuple[str, Link, int]]:
+        """Every explicitly registered link plus the default."""
+        out = [(f"{self.default.name}:*", self.default, self.default_lanes)]
+        out.extend(self._links.values())
+        return out
+
+    # -- pricing -------------------------------------------------------------
+
+    def transfer_ms(
+        self, nbytes: int, src: int | None = None, dst: int | None = None
+    ) -> float:
+        """Transfer time over the actual ``src`` -> ``dst`` link; without
+        endpoints, the conservative worst-link price (the cut objective's
+        scalar: an edge must be priced before its endpoints' classes are
+        known, and the slowest link bounds what a cut can cost)."""
+        if src is None or dst is None:
+            return self.worst_ms(nbytes)
+        if src == dst:
+            return 0.0
+        _, link, _ = self.link_of(src, dst)
+        return link.transfer_ms(nbytes)
+
+    def worst_ms(self, nbytes: int) -> float:
+        return max(link.transfer_ms(nbytes) for _, link, _ in self.links())
+
+    def scale_matrix(
+        self, nodes: Sequence[int], ref_bytes: int = REF_BYTES
+    ) -> list[list[float]]:
+        """Relative cut-cost matrix for the partitioner: entry (i, j) is the
+        node_i <-> node_j transfer price of a representative block divided by
+        the worst-link price (diagonal 0 — same node, no transfer).  Edge
+        weights priced at the worst link times this matrix give link-aware
+        cut costs in the FM gain function."""
+        ref = self.worst_ms(ref_bytes)
+        k = len(nodes)
+        out = [[0.0] * k for _ in range(k)]
+        for i in range(k):
+            for j in range(k):
+                if nodes[i] == nodes[j]:
+                    continue
+                out[i][j] = self.transfer_ms(ref_bytes, nodes[i], nodes[j]) / ref
+        return out
+
+
+class CommEngine:
+    """Event-driven transfer scheduler over a :class:`Topology`'s lanes.
+
+    Pure resource model: :meth:`fetch` books one copy on the earliest-free
+    lane of the right link and returns its completion time.  Validity (which
+    node holds which block) is the caller's job — the simulator keeps its
+    ``valid`` map, the executor session its virtual block times — so the same
+    engine backs both without owning either's consistency protocol.
+    """
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self._lane_free: dict[str, list[float]] = {}
+        self.transfers: list[Transfer] = []
+        self.n_transfers = 0
+        self.n_prefetched = 0
+        self.bytes_transferred = 0
+        self.busy_ms = 0.0
+        self.kind_counts: dict[str, int] = {}
+        self.kind_bytes: dict[str, int] = {}
+
+    def fetch(
+        self,
+        block: str,
+        src: int,
+        dst: int,
+        nbytes: int,
+        *,
+        now: float,
+        src_ready: float = 0.0,
+        kind: str = "demand",
+        book_same_node: bool = False,
+    ) -> float:
+        """Book one ``src`` -> ``dst`` copy; returns its completion time.
+
+        The copy starts at max(now, source-ready, earliest-free lane of the
+        link) — a busy link queues the transfer, an idle one overlaps it with
+        whatever compute is running.  Same-node "copies" are free and not
+        booked, unless ``book_same_node`` forces the booking (spills from a
+        host-coresident memory node still cross a staging link)."""
+        if src == dst and not book_same_node:
+            return max(now, src_ready)
+        key, link, lanes = self.topo.link_of(src, dst)
+        frees = self._lane_free.setdefault(key, [0.0] * lanes)
+        lane_i = min(range(lanes), key=lambda i: (frees[i], i))
+        start = max(now, src_ready, frees[lane_i])
+        dur = link.transfer_ms(nbytes)
+        finish = start + dur
+        frees[lane_i] = finish
+        lane = f"{key}[{lane_i}]"
+        self.transfers.append(
+            Transfer(block, src, dst, nbytes, start, finish, lane, kind)
+        )
+        self.n_transfers += 1
+        if kind == "prefetch":
+            self.n_prefetched += 1
+        self.bytes_transferred += nbytes
+        self.busy_ms += dur
+        self.kind_counts[kind] = self.kind_counts.get(kind, 0) + 1
+        self.kind_bytes[kind] = self.kind_bytes.get(kind, 0) + nbytes
+        return finish
+
+    def lane_busy_ms(self) -> dict[str, float]:
+        """Total booked time per lane (conservation: sums to ``busy_ms``)."""
+        out: dict[str, float] = {}
+        for t in self.transfers:
+            out[t.lane] = out.get(t.lane, 0.0) + (t.finish - t.start)
+        return out
+
+    def lane_log(self) -> dict[str, list[Transfer]]:
+        """Per-lane transfer intervals in booking order (for invariants)."""
+        out: dict[str, list[Transfer]] = {}
+        for t in self.transfers:
+            out.setdefault(t.lane, []).append(t)
+        return out
+
+
+def platform_topology(platform) -> Topology:
+    """The platform's declared topology, or the paper's single shared bus
+    built from its ``link`` (back-compat: platforms predating topologies
+    behave exactly as before)."""
+    topo = getattr(platform, "topology", None)
+    if topo is not None:
+        return topo
+    return Topology.single_bus(platform.link)
+
+
+def class_nodes_of(platform) -> dict[str, int]:
+    """class -> memory-node id, for link-aware partition pricing."""
+    return {cls: platform.node_of_class(cls) for cls in platform.classes}
+
+
+def link_scale_matrix(
+    topo: Topology,
+    class_nodes: Sequence[int] | dict,
+    classes: Sequence[str],
+    ref_bytes: int = REF_BYTES,
+) -> list[list[float]] | None:
+    """Partitioner ``link_scale`` matrix over ``classes`` from an explicit
+    class -> node map.  ``None`` when every class pair rides the same link
+    (the scalar cut objective is exact).  Classes without a known node get
+    DISTINCT fresh node ids past every known node and link endpoint, so
+    unknown pairs price at the default link (never as free same-node, never
+    colliding with a real node's fast link)."""
+    known = dict(class_nodes)
+    endpoints = [n for pair in topo._links for n in pair]
+    fallback = max([*known.values(), *endpoints, 0]) + 1
+    nodes = [known.get(c, fallback + i) for i, c in enumerate(classes)]
+    scale = topo.scale_matrix(nodes, ref_bytes)
+    off = [scale[i][j] for i in range(len(nodes)) for j in range(len(nodes)) if i != j]
+    if not off or max(off) - min(off) < 1e-12:
+        return None
+    return scale
+
+
+def link_scale_for(
+    platform, classes: Sequence[str], ref_bytes: int = REF_BYTES
+) -> list[list[float]] | None:
+    """:func:`link_scale_matrix` over a platform's declared topology and
+    live class -> node map."""
+    return link_scale_matrix(
+        platform_topology(platform), class_nodes_of(platform), classes, ref_bytes
+    )
+
+
+__all__ = [
+    "CommEngine",
+    "Topology",
+    "Transfer",
+    "class_nodes_of",
+    "link_scale_for",
+    "link_scale_matrix",
+    "platform_topology",
+    "REF_BYTES",
+]

@@ -131,6 +131,9 @@ class AnalyticCostModel:
     # effective fraction of peak actually achieved per (class, op); defaults are
     # conservative textbook numbers, calibratable from measurements.
     efficiency: Mapping[tuple[str, str], float] = dataclasses.field(default_factory=dict)
+    # optional per-link topology (repro.core.comm.Topology): transfers are
+    # priced by the actual src->dst link instead of the one flat ``link``
+    topology: object | None = None
 
     def _eff(self, cls: str, op: str) -> float:
         return self.efficiency.get((cls, op), 0.6 if op == "matmul" else 0.9)
@@ -142,7 +145,15 @@ class AnalyticCostModel:
         t = max(flops / (p.peak_flops * eff), bytes_ / (p.mem_bw * eff)) * MS
         return t + p.overhead_ms
 
-    def transfer_ms(self, nbytes: int) -> float:
+    def transfer_ms(self, nbytes: int, src_node: int | None = None,
+                    dst_node: int | None = None) -> float:
+        """Transfer price.  With a ``topology`` and known endpoints this is
+        the actual src->dst link; endpoint-free calls price at the topology's
+        worst link (the scalar cut objective), or the flat ``link`` when no
+        topology is declared — the weight graphs emit per-edge *bytes* and
+        defer pricing here, so one graph serves every fabric."""
+        if self.topology is not None:
+            return self.topology.transfer_ms(nbytes, src_node, dst_node)
         return self.link.transfer_ms(nbytes)
 
     def weight_graph(self, g: TaskGraph, op_sizes: Mapping[str, int],
@@ -181,6 +192,7 @@ class MeasuredCostModel:
     impls: Mapping[str, Callable[[str, int], Callable[[], object]]]
     link: Link = PCIE3_X16
     repeats: int = 5
+    topology: object | None = None  # optional repro.core.comm.Topology
     _cache: dict = dataclasses.field(default_factory=dict)
 
     def observe(self, op: str, n: int, cls: str, ms: float, *,
@@ -212,7 +224,12 @@ class MeasuredCostModel:
             self._cache[key] = ts[len(ts) // 2]
         return self._cache[key]
 
-    def transfer_ms(self, nbytes: int) -> float:
+    def transfer_ms(self, nbytes: int, src_node: int | None = None,
+                    dst_node: int | None = None) -> float:
+        """Per-link pricing when a topology is declared (see
+        :meth:`AnalyticCostModel.transfer_ms`); flat ``link`` otherwise."""
+        if self.topology is not None:
+            return self.topology.transfer_ms(nbytes, src_node, dst_node)
         return self.link.transfer_ms(nbytes)
 
     def weight_graph(self, g: TaskGraph, op_sizes: Mapping[str, int],

@@ -13,6 +13,16 @@ threads + MSI, this does with JAX async dispatch + explicit ``device_put``:
 * JAX's async dispatch gives the overlap StarPU gets from worker threads;
   the final ``block_until_ready`` is the makespan barrier.
 
+With a :class:`~repro.core.comm.CommEngine` attached, the session *also*
+charges every transfer to the same per-link lane model the simulator uses —
+one communication model, two backends.  Each executed kernel gets a virtual
+start/finish on a two-resource timeline (per-group compute streams + comm
+lanes): compute starts when the group is free AND the inputs' modeled copies
+have landed, instead of serializing measured kernel time plus modeled
+transfer time on one clock.  Inputs of the next ready kernels are
+*prefetched* (real ``device_put`` + a ``kind="prefetch"`` lane booking), so
+cut-edge transfers hide under the previous kernel's compute.
+
 Two entry points:
 
 * :meth:`JaxExecutor.run` — one-shot batch execution (unchanged API);
@@ -24,6 +34,9 @@ Two entry points:
   any producer whose output a pending consumer still needs is transparently
   re-queued for re-execution — the executor-land analogue of the simulator's
   in-flight abort + re-dispatch on :class:`~repro.core.simulate.WorkerDrop`.
+  Prefetched-but-unconsumed copies targeting the dead group are discarded
+  from the consistency *and* the comm model, so the consumer's re-pull is
+  charged again (the transfer really does happen twice).
 
 On this 1-CPU container all groups alias one device (transfers are
 no-op-counted but still exercised); on a real slice, groups are disjoint
@@ -38,6 +51,8 @@ from typing import Iterable, Mapping
 
 import jax
 
+from .comm import CommEngine
+
 
 @dataclasses.dataclass
 class ExecResult:
@@ -50,6 +65,9 @@ class ExecResult:
     #                                   # kernel -> wall ms (time_kernels=True)
     reexecuted: list = dataclasses.field(default_factory=list)
     #                                   # kernels re-run after group eviction
+    model_makespan_ms: float = 0.0      # two-resource virtual-clock makespan
+    lane_busy_ms: dict = dataclasses.field(default_factory=dict)
+    n_prefetched: int = 0
 
 
 @dataclasses.dataclass
@@ -61,6 +79,8 @@ class KernelRun:
     ms: float            # wall ms (0.0 unless the session times kernels)
     n_transfers: int     # transfers this kernel's input gather caused
     nbytes: int          # bytes those transfers moved
+    t_start: float = 0.0     # virtual start (comm model attached)
+    t_finish: float = 0.0    # virtual finish (compute + overlapped transfers)
 
 
 class ExecSession:
@@ -70,12 +90,20 @@ class ExecSession:
     executes kernels in dependency order, one per :meth:`step`.  Between steps
     the caller may rewrite placements and apply platform churn — exactly what
     an online scheduling policy needs to co-drive real execution.
+
+    ``comm`` + ``group_nodes`` attach the shared communication model: every
+    pull books a lane on the actual src-node -> dst-node link and kernels get
+    virtual start/finish times with transfers overlapping compute
+    (``prefetch_depth`` next-ready kernels have their inputs staged early).
     """
 
     def __init__(self, executor: "JaxExecutor", g, assignment: Mapping[str, str],
                  inputs: Mapping[str, jax.Array] | None = None, *,
                  host_group: str | None = None, time_kernels: bool = False,
-                 gated: Iterable[str] = ()):
+                 gated: Iterable[str] = (),
+                 comm: CommEngine | None = None,
+                 group_nodes: Mapping[str, int] | None = None,
+                 prefetch_depth: int = 2):
         g.validate()
         self.ex = executor
         self.g = g
@@ -86,8 +114,21 @@ class ExecSession:
         # (online request streams: the task arrived in the revision but its
         # wall-clock arrival time has not passed yet)
         self.gated: set[str] = set(gated)
+        self.comm = comm
+        self.group_nodes = dict(group_nodes or {})
+        if comm is not None and not self.group_nodes:
+            raise ValueError("a comm model needs group_nodes (group -> node)")
+        self.prefetch_depth = prefetch_depth if comm is not None else 0
         self._inputs = dict(inputs or {})
         self.valid: dict[str, dict[str, jax.Array]] = {}  # block -> group -> arr
+        # virtual timeline (comm model): when a block's copy lands per group,
+        # when each group's compute stream frees, per-kernel earliest starts
+        self.vt_block: dict[tuple[str, str], float] = {}
+        self.group_free: dict[str, float] = {}
+        self.earliest: dict[str, float] = {}
+        self.vnow = 0.0
+        self.vmax = 0.0
+        self.prefetched: set[tuple[str, str]] = set()
         for name in self._inputs:
             self._seed(name)
         self.n_transfers = 0
@@ -103,11 +144,15 @@ class ExecSession:
 
     # -- state ---------------------------------------------------------------
 
+    def _node_of(self, group: str) -> int:
+        return self.group_nodes.get(group, 0)
+
     def _seed(self, block: str) -> None:
         """(Re-)materialize a host-resident input block on the host group."""
         dev = self.ex.groups[self.host_group]
         self.valid[block] = {self.host_group: jax.device_put(
             self._inputs[block], dev)}
+        self.vt_block[(block, self.host_group)] = 0.0
 
     def pending(self) -> list[str]:
         return [n for n in self._order if n not in self._done]
@@ -119,10 +164,15 @@ class ExecSession:
         """Rewrite placements for not-yet-executed kernels (policy refresh)."""
         self.assignment.update(mapping)
 
-    def admit(self, names) -> None:
+    def admit(self, names, at: float | None = None) -> None:
         """Lift the arrival gate from ``names`` (they become schedulable as
-        soon as their dependencies are satisfied)."""
+        soon as their dependencies are satisfied).  ``at`` floors their
+        virtual start at the admitting stream clock."""
+        names = list(names)
         self.gated.difference_update(names)
+        if at is not None:
+            for n in names:
+                self.earliest[n] = max(self.earliest.get(n, 0.0), at)
 
     def next_ready(self) -> str | None:
         for n in self._order:
@@ -132,6 +182,19 @@ class ExecSession:
                    for p in self.g.predecessors(n)):
                 return n
         return None
+
+    def _ready_next(self, count: int) -> list[str]:
+        """Up to ``count`` currently-ready kernels (prefetch targets)."""
+        out: list[str] = []
+        for n in self._order:
+            if n in self._done or n in self.gated:
+                continue
+            if all(p in self._done or self.g.nodes[p].op == "source"
+                   for p in self.g.predecessors(n)):
+                out.append(n)
+                if len(out) >= count:
+                    break
+        return out
 
     # -- eviction (worker-drop recovery) ---------------------------------------
 
@@ -150,7 +213,16 @@ class ExecSession:
         A block whose *last* copy lived there is lost; host input blocks are
         re-seeded from the caller's arrays, while kernel outputs still needed
         by a pending consumer force their producer (transitively) back onto
-        the queue.  Returns the kernels re-queued for re-execution."""
+        the queue.  Prefetched-but-unconsumed copies on the dead group are
+        discarded from the comm model too, so the consumer's re-pull books a
+        fresh transfer instead of riding a phantom one.  Returns the kernels
+        re-queued for re-execution."""
+        for block, grp in list(self.vt_block):
+            if grp == group:
+                del self.vt_block[(block, grp)]
+        for block, grp in list(self.prefetched):
+            if grp == group:
+                self.prefetched.discard((block, grp))
         lost: list[str] = []
         for block, ent in list(self.valid.items()):
             if ent.pop(group, None) is not None and not ent:
@@ -167,34 +239,77 @@ class ExecSession:
 
     # -- execution -------------------------------------------------------------
 
-    def _gather(self, name: str, grp: str, dev) -> tuple[list, int, int]:
-        """Pull input blocks for ``name`` onto ``grp``; returns (args, nt, nb)."""
-        args: list[jax.Array] = []
-        nt = nb = 0
+    def _input_keys(self, name: str) -> list[tuple[str, int]]:
+        """(block key, byte count) for every input of ``name``."""
+        out: list[tuple[str, int]] = []
         preds = self.g.predecessors(name)
-        keys: list[tuple[str, str | None]] = []
         if not preds and f"{name}/in" in self.valid:
-            keys.append((f"{name}/in", None))  # source-less entry kernel
+            out.append((f"{name}/in", 0))  # source-less entry kernel
         for pred in preds:
             # entry kernels read their seeded "<kernel>/in" block
-            key = (name + "/in" if self.g.nodes[pred].op == "source"
-                   else pred)
-            keys.append((key, pred))
-        for key, pred in keys:
+            if self.g.nodes[pred].op == "source":
+                out.append((name + "/in", 0))
+            else:
+                out.append((pred, self.g.edge(pred, name).nbytes))
+        return out
+
+    def _pull(self, key: str, nbytes: int, grp: str, dev, kind: str) -> int:
+        """Copy ``key`` onto ``grp`` if missing; returns bytes moved (0 when
+        already valid there).  Books the comm model + virtual block time."""
+        ent = self.valid.get(key)
+        if ent is None or grp in ent:
+            return 0
+        if self.comm is not None:
+            donor_grp = min(ent, key=lambda g: (self.vt_block.get((key, g), 0.0), g))
+        else:
+            donor_grp = next(iter(ent))
+        donor = ent[donor_grp]
+        ent[grp] = jax.device_put(donor, dev)
+        nb = nbytes or donor.size * donor.dtype.itemsize
+        if self.comm is not None:
+            te = self.comm.fetch(
+                key, self._node_of(donor_grp), self._node_of(grp), nb,
+                now=self.vnow,
+                src_ready=self.vt_block.get((key, donor_grp), 0.0),
+                kind=kind)
+            self.vt_block[(key, grp)] = te
+            if kind == "prefetch":
+                self.prefetched.add((key, grp))
+        return nb
+
+    def _gather(self, name: str, grp: str, dev) -> tuple[list, int, int, float]:
+        """Pull input blocks for ``name`` onto ``grp``.
+        Returns (args, n_transfers, nbytes, inputs-ready virtual time)."""
+        args: list[jax.Array] = []
+        nt = nb = 0
+        ready_vt = 0.0
+        for key, nbytes in self._input_keys(name):
             ent = self.valid.get(key)
             if ent is None:
                 continue
-            if grp not in ent:
-                donor = next(iter(ent.values()))
-                ent[grp] = jax.device_put(donor, dev)
+            moved = self._pull(key, nbytes, grp, dev, "demand")
+            if moved:
                 nt += 1
-                if pred is not None:
-                    nb += self.g.edge(pred, name).nbytes or (
-                        donor.size * donor.dtype.itemsize)
-                else:
-                    nb += donor.size * donor.dtype.itemsize
+                nb += moved
+            self.prefetched.discard((key, grp))
+            ready_vt = max(ready_vt, self.vt_block.get((key, grp), 0.0))
             args.append(ent[grp])
-        return args, nt, nb
+        return args, nt, nb, ready_vt
+
+    def _prefetch_ready(self) -> None:
+        """Stage inputs of the next ready kernels onto their assigned groups
+        while "now" is still this kernel's finish — the staged copies ride
+        comm lanes under the next kernels' compute."""
+        if self.comm is None or self.prefetch_depth <= 0:
+            return
+        for n in self._ready_next(self.prefetch_depth):
+            grp = self.assignment.get(n, self.host_group)
+            dev = self.ex.groups[grp]
+            for key, nbytes in self._input_keys(n):
+                moved = self._pull(key, nbytes, grp, dev, "prefetch")
+                if moved:
+                    self.n_transfers += 1
+                    self.nbytes += moved
 
     def step(self) -> KernelRun | None:
         """Execute the next ready kernel; ``None`` when the graph is drained."""
@@ -204,7 +319,7 @@ class ExecSession:
         k = self.g.nodes[name]
         grp = self.assignment.get(name, self.host_group)
         dev = self.ex.groups[grp]
-        args, nt, nb = self._gather(name, grp, dev)
+        args, nt, nb, ready_vt = self._gather(name, grp, dev)
         self.n_transfers += nt
         self.nbytes += nb
         if k.fn is None:
@@ -222,11 +337,21 @@ class ExecSession:
                 out.block_until_ready()
             ms = (time.perf_counter() - t0) * 1e3
             self.kernel_ms[name] = ms
+        vstart = vfinish = 0.0
+        if self.comm is not None:
+            vstart = max(self.group_free.get(grp, 0.0), ready_vt,
+                         self.earliest.get(name, 0.0))
+            vfinish = vstart + ms
+            self.group_free[grp] = vfinish
+            self.vnow = vfinish
+            self.vmax = max(self.vmax, vfinish)
+            self.vt_block[(name, grp)] = vfinish
         self.valid[name] = {grp: out}
         self.blocks[name] = out
         self.per_group[grp] = self.per_group.get(grp, 0) + 1
         self._done.add(name)
-        return KernelRun(name, grp, ms, nt, nb)
+        self._prefetch_ready()
+        return KernelRun(name, grp, ms, nt, nb, vstart, vfinish)
 
     def run_all(self) -> None:
         while self.step() is not None:
@@ -243,7 +368,12 @@ class ExecSession:
                           bytes_transferred=self.nbytes,
                           kernels_per_group=self.per_group,
                           kernel_ms=dict(self.kernel_ms),
-                          reexecuted=list(self.reexecuted))
+                          reexecuted=list(self.reexecuted),
+                          model_makespan_ms=self.vmax,
+                          lane_busy_ms=(self.comm.lane_busy_ms()
+                                        if self.comm else {}),
+                          n_prefetched=(self.comm.n_prefetched
+                                        if self.comm else 0))
 
 
 class JaxExecutor:
@@ -265,10 +395,14 @@ class JaxExecutor:
                 inputs: Mapping[str, jax.Array] | None = None, *,
                 host_group: str | None = None,
                 time_kernels: bool = False,
-                gated: Iterable[str] = ()) -> ExecSession:
+                gated: Iterable[str] = (),
+                comm: CommEngine | None = None,
+                group_nodes: Mapping[str, int] | None = None,
+                prefetch_depth: int = 2) -> ExecSession:
         return ExecSession(self, g, assignment, inputs,
                            host_group=host_group, time_kernels=time_kernels,
-                           gated=gated)
+                           gated=gated, comm=comm, group_nodes=group_nodes,
+                           prefetch_depth=prefetch_depth)
 
     def run(self, g, assignment: Mapping[str, str],
             inputs: Mapping[str, jax.Array] | None = None, *,

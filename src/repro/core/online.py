@@ -40,6 +40,7 @@ import math
 import time
 from typing import Callable, Mapping, Sequence
 
+from .comm import Topology, class_nodes_of, link_scale_matrix
 from .graph import Kernel, TaskGraph
 from .partition import (UGraph, _fm_refine, _repair_capacity, node_weight,
                         partition_indices, weight_graph_of)
@@ -82,6 +83,14 @@ class OnlinePartitioner:
     (:meth:`mem_loads`); capacity pressure is a refinement trigger of its own,
     and greedy placement / FM moves never breach a budget that any live class
     can still satisfy.
+
+    ``topology`` + ``class_nodes`` make the cut objective and the FM gain
+    link-aware: a cut edge is priced at the actual link between the two
+    classes' memory nodes (ICI cheap, DCN expensive) instead of one flat
+    ``edge_ms``.  ``reload_copies=True`` additionally counts cut KV edges'
+    duplicated bytes against the consumer class's budget — the
+    reload-accounting view (a block consumed across a cut is resident on
+    both sides), so capacity pressure anticipates spill reloads.
     """
 
     def __init__(self, targets: Mapping[str, float], *, epsilon: float = 0.05,
@@ -90,7 +99,10 @@ class OnlinePartitioner:
                  imbalance_trigger: float | None = None,
                  cut_trigger: float = 1.5,
                  pin: Mapping[str, str] | None = None,
-                 capacities: Mapping[str, float] | None = None):
+                 capacities: Mapping[str, float] | None = None,
+                 topology: Topology | None = None,
+                 class_nodes: Mapping[str, int] | None = None,
+                 reload_copies: bool = False):
         self.targets = _normalize(targets)
         self.epsilon = epsilon
         self.seed = seed
@@ -101,6 +113,9 @@ class OnlinePartitioner:
         self.cut_trigger = cut_trigger
         self.pin = dict(pin or {})
         self.capacities = dict(capacities or {})
+        self.topology = topology
+        self.class_nodes = dict(class_nodes or {})
+        self.reload_copies = reload_copies
         self.g = TaskGraph()
         self.assignment: dict[str, str] = {}
         self.history: list[RefineRecord] = []
@@ -157,6 +172,25 @@ class OnlinePartitioner:
         return max(self.edge_ms(nbytes) if self.edge_ms else float(nbytes),
                    1e-9)
 
+    def _cut_edge_ms(self, ca: str, cb: str, nbytes: int) -> float:
+        """Price of a cut edge between classes ``ca`` and ``cb`` — the actual
+        src->dst link when the topology is known, else the flat edge weight."""
+        if self.topology is not None:
+            na, nb = self.class_nodes.get(ca), self.class_nodes.get(cb)
+            if na is not None and nb is not None:
+                return max(self.topology.transfer_ms(nbytes, na, nb), 1e-9)
+        return self._edge_w(nbytes)
+
+    def _link_scale(self, classes: Sequence[str]) -> list[list[float]] | None:
+        """Relative link-cost matrix over ``classes`` for FM's gain function
+        (None when every class pair rides the same link — scalar exact).
+        Classes without a known node (e.g. stranded dead classes) price at
+        the default link via distinct fresh node ids (shared helper, same
+        semantics as the gp path)."""
+        if self.topology is None or not self.class_nodes:
+            return None
+        return link_scale_matrix(self.topology, self.class_nodes, classes)
+
     def _ugraph(self) -> tuple[UGraph, list[str]]:
         return weight_graph_of(self.g, weight_source=self.weight_source,
                                edge_ms=self.edge_ms)
@@ -189,9 +223,29 @@ class OnlinePartitioner:
     def cut(self) -> float:
         cut = 0.0
         for e in self.g.edges:
-            if self.assignment[e.src] != self.assignment[e.dst]:
-                cut += self._edge_w(e.nbytes)
+            ca, cb = self.assignment[e.src], self.assignment[e.dst]
+            if ca != cb:
+                cut += self._cut_edge_ms(ca, cb, e.nbytes)
         return cut
+
+    def cut_copy_bytes(self) -> dict[str, float]:
+        """Per-class bytes of KV blocks *duplicated* onto a consumer class by
+        cut edges: a block consumed across a cut is resident on both its
+        producer's class and the consumer's (the spill-reload view).  Counted
+        once per (producer, consumer-class) pair."""
+        extra: dict[str, float] = {}
+        seen: set[tuple[str, str]] = set()
+        for e in self.g.edges:
+            m = float(self.g.nodes[e.src].mem_bytes)
+            if m <= 0:
+                continue
+            ca = self.assignment.get(e.src)
+            cb = self.assignment.get(e.dst)
+            if ca is None or cb is None or ca == cb or (e.src, cb) in seen:
+                continue
+            seen.add((e.src, cb))
+            extra[cb] = extra.get(cb, 0.0) + m
+        return extra
 
     def mem_loads(self) -> dict[str, float]:
         """Exact live residency (bytes) per class — maintained incrementally
@@ -203,11 +257,17 @@ class OnlinePartitioner:
 
     def mem_overflow(self) -> float:
         """Worst per-class residency overflow above its budget, in bytes
-        (0 = every class within capacity, or no capacities declared)."""
+        (0 = every class within capacity, or no capacities declared).  With
+        ``reload_copies`` the duplicated bytes of cut KV edges count against
+        the consumer class too, so pressure anticipates spill reloads."""
         if not self.capacities:
             return 0.0
+        loads = dict(self._mem_loads)
+        if self.reload_copies:
+            for c, extra in self.cut_copy_bytes().items():
+                loads[c] = loads.get(c, 0.0) + extra
         return max(0.0, max((load - self._cap_of(c)
-                             for c, load in self._mem_loads.items()),
+                             for c, load in loads.items()),
                             default=0.0))
 
     # -- graph deltas --------------------------------------------------------
@@ -425,7 +485,7 @@ class OnlinePartitioner:
             part = _repair_capacity(ug, part, caps, locked=mask)
         part = _fm_refine(ug, part, [self.targets.get(c, 0.0) for c in classes],
                           self.epsilon, max_passes=2, locked=mask,
-                          mem_caps=caps)
+                          mem_caps=caps, link_scale=self._link_scale(classes))
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         self.assignment.update(self.pin)
         self._recount_mem()
@@ -441,9 +501,10 @@ class OnlinePartitioner:
         ug, names = self._ugraph()
         classes = list(self.targets)
         caps = self._caps_vector(classes)
+        scale = self._link_scale(classes)
         part = partition_indices(ug, [self.targets[c] for c in classes],
                                  epsilon=self.epsilon, seed=self.seed,
-                                 capacities=caps)
+                                 capacities=caps, link_scale=scale)
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         if self.pin:
             self.assignment.update(self.pin)
@@ -452,7 +513,7 @@ class OnlinePartitioner:
             mask = [n in self.pin for n in names]
             fixed = _fm_refine(ug, fixed, [self.targets[c] for c in classes],
                                self.epsilon, max_passes=2, locked=mask,
-                               mem_caps=caps)
+                               mem_caps=caps, link_scale=scale)
             self.assignment = {n: classes[fixed[i]] for i, n in enumerate(names)}
             self.assignment.update(self.pin)
         self._recount_mem()
@@ -490,11 +551,12 @@ class IncrementalGpPolicy(GpPolicy):
                  cut_trigger: float = 1.5, min_overlap: float = 0.5,
                  decision_ms: float = 0.0,
                  capacities: Mapping[str, float] | None = None,
-                 mem_aware: bool = True):
+                 mem_aware: bool = True, reload_aware: bool = True):
         super().__init__(weight_source=weight_source, epsilon=epsilon,
                          seed=seed, targets=targets,
                          scale_by_workers=scale_by_workers,
                          capacities=capacities, mem_aware=mem_aware)
+        self.reload_aware = reload_aware
         self.decision_ms = decision_ms
         self.imbalance_trigger = imbalance_trigger
         self.cut_trigger = cut_trigger
@@ -595,7 +657,8 @@ class IncrementalGpPolicy(GpPolicy):
                          if p.node == platform.host_node),
                         platform.procs[0].cls)
         pin = {n: host_cls for n, k in g.nodes.items() if k.op == "source"}
-        link = platform.link
+        topo = platform.topo
+        class_nodes = class_nodes_of(platform)
         p = self.partitioner
         overlap = 0.0
         if p is not None and g.num_nodes():
@@ -605,10 +668,11 @@ class IncrementalGpPolicy(GpPolicy):
             p = OnlinePartitioner(
                 targets, epsilon=self.epsilon, seed=self.seed,
                 weight_source=self.weight_source,
-                edge_ms=lambda nb: link.transfer_ms(nb),
+                edge_ms=lambda nb: topo.worst_ms(nb),
                 imbalance_trigger=self.imbalance_trigger,
                 cut_trigger=self.cut_trigger, pin=pin,
-                capacities=caps)
+                capacities=caps, topology=topo, class_nodes=class_nodes,
+                reload_copies=self.reload_aware and bool(caps))
             p.reset(g)
             self.partitioner = p
             self.stats["prepare_full"] += 1
@@ -616,6 +680,9 @@ class IncrementalGpPolicy(GpPolicy):
             carried = len(p.g.nodes.keys() & g.nodes.keys())
             p.pin = dict(pin)
             p.capacities = dict(caps or {})
+            p.topology = topo
+            p.class_nodes = dict(class_nodes)
+            p.reload_copies = self.reload_aware and bool(caps)
             p.ingest(g, targets=targets)
             self.stats["prepare_warm"] += 1
             self.stats["carried"] += carried
@@ -655,7 +722,9 @@ class IncrementalGpPolicy(GpPolicy):
                               for c in targets))
             if changed:
                 locked = set(sim.finished) & set(p.g.nodes)
-                # a class's memory budget joins/leaves with its workers
+                # a class's memory budget and link endpoints join/leave with
+                # its workers
+                p.class_nodes = class_nodes_of(sim.platform)
                 p.set_targets(targets, locked=locked, reason=reason,
                               capacities=self.capacities_for(sim.platform))
                 self.assignment.update(p.assignment)

@@ -81,13 +81,18 @@ class UGraph:
                 pm[part[u]] += self.nm[u]
         return pm
 
-    def edge_cut(self, part: list[int]) -> float:
+    def edge_cut(
+        self, part: list[int], link_scale: Sequence[Sequence[float]] | None = None
+    ) -> float:
+        """Total cut weight; with ``link_scale`` each cut edge is priced at
+        the relative cost of the link between its endpoints' parts (entry
+        (p, q) of the matrix, diagonal 0) — the topology-aware objective."""
         cut = 0.0
         for u in range(self.n):
             pu = part[u]
             for v, w in self.adj[u].items():
                 if v > u and part[v] != pu:
-                    cut += w
+                    cut += w if link_scale is None else w * link_scale[pu][part[v]]
         return cut
 
 
@@ -287,6 +292,7 @@ def _fm_refine(
     max_passes: int = 8,
     locked: Sequence[bool] | None = None,
     mem_caps: Sequence[float] | None = None,
+    link_scale: Sequence[Sequence[float]] | None = None,
 ) -> list[int]:
     """Boundary FM with best-prefix rollback, k-way (single-move granularity).
 
@@ -299,6 +305,12 @@ def _fm_refine(
     would exceed its memory budget is rejected outright (gain-ordered moves,
     capacity-vetoed) — the multi-constraint invariant: FM never *creates* a
     capacity violation.
+
+    Link awareness: with ``link_scale`` (k x k relative link costs, diagonal
+    0) the gain of a move prices every incident edge at the *actual* link
+    between its endpoints' parts, so FM prefers cutting edges across fast
+    links (ICI) over slow ones (DCN).  ``None`` keeps the uniform objective
+    (all cut edges cost their scalar weight) — exactly the old behaviour.
 
     ``locked[u]`` pins node u to its current partition (online refinement:
     already-executed or pinned tasks still contribute weight and edge gain but
@@ -326,6 +338,17 @@ def _fm_refine(
                 ext[pv] = ext.get(pv, 0.0) + w
         return ext, internal
 
+    def move_gain(ext: dict[int, float], internal: float, pu: int, to: int) -> float:
+        """Cut-cost reduction of moving a node from ``pu`` to ``to``."""
+        if link_scale is None:
+            return ext.get(to, 0.0) - internal
+        old = sum(w * link_scale[pu][r] for r, w in ext.items())
+        new = internal * link_scale[to][pu]
+        for r, w in ext.items():
+            if r != to:
+                new += w * link_scale[to][r]
+        return old - new
+
     for _ in range(max_passes):
         moved = list(locked) if locked is not None else [False] * g.n
         moves: list[tuple[int, int, int]] = []  # (node, from, to)
@@ -342,7 +365,7 @@ def _fm_refine(
                 if not ext:
                     continue
                 pu = part[u]
-                for to, wext in ext.items():
+                for to in ext:
                     if pw[to] + g.nw[u] > cap[to]:
                         continue
                     if caps_on and pm[to] + g.mem(u) > mem_caps[to] + 1e-6:
@@ -350,7 +373,7 @@ def _fm_refine(
                     # don't empty a partition that has a nonzero target
                     if targets[pu] > 0 and pw[pu] - g.nw[u] < 0:
                         continue
-                    gain = wext - internal
+                    gain = move_gain(ext, internal, pu, to)
                     # tie-break toward balance deficit
                     deficit = targets[to] * total - pw[to]
                     cand = (gain, deficit, -u)
@@ -433,6 +456,7 @@ def partition_indices(
     epsilon: float = 0.05,
     seed: int = 1,
     capacities: Sequence[float] | None = None,
+    link_scale: Sequence[Sequence[float]] | None = None,
 ) -> list[int]:
     """k-way partition of an index graph into parts with target weight
     fractions ``targets`` (sum to 1) and optional absolute memory budgets
@@ -440,13 +464,21 @@ def partition_indices(
 
     The capacity vector is a hard constraint: whenever a feasible assignment
     is reachable by the greedy repair + capacity-vetoed FM moves, no part
-    exceeds its budget in the returned partition."""
+    exceeds its budget in the returned partition.
+
+    ``link_scale`` (k x k relative link costs between the parts' memory
+    nodes, diagonal 0) makes the refinement passes topology-aware: a cut
+    edge across a fast link costs less than one across a slow link.  With
+    two parts the scale is a constant factor, so it only changes results
+    for k >= 3 (distinct link tiers)."""
     k = len(targets)
     tsum = sum(targets)
     if not math.isclose(tsum, 1.0, rel_tol=1e-6):
         targets = [t / tsum for t in targets]
     if capacities is not None and len(capacities) != k:
         raise ValueError(f"capacities has {len(capacities)} entries for {k} targets")
+    if link_scale is not None and len(link_scale) != k:
+        raise ValueError(f"link_scale has {len(link_scale)} rows for {k} targets")
     if k == 1:
         return [0] * g.n
     # Degenerate targets (paper Fig 6: R_cpu ~ 0): assign everything to the
@@ -459,7 +491,9 @@ def partition_indices(
     if k == 2:
         part = _bisect_multilevel(g, targets[0], epsilon, seed, caps=capacities)
         part = _repair_capacity(g, part, capacities)
-        return _fm_refine(g, part, targets, epsilon, mem_caps=capacities)
+        return _fm_refine(
+            g, part, targets, epsilon, mem_caps=capacities, link_scale=link_scale
+        )
 
     # recursive bisection: split target list into two halves with closest sums
     order = sorted(range(k), key=lambda i: -targets[i])
@@ -496,18 +530,24 @@ def partition_indices(
         sub = UGraph(sub_nw, sub_adj, sub_nm)
         sub_targets = [targets[i] / wsum for i in group]
         sub_caps = [capacities[i] for i in group] if capacities else None
+        sub_scale = None
+        if link_scale is not None:
+            sub_scale = [[link_scale[i][j] for j in group] for i in group]
         sub_part = partition_indices(
             sub,
             sub_targets,
             epsilon=epsilon,
             seed=seed + 17,
             capacities=sub_caps,
+            link_scale=sub_scale,
         )
         for u in idx:
             out[u] = group[sub_part[remap[u]]]
     # final k-way polish; repair first so FM starts feasible
     out = _repair_capacity(g, out, capacities)
-    return _fm_refine(g, out, targets, epsilon, mem_caps=capacities)
+    return _fm_refine(
+        g, out, targets, epsilon, mem_caps=capacities, link_scale=link_scale
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -577,6 +617,7 @@ def partition_taskgraph(
     seed: int = 1,
     pin: Mapping[str, str] | None = None,
     capacities: Mapping[str, float] | None = None,
+    link_scale: Sequence[Sequence[float]] | None = None,
 ) -> dict[str, str]:
     """Partition a TaskGraph into processor classes with target work fractions
     (the paper's full gp pipeline minus the runtime).
@@ -586,6 +627,9 @@ def partition_taskgraph(
     partitioning by overriding the assignment (their weight contribution is
     negligible for the source node, which has zero cost).  ``capacities``
     maps a class to its memory budget in bytes (absent class = unconstrained).
+    ``link_scale`` (indexed like ``list(targets)``) prices cut edges at the
+    relative cost of the link between the two classes' memory nodes — build
+    it with :func:`repro.core.comm.link_scale_for`.
     """
     classes = list(targets)
     ug, names = weight_graph_of(tg, weight_source=weight_source, edge_ms=edge_ms)
@@ -598,6 +642,7 @@ def partition_taskgraph(
         epsilon=epsilon,
         seed=seed,
         capacities=caps,
+        link_scale=link_scale,
     )
     out = {names[i]: classes[part[i]] for i in range(len(names))}
     if pin:
@@ -609,16 +654,26 @@ def cut_stats(
     tg: TaskGraph,
     assignment: Mapping[str, str],
     edge_ms: Callable[[int], float] | None = None,
+    link_ms: Callable[[str, str, int], float] | None = None,
 ) -> dict:
-    """Cut edges / bytes / ms plus per-class node-weight and footprint sums."""
+    """Cut edges / bytes / ms plus per-class node-weight and footprint sums.
+
+    ``edge_ms`` prices every cut edge with one flat bytes->ms function;
+    ``link_ms(src_cls, dst_cls, nbytes)`` prices it at the actual link
+    between the assigned classes (topology-exact reporting) and wins when
+    both are given."""
     cut_edges = 0
     cut_bytes = 0
     cut_ms = 0.0
     for e in tg.edges:
-        if assignment[e.src] != assignment[e.dst]:
+        ca, cb = assignment[e.src], assignment[e.dst]
+        if ca != cb:
             cut_edges += 1
             cut_bytes += e.nbytes
-            cut_ms += edge_ms(e.nbytes) if edge_ms else 0.0
+            if link_ms is not None:
+                cut_ms += link_ms(ca, cb, e.nbytes)
+            elif edge_ms is not None:
+                cut_ms += edge_ms(e.nbytes)
     loads: dict[str, float] = {}
     mem: dict[str, int] = {}
     for n, k in tg.nodes.items():

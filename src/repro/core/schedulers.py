@@ -11,6 +11,15 @@
   pinned to its partition's class; the runtime only enforces dependencies.
 * :class:`HeftPolicy` — classic HEFT list scheduling (beyond-paper baseline).
 * :class:`RandomPolicy` / :class:`SingleClassPolicy` — controls.
+* :class:`WorkerPullPolicy` — the executed-mode dispatch shim: replays any
+  reactive queue policy through the discrete-event simulator (its native
+  worker-pull habitat) and exports the emergent kernel -> class placement, so
+  eager/dmda/heft run on real device groups too.
+
+All cost estimates are topology-aware: dmda prices missing inputs per block
+at the actual source->destination link, HEFT's EFT loop charges the real
+src-node -> dst-node link, and gp's cut objective uses the platform
+topology's link-scale matrix (see ``repro.core.comm``).
 """
 
 from __future__ import annotations
@@ -18,15 +27,20 @@ from __future__ import annotations
 import time
 from typing import Mapping
 
+from .comm import link_scale_for
 from .cost import workload_ratios
 from .graph import TaskGraph
 from .partition import partition_taskgraph
-from .simulate import Platform, Processor, Sim
+from .simulate import Platform, Processor, Sim, simulate
 
 
 class Policy:
     name = "base"
     decision_ms = 0.0
+    # True when prepare() yields a kernel -> class map the real executor can
+    # honor directly (gp family); reactive queue policies need the
+    # WorkerPullPolicy shim for executed mode
+    produces_assignment = False
 
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         """Offline work; returns offline decision wall-time in ms."""
@@ -97,8 +111,8 @@ class DmdaPolicy(Policy):
                 procs = fitting
         best_proc, best_eta = None, None
         for p in procs:
-            nbytes = sim.missing_input_bytes(task, p.node)
-            ttrans = sim.platform.link.transfer_ms(nbytes) if nbytes else 0.0
+            # per-block, per-link transfer estimate (src node -> p.node)
+            ttrans = sim.missing_input_ms(task, p.node)
             texec = sim.exec_ms(task, p.cls)
             eta = max(sim.est_proc_avail[p.name], sim.now) + ttrans + texec
             if best_eta is None or eta < best_eta - 1e-12:
@@ -111,6 +125,9 @@ class DmdaPolicy(Policy):
 class GpPolicy(Policy):
     """The paper's graph-partition policy.
 
+    ``produces_assignment``: prepare() leaves a kernel -> class map in
+    ``self.assignment`` that the real-device executor honors directly.
+
     ``weight_source`` follows §III.B: node weights can come from the GPU or the
     CPU execution time (GPU default — smaller node weights give edge weights
     higher partitioning priority).  Targets come from Formula (1)/(2), scaled
@@ -118,6 +135,7 @@ class GpPolicy(Policy):
     """
 
     name = "gp"
+    produces_assignment = True
 
     def __init__(self, *, weight_source: str = "gpu", epsilon: float = 0.05,
                  seed: int = 1, targets: Mapping[str, float] | None = None,
@@ -169,15 +187,18 @@ class GpPolicy(Policy):
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
         targets = self.targets_for(g, platform)
-        link = platform.link
+        topo = platform.topo
         host_cls = next(p.cls for p in platform.procs
                         if p.node == platform.host_node)
         pin = {n: host_cls for n, k in g.nodes.items() if k.op == "source"}
+        # edge weights priced at the worst link; the link-scale matrix turns
+        # that into per-class-pair prices inside the FM gain function
         self.assignment = partition_taskgraph(
             g, targets, weight_source=self.weight_source,
-            edge_ms=lambda nb: link.transfer_ms(nb),
+            edge_ms=lambda nb: topo.worst_ms(nb),
             epsilon=self.epsilon, seed=self.seed, pin=pin,
-            capacities=self.capacities_for(platform))
+            capacities=self.capacities_for(platform),
+            link_scale=link_scale_for(platform, list(targets)))
         self.targets = targets
         return (time.perf_counter() - t0) * 1e3
 
@@ -213,8 +234,8 @@ class HeftPolicy(Policy):
         classes = platform.classes
         mean_cost = {n: sum(k.costs.get(c, 0.0) for c in classes) / len(classes)
                      for n, k in g.nodes.items()}
-        link = platform.link
-        mean_edge = {(e.src, e.dst): link.transfer_ms(e.nbytes) * 0.5
+        topo = platform.topo
+        mean_edge = {(e.src, e.dst): topo.worst_ms(e.nbytes) * 0.5
                      for e in g.edges}  # 0.5: same-node edges are free on average
         rank: dict[str, float] = {}
         for n in reversed(g.topo_order()):
@@ -233,7 +254,9 @@ class HeftPolicy(Policy):
                 for pr in g.predecessors(n):
                     c = finish.get(pr, 0.0)
                     if where.get(pr) is not None and where[pr].node != p.node:
-                        c += link.transfer_ms(g.edge(pr, n).nbytes)
+                        # the actual src-node -> dst-node link, not a flat bus
+                        c += topo.transfer_ms(g.edge(pr, n).nbytes,
+                                              where[pr].node, p.node)
                     ready = max(ready, c)
                 eft = max(avail[p.name], ready) + g.nodes[n].cost_on(p.cls)
                 if best is None or eft < best[0]:
@@ -280,6 +303,72 @@ class SingleClassPolicy(Policy):
         sim.est_proc_avail[w.name] = max(sim.est_proc_avail[w.name], sim.now) \
             + sim.exec_ms(task, self.cls)
         return w.name
+
+
+class WorkerPullPolicy(Policy):
+    """Executed-mode dispatch shim for reactive queue policies.
+
+    eager/dmda/heft decide placement *during* dispatch — an idle worker pulls
+    the next task — so they have no kernel -> class map the real executor
+    could honor up front.  This shim gives them one: ``prepare`` replays the
+    wrapped policy through the discrete-event simulator (its native
+    worker-pull habitat, same platform, same cost tables) and exports the
+    emergent task -> class placement; platform churn re-runs the pull loop
+    over the unfinished suffix.  The real-device table in
+    ``launch/serve.py --execute`` compares all five policies through this.
+    """
+
+    produces_assignment = True
+
+    def __init__(self, base: Policy):
+        self.base = base
+        self.name = base.name
+        self.assignment: dict[str, str] = {}
+
+    def _pull_assign(self, g: TaskGraph, platform: Platform) -> dict[str, str]:
+        res = simulate(g, self.base, platform)
+        cls_of = {p.name: p.cls for p in platform.procs}
+        return {task: cls_of[proc]
+                for task, proc, _start, _finish in res.trace
+                if proc in cls_of and g.nodes[task].op != "source"}
+
+    def prepare(self, g: TaskGraph, platform: Platform) -> float:
+        t0 = time.perf_counter()
+        self.assignment = self._pull_assign(g, platform) if g.num_nodes() else {}
+        return (time.perf_counter() - t0) * 1e3
+
+    def _replan(self, state) -> float:
+        """Platform churn (serving executor's ``_LiveState``): re-run the
+        pull loop on the live platform; only unfinished tasks may move."""
+        t0 = time.perf_counter()
+        if state.platform.procs and state.g.num_nodes():
+            fresh = self._pull_assign(state.g, state.platform)
+            for task, cls in fresh.items():
+                if task not in state.finished:
+                    self.assignment[task] = cls
+        return (time.perf_counter() - t0) * 1e3
+
+    def on_worker_drop(self, proc: Processor, state) -> float:
+        return self._replan(state)
+
+    def on_worker_add(self, proc: Processor, state) -> float:
+        return self._replan(state)
+
+    def on_ready(self, task: str, sim: Sim) -> str | None:
+        # shim used inside the simulator (parity tests): defer to the base
+        return self.base.on_ready(task, sim)
+
+    def on_idle(self, proc: Processor, sim: Sim) -> str | None:
+        return self.base.on_idle(proc, sim)
+
+
+def as_executed(policy: Policy) -> Policy:
+    """The executed-mode form of ``policy``: itself when its prepare()
+    already yields a class assignment (gp family), else wrapped in the
+    worker-pull shim."""
+    if getattr(policy, "produces_assignment", False):
+        return policy
+    return WorkerPullPolicy(policy)
 
 
 ALL_POLICIES = {

@@ -24,9 +24,14 @@ measured hardware:
   ``IncrementalGpPolicy._targets_for`` — partition targets track *observed*
   throughput instead of static cost tables (straggler-aware targets).
 
-The stream clock is *virtual*: measured kernel milliseconds plus modeled
-transfer milliseconds, so event/arrival semantics are stable across hosts of
-very different speeds while the quantities fed back to the policy stay real.
+The stream clock is *virtual*: measured kernel milliseconds overlapped with
+modeled transfer milliseconds on the shared :class:`~repro.core.comm.CommEngine`
+lanes (the same two-resource timeline the simulator runs), so event/arrival
+semantics are stable across hosts of very different speeds while the
+quantities fed back to the policy stay real.  Transfers are charged to the
+actual src-node -> dst-node link of the platform topology and the inputs of
+upcoming kernels are prefetched under the running kernel's compute, instead
+of serializing measured kernel time plus modeled transfer time on one clock.
 """
 
 from __future__ import annotations
@@ -38,6 +43,7 @@ from typing import Callable, Mapping, Sequence
 import jax
 
 from .arena import ArenaRow, ArenaStep
+from .comm import CommEngine
 from .cost import Link, MeasuredCostModel
 from .executor import JaxExecutor, attach_request_kernels
 from .graph import TaskGraph
@@ -67,6 +73,9 @@ class StepReport:
     spills: int = 0                 # completions past a group's KV budget
     peak_mem_bytes: dict = dataclasses.field(default_factory=dict)
     #                               # group -> peak resident bytes (KV)
+    transfer_busy_ms: float = 0.0   # modeled wire time on the comm lanes
+    lane_busy_ms: dict = dataclasses.field(default_factory=dict)
+    n_prefetched: int = 0           # transfers staged ahead of their consumer
 
 
 @dataclasses.dataclass
@@ -123,6 +132,8 @@ class ServeReport:
             "mean_kernel_ms": {c: sum(v) / len(v) for c, v in classes.items()},
             "spills": int(self.total("spills")),
             "peak_mem_bytes": self.peak_mem_bytes(),
+            "transfer_busy_ms": self.total("transfer_busy_ms"),
+            "prefetched": int(self.total("n_prefetched")),
         }
 
 
@@ -327,9 +338,18 @@ class ServingExecutor:
             if g.nodes[n].op != "source" and n not in assignment:
                 assignment[n] = self._fallback_class(g, n, platform)
 
+        # the shared communication model: transfers charged to the actual
+        # src-node -> dst-node lanes, overlapped with compute on the session's
+        # two-resource virtual timeline (same engine the simulator runs)
+        comm = CommEngine(platform.topo)
+        group_nodes = {cls: platform.node_of_class(cls)
+                       for cls in platform.classes}
+        for cls in self.executor.groups:
+            group_nodes.setdefault(cls, platform.host_node)
         session = self.executor.session(
             g, assignment, inputs, host_group=self.host_group,
-            time_kernels=True, gated=gated)
+            time_kernels=True, gated=gated, comm=comm,
+            group_nodes=group_nodes)
 
         clock = 0.0
         decision_ms = 0.0
@@ -382,7 +402,7 @@ class ServingExecutor:
                             dataclasses.replace(k, costs=dict(k.costs),
                                                 meta=dict(k.meta)), deps)
                     session.reassign(dict(policy.assignment))
-                session.admit(due)
+                session.admit(due, at=clock)
 
         fire_due()
         while True:
@@ -398,10 +418,10 @@ class ServingExecutor:
                 clock = max(clock, min(future))
                 fire_due()
                 continue
-            # close the measurement loop: observed wall time -> cost history,
-            # virtual clock advances by measured compute + modeled transfer
-            clock += run.ms + (self.link.transfer_ms(run.nbytes)
-                               if run.n_transfers else 0.0)
+            # close the measurement loop: observed wall time -> cost history;
+            # the stream clock follows the session's two-resource timeline
+            # (compute overlapped with lane transfers), not a serialized sum
+            clock = max(clock, run.t_finish)
             first = run.name not in state.finished
             state.finished.add(run.name)
             kern = g.nodes[run.name]
@@ -445,7 +465,7 @@ class ServingExecutor:
         return StepReport(
             tag=step.tag,
             n_kernels=sum(session.per_group.values()),
-            makespan_ms=clock,
+            makespan_ms=max(clock, session.vmax),
             wall_ms=(time.perf_counter() - wall0) * 1e3,
             n_transfers=session.n_transfers,
             bytes_transferred=session.nbytes,
@@ -460,6 +480,9 @@ class ServingExecutor:
             events_missed=list(pending_events),
             spills=spills,
             peak_mem_bytes=peak_mem,
+            transfer_busy_ms=comm.busy_ms,
+            lane_busy_ms=comm.lane_busy_ms(),
+            n_prefetched=comm.n_prefetched,
         )
 
     # -- whole stream ----------------------------------------------------------

@@ -1,32 +1,45 @@
 """Discrete-event simulator for data-flow execution on heterogeneous
-processors with discrete memory nodes and a shared bus (paper §IV platform:
-3 CPU worker cores + 1 GPU worker, one PCIe 3.0 x16 link).
+processors with discrete memory nodes and a topology of transfer links.
 
-Models exactly the effects the paper evaluates:
+Models exactly the effects the paper evaluates, generalized past its
+single-bus platform (§IV: 3 CPU worker cores + 1 GPU worker, one PCIe 3.0
+x16 link with one copy engine):
 
 * per-worker in-order execution of assigned kernels;
-* **data consistency**: a kernel can only run on a processor once all its input
-  blocks are valid on that processor's memory node; cross-node reads enqueue
-  transfers on the shared bus (FIFO, single copy engine — the paper's GTX has
-  no dual copy engines, §III.B);
+* **data consistency**: a kernel can only run on a processor once all its
+  input blocks are valid on that processor's memory node; cross-node reads
+  book transfers on the :class:`~repro.core.comm.CommEngine` — per-link
+  bandwidth/latency lanes from the platform's :class:`~repro.core.comm.Topology`
+  (the default, a single one-lane shared bus, reproduces the paper's GTX
+  platform exactly);
+* **compute/transfer overlap**: with ``overlap=True`` (default) the inputs of
+  tasks already committed to a worker's queue are *prefetched* while the
+  worker is still busy, so cut-edge transfers hide under compute — the
+  two-resource event simulation (compute streams + comm lanes on one event
+  heap) that makes graph-partition scheduling win on real fabrics.
+  ``overlap=False`` reproduces the paper's serialized issue-at-dispatch
+  semantics on the same lanes;
 * transfer counting / byte accounting (the paper's second metric);
-* scheduling-decision overhead (paper §IV.D: dmda pays per-task decision time,
-  gp decides once offline);
+* scheduling-decision overhead (paper §IV.D: dmda pays per-task decision
+  time, gp decides once offline);
 * **discrete-memory capacity**: every class's memory node has a resident-byte
   budget (``Platform.mem_capacity_bytes``); a kernel's ``mem_bytes`` is
   reserved at dispatch, a request chain's KV footprint grows over its decode
   chunks and frees when the whole request retires, and an overflow forces a
-  *spill* of the oldest finished resident block to the host over the bus
-  (counted in ``SimResult.spill_events`` / ``spilled_bytes``, with per-class
-  peaks in ``peak_mem_bytes``).
+  *spill* of the oldest finished resident block to the host over the
+  host link.  A spilled block *pulled back* by a later consumer re-occupies
+  residency on the pulling class — and can itself trigger further spills
+  (reload accounting; reloads are no longer free apart from the transfer).
 
 The simulator also services the TPU adaptation: memory nodes = device groups,
-bus = inter-group link (ICI/DCN), workers = groups' compute streams.
+links = inter-group fabric (ICI/DCN tiers via the topology), workers =
+groups' compute streams.  Memory nodes outlive their workers: a class whose
+last worker drops keeps serving reads of blocks it already holds (the
+executor, which really loses the device memory, recomputes instead).
 
 Dynamic events (the online extension, §IV.D's offline restriction lifted):
 
 * **task arrivals** — ``arrivals`` maps task name -> earliest-ready timestamp;
-  a task becomes schedulable at max(arrival, all predecessors finished);
 * **worker drop** — :class:`WorkerDrop` removes a processor mid-run: its queue
   drains back through the policy, a task running on it is aborted and
   re-dispatched, and nothing is ever placed on it again;
@@ -43,6 +56,7 @@ import heapq
 from collections import deque
 from typing import Mapping, Sequence
 
+from .comm import CommEngine, Topology, platform_topology
 from .cost import Link, PCIE3_X16
 from .graph import TaskGraph
 
@@ -50,8 +64,8 @@ from .graph import TaskGraph
 @dataclasses.dataclass(frozen=True)
 class Processor:
     name: str
-    cls: str      # processor class ("cpu"/"gpu"/"tpu_pod0"...)
-    node: int     # memory node id (discrete memory per class/group)
+    cls: str  # processor class ("cpu"/"gpu"/"tpu_pod0"...)
+    node: int  # memory node id (discrete memory per class/group)
 
 
 @dataclasses.dataclass
@@ -63,14 +77,25 @@ class Platform:
     # that class's memory node); absent class = unconstrained.  The "second
     # partition constraint" besides work balance.
     mem_capacity_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-link transfer lanes between memory nodes; None = the paper's single
+    # shared one-lane bus built from ``link`` (exact back-compat)
+    topology: Topology | None = None
 
     def mem_cap_of(self, cls: str) -> float:
         return self.mem_capacity_bytes.get(cls, float("inf"))
 
+    @property
+    def topo(self) -> Topology:
+        return platform_topology(self)
+
     def copy(self) -> "Platform":
-        return Platform(list(self.procs), link=self.link,
-                        host_node=self.host_node,
-                        mem_capacity_bytes=dict(self.mem_capacity_bytes))
+        return Platform(
+            list(self.procs),
+            link=self.link,
+            host_node=self.host_node,
+            mem_capacity_bytes=dict(self.mem_capacity_bytes),
+            topology=self.topology,
+        )
 
     @property
     def classes(self) -> list[str]:
@@ -90,27 +115,37 @@ class Platform:
         return [p for p in self.procs if p.cls == cls]
 
 
-def make_cpu_gpu_platform(n_cpu: int = 3, n_gpu: int = 1,
-                          link: Link = PCIE3_X16) -> Platform:
+def make_cpu_gpu_platform(
+    n_cpu: int = 3, n_gpu: int = 1, link: Link = PCIE3_X16
+) -> Platform:
     """The paper's platform: quad-core i7 (3 worker cores + 1 runtime core) and
-    one GTX TITAN, over PCIe 3.0 x16."""
+    one GTX TITAN, over PCIe 3.0 x16 (one copy engine — single-lane bus)."""
     procs = [Processor(f"cpu{i}", "cpu", 0) for i in range(n_cpu)]
     procs += [Processor(f"gpu{i}", "gpu", 1) for i in range(n_gpu)]
     return Platform(procs, link=link, host_node=0)
 
 
-def make_group_platform(group_sizes: Mapping[str, int], link: Link,
-                        mem_capacity_bytes: Mapping[str, float] | None = None,
-                        ) -> Platform:
+def make_group_platform(
+    group_sizes: Mapping[str, int],
+    link: Link,
+    mem_capacity_bytes: Mapping[str, float] | None = None,
+    topology: Topology | None = None,
+) -> Platform:
     """TPU adaptation: one worker per device *group*; each group has its own
-    memory node; groups talk over ``link`` (the slow inter-group fabric).
+    memory node; groups talk over ``link`` (the slow inter-group fabric) or,
+    when given, a full per-link ``topology`` (ICI vs DCN tiers, multi-lane).
     ``mem_capacity_bytes`` optionally budgets each group's HBM (KV capacity)."""
     procs = []
     for i, (cls, n) in enumerate(group_sizes.items()):
         for j in range(n):
             procs.append(Processor(f"{cls}.w{j}", cls, i))
-    return Platform(procs, link=link, host_node=0,
-                    mem_capacity_bytes=dict(mem_capacity_bytes or {}))
+    return Platform(
+        procs,
+        link=link,
+        host_node=0,
+        mem_capacity_bytes=dict(mem_capacity_bytes or {}),
+        topology=topology,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,8 +174,8 @@ class SimResult:
     kernels_per_class: dict[str, int]
     decision_overhead_ms: float
     offline_decision_ms: float
-    trace: list[tuple]          # (task, proc, start, finish)
-    transfers: list[tuple]      # (block, src_node, dst_node, start, finish)
+    trace: list[tuple]  # (task, proc, start, finish)
+    transfers: list[tuple]  # (block, src_node, dst_node, start, finish)
     aborted: list[tuple] = dataclasses.field(default_factory=list)
     #                           # (task, proc, start, abort_t) — killed by drops
     dropped_procs: list[str] = dataclasses.field(default_factory=list)
@@ -150,6 +185,10 @@ class SimResult:
     spill_events: int = 0
     spilled_bytes: int = 0
     peak_mem_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    # communication-engine accounting (per-link lanes + overlap)
+    lane_busy_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    n_prefetched: int = 0
+    reload_events: int = 0  # spilled blocks pulled back into residency
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -165,6 +204,8 @@ class Sim:
         # own copy of the proc list: dynamic events mutate it, and the caller's
         # Platform must stay reusable across runs (the arena shares one)
         self.platform = platform.copy()
+        self.topo = self.platform.topo
+        self.comm = CommEngine(self.topo)
         self.now = 0.0
         # live KV residency per class: insertion-ordered block -> bytes (the
         # order is the FIFO spill victim order); mem_load is the running sum
@@ -173,10 +214,9 @@ class Sim:
         self.proc_free = {p.name: 0.0 for p in platform.procs}
         self.proc_queue: dict[str, deque] = {p.name: deque() for p in platform.procs}
         self.central: deque = deque()
-        self.valid: dict[str, dict[int, float]] = {}   # block -> node -> valid_at
-        self.bus_free = 0.0
+        self.valid: dict[str, dict[int, float]] = {}  # block -> node -> valid_at
         self.finished: set[str] = set()
-        self.dead: set[str] = set()          # dropped processor names
+        self.dead: set[str] = set()  # dropped processor names
         self.proc_by_name = {p.name: p for p in platform.procs}
         # policy estimation helpers (dmda keeps its own view)
         self.est_proc_avail = {p.name: 0.0 for p in platform.procs}
@@ -185,15 +225,33 @@ class Sim:
     def missing_input_bytes(self, task: str, node: int) -> int:
         nb = 0
         for p in self.g.predecessors(task):
-            if self.g.nodes[p].op == "source":
-                block = f"{p}->{task}"
-                ent = self.valid.get(block,
-                                     {self.platform.host_node: 0.0})
-            else:
-                ent = self.valid.get(p)
+            ent = self._block_entry(p, task)
             if ent is None or node not in ent:
                 nb += self.g.edge(p, task).nbytes
         return nb
+
+    def missing_input_ms(self, task: str, node: int) -> float:
+        """Estimated transfer time to stage ``task``'s missing inputs onto
+        ``node``, priced per block at the actual source->node link (link-aware
+        dmda ETA; unknown producers price at the worst link)."""
+        ms = 0.0
+        for p in self.g.predecessors(task):
+            e = self.g.edge(p, task)
+            ent = self._block_entry(p, task)
+            if ent is not None and node in ent:
+                continue
+            if ent:
+                src = min(ent.items(), key=lambda kv: (kv[1], kv[0]))[0]
+                ms += self.topo.transfer_ms(e.nbytes, src, node)
+            else:
+                ms += self.topo.worst_ms(e.nbytes)
+        return ms
+
+    def _block_entry(self, pred: str, task: str) -> dict[int, float] | None:
+        if self.g.nodes[pred].op == "source":
+            block = f"{pred}->{task}"
+            return self.valid.get(block, {self.platform.host_node: 0.0})
+        return self.valid.get(pred)
 
     def exec_ms(self, task: str, cls: str) -> float:
         return self.g.nodes[task].cost_on(cls)
@@ -207,10 +265,17 @@ class Sim:
         return self.g.nodes[task].mem_bytes <= self.mem_free(cls) + 1e-6
 
 
-def simulate(g: TaskGraph, policy, platform: Platform, *,
-             host_entry: bool = True,
-             arrivals: Mapping[str, float] | None = None,
-             events: Sequence = ()) -> SimResult:
+def simulate(
+    g: TaskGraph,
+    policy,
+    platform: Platform,
+    *,
+    host_entry: bool = True,
+    arrivals: Mapping[str, float] | None = None,
+    events: Sequence = (),
+    overlap: bool = True,
+    prefetch_depth: int = 2,
+) -> SimResult:
     """Run ``policy`` over task graph ``g`` on ``platform``.
 
     ``host_entry``: initial data lives on the host node (paper §III.B) — entry
@@ -224,18 +289,23 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
     Events at ``t_ms <= 0`` apply after ``policy.prepare`` but before the
     first dispatch: the offline decision was made for the full platform, then
     the platform changed — the regime the online policies exist for.
+
+    ``overlap``: prefetch the inputs of the first ``prefetch_depth`` tasks of
+    every worker's queue while the worker is busy, hiding transfers under
+    compute.  ``overlap=False`` issues every transfer at task start (the
+    paper's serialized semantics) on the same per-link lanes.
     """
     g.validate()
     sim = Sim(g, platform)
     platform = sim.platform  # the mutable copy; dynamic events edit this one
+    comm = sim.comm
     offline_ms = policy.prepare(g, platform)
     arrivals = arrivals or {}
 
     pred_count = {n: len(g.predecessors(n)) for n in g.nodes}
     n_tasks = len(g.nodes)
 
-    metrics = dict(n_transfers=0, bytes=0, tbusy=0.0, overhead=0.0,
-                   spills=0, spilled=0)
+    metrics = dict(overhead=0.0, spills=0, spilled=0, reloads=0)
     peak_mem: dict[str, float] = {}
     # KV-residency grouping: a request chain's footprint stays resident until
     # the whole request retires (kernels tagged meta["req"]); ungrouped blocks
@@ -247,9 +317,10 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             req_tasks.setdefault(r, []).append(n)
     req_left = {r: len(ts) for r, ts in req_tasks.items()}
     block_cls: dict[str, str] = {}  # resident block -> class holding it
+    spilled_live: set[str] = set()  # spilled blocks whose request still lives
     busy = {p.name: 0.0 for p in platform.procs}
     per_class: dict[str, int] = {}
-    trace: list[tuple | None] = []       # None = slot voided by an abort
+    trace: list[tuple | None] = []  # None = slot voided by an abort
     transfers: list[tuple] = []
     aborted: list[tuple] = []
     dropped: list[str] = []
@@ -272,8 +343,10 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         if g.nodes[task].op == "source":
             # the virtual zero-weight kernel always runs on the host node
             # (paper §III.B: all initial data is located on the host memory)
-            host = next((p for p in platform.procs
-                         if p.node == platform.host_node), platform.procs[0])
+            host = next(
+                (p for p in platform.procs if p.node == platform.host_node),
+                platform.procs[0],
+            )
             sim.proc_queue[host.name].append(task)
             return
         extra = policy.on_ready(task, sim)
@@ -286,10 +359,16 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             live = [p for p in platform.procs if p.cls in costs]
             if not live:
                 raise RuntimeError(
-                    f"task {task!r} has no live capable worker after drops")
-            extra = min(live, key=lambda p: (sim.proc_free[p.name],
-                                             len(sim.proc_queue[p.name]),
-                                             p.name)).name
+                    f"task {task!r} has no live capable worker after drops"
+                )
+            extra = min(
+                live,
+                key=lambda p: (
+                    sim.proc_free[p.name],
+                    len(sim.proc_queue[p.name]),
+                    p.name,
+                ),
+            ).name
         if extra is None:
             sim.central.append(task)
         else:
@@ -315,10 +394,12 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
 
     def mem_spill(cls: str, need: int, t: float, protect: str):
         """Forced KV eviction: push oldest finished-resident blocks of ``cls``
-        to the host over the bus until ``need`` bytes fit.  The class's copy
-        is invalidated, so a later consumer pays the transfer back."""
+        to the host over the host link until ``need`` bytes fit.  The class's
+        copy is invalidated, so a later consumer pays the transfer back — and
+        the pulled-back block re-occupies residency (reload accounting)."""
         res = sim.resident.get(cls, {})
         cap = platform.mem_cap_of(cls)
+        node = next((p.node for p in platform.procs if p.cls == cls), None)
         for block in list(res):
             if sim.mem_load.get(cls, 0.0) + need <= cap + 1e-6:
                 break
@@ -327,16 +408,22 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             nb = res.pop(block)
             sim.mem_load[cls] -= nb
             block_cls.pop(block, None)
-            ts = max(sim.bus_free, t)
-            te = ts + platform.link.transfer_ms(nb)
-            sim.bus_free = te
+            te = comm.fetch(
+                block,
+                node if node is not None else platform.host_node,
+                platform.host_node,
+                nb,
+                now=t,
+                kind="spill",
+                book_same_node=True,  # host-coresident spills still pay the
+                #   staging link (DRAM copy), as the shared-bus model did
+            )
             metrics["spills"] += 1
             metrics["spilled"] += nb
-            metrics["tbusy"] += te - ts
+            spilled_live.add(block)
             # only this class's memory-node copy is evicted; other nodes keep
             # theirs, and the host gains one (at the earlier of any existing
             # host copy and this spill's completion)
-            node = next((p.node for p in platform.procs if p.cls == cls), None)
             ent = sim.valid.setdefault(block, {})
             if node is not None:
                 ent.pop(node, None)
@@ -356,40 +443,51 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         peak_mem[cls] = max(peak_mem.get(cls, 0.0), sim.mem_load[cls])
 
     def mem_remove(block: str):
+        spilled_live.discard(block)
         cls = block_cls.pop(block, None)
         if cls is None:
             return
         sim.mem_load[cls] -= sim.resident[cls].pop(block, 0)
 
+    def fetch_block(
+        block: str, nbytes: int, dst_node: int, dst_cls: str, t: float, kind: str
+    ) -> float:
+        """Book a copy of ``block`` onto ``dst_node`` from its cheapest valid
+        source; marks validity at the completion time (so in-flight copies
+        dedup naturally) and applies spill-reload residency accounting."""
+        ent = sim.valid.get(block) or {}
+        src_node, src_t = min(ent.items(), key=lambda kv: (kv[1], kv[0]))
+        te = comm.fetch(
+            block, src_node, dst_node, nbytes, now=t, src_ready=src_t, kind=kind
+        )
+        sim.valid.setdefault(block, {})[dst_node] = te
+        tr = comm.transfers[-1]
+        transfers.append((block, tr.src, tr.dst, tr.start, tr.finish))
+        if block in spilled_live:
+            # a spilled KV block pulled back from host re-occupies residency
+            # on the pulling class — and can itself trigger further spills
+            spilled_live.discard(block)
+            r = req_of.get(block)
+            if (r is None or req_left.get(r, 0) > 0) and block in g.nodes:
+                metrics["reloads"] += 1
+                mem_add(dst_cls, block, g.nodes[block].mem_bytes, t)
+        return te
+
     def start_task(proc: Processor, task: str, t: float):
-        """Reserve bus for missing inputs, then run. Returns finish time."""
+        """Book transfers for missing inputs, then run. Returns finish time."""
         arrival = t
         mem_add(proc.cls, task, g.nodes[task].mem_bytes, t)
         for pred in g.predecessors(task):
             e = g.edge(pred, task)
             # each entry kernel's host input is its OWN block (paper §III.B:
             # the zero-weight kernel models per-kernel initial data)
-            block = (f"{pred}->{task}" if g.nodes[pred].op == "source"
-                     else pred)
+            block = f"{pred}->{task}" if g.nodes[pred].op == "source" else pred
             if g.nodes[pred].op == "source" and block not in sim.valid:
                 sim.valid[block] = {platform.host_node: 0.0}
             va = block_valid_at(block, proc.node)
-            if va is not None:
-                arrival = max(arrival, va)
-                continue
-            # find a source node holding a valid copy (producer's node)
-            ent = sim.valid.get(block) or {}
-            src_node, src_t = min(ent.items(), key=lambda kv: kv[1])
-            ts = max(sim.bus_free, t, src_t)
-            dur = platform.link.transfer_ms(e.nbytes)
-            te = ts + dur
-            sim.bus_free = te
-            sim.valid.setdefault(block, {})[proc.node] = te
-            metrics["n_transfers"] += 1
-            metrics["bytes"] += e.nbytes
-            metrics["tbusy"] += dur
-            transfers.append((block, src_node, proc.node, ts, te))
-            arrival = max(arrival, te)
+            if va is None:
+                va = fetch_block(block, e.nbytes, proc.node, proc.cls, t, "demand")
+            arrival = max(arrival, va)
         start = max(arrival, sim.proc_free[proc.name], t)
         dur = g.nodes[task].cost_on(proc.cls)
         finish = start + dur
@@ -411,9 +509,10 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         progress = True
         while progress:
             progress = False
-            order = sorted(platform.procs,
-                           key=lambda p: (sim.proc_free[p.name],
-                                          last_dispatch[p.name], p.name))
+            order = sorted(
+                platform.procs,
+                key=lambda p: (sim.proc_free[p.name], last_dispatch[p.name], p.name),
+            )
             for p in order:
                 if sim.proc_free[p.name] > t + 1e-12:
                     continue
@@ -430,6 +529,33 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
                     start_task(p, task, t)
                     last_dispatch[p.name] = t
                     progress = True
+
+    def issue_prefetch(t: float):
+        """Overlap engine: book transfers for the inputs of the first
+        ``prefetch_depth`` tasks of every worker's queue — those dispatch
+        decisions are already committed, so their cut-edge transfers can
+        proceed under whatever the worker is currently computing."""
+        if not overlap:
+            return
+        for p in platform.procs:
+            q = sim.proc_queue[p.name]
+            if not q:
+                continue
+            for i, task in enumerate(q):
+                if i >= prefetch_depth:
+                    break
+                if g.nodes[task].op == "source":
+                    continue
+                for pred in g.predecessors(task):
+                    e = g.edge(pred, task)
+                    src = g.nodes[pred].op == "source"
+                    block = f"{pred}->{task}" if src else pred
+                    if src and block not in sim.valid:
+                        sim.valid[block] = {platform.host_node: 0.0}
+                    ent = sim.valid.get(block)
+                    if ent is None or p.node in ent:
+                        continue  # producer unfinished, or already valid/booked
+                    fetch_block(block, e.nbytes, p.node, p.cls, t, "prefetch")
 
     def ready_or_defer(task: str, t: float):
         """Deps are met at ``t``; hand to the policy now or at the arrival."""
@@ -503,6 +629,7 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
                 sim.valid.setdefault("__host_inputs__", {})[platform.host_node] = 0.0
             ready_or_defer(n, 0.0)
     try_dispatch(0.0)
+    issue_prefetch(0.0)
 
     done = 0
     makespan = 0.0
@@ -531,7 +658,8 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
             else:
                 for p in g.predecessors(task):
                     if req_of.get(p) is None and all(
-                            s in sim.finished for s in g.successors(p)):
+                        s in sim.finished for s in g.successors(p)
+                    ):
                         mem_remove(p)
             for s in g.successors(task):
                 pred_count[s] -= 1
@@ -544,14 +672,15 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         elif kind == "add":
             apply_add(payload, t)
         try_dispatch(t)
+        issue_prefetch(t)
     if done != n_tasks:
         raise RuntimeError(f"deadlock: {done}/{n_tasks} tasks completed")
 
     return SimResult(
         makespan_ms=makespan,
-        n_transfers=metrics["n_transfers"],
-        bytes_transferred=metrics["bytes"],
-        transfer_busy_ms=metrics["tbusy"],
+        n_transfers=comm.n_transfers - comm.kind_counts.get("spill", 0),
+        bytes_transferred=comm.bytes_transferred - comm.kind_bytes.get("spill", 0),
+        transfer_busy_ms=comm.busy_ms,
         proc_busy_ms=busy,
         kernels_per_class=per_class,
         decision_overhead_ms=metrics["overhead"],
@@ -564,4 +693,7 @@ def simulate(g: TaskGraph, policy, platform: Platform, *,
         spill_events=metrics["spills"],
         spilled_bytes=metrics["spilled"],
         peak_mem_bytes=peak_mem,
+        lane_busy_ms=comm.lane_busy_ms(),
+        n_prefetched=comm.n_prefetched,
+        reload_events=metrics["reloads"],
     )

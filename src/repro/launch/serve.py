@@ -41,9 +41,10 @@ import numpy as np
 from repro.configs.registry import get_config, canon, make_batch
 from repro.core.arena import (SchedulerArena, format_table,
                               make_request_stream, DEFAULT_POLICIES)
+from repro.core.comm import Topology
 from repro.core.cost import Link
 from repro.core.graph import TaskGraph
-from repro.core.schedulers import make_policy
+from repro.core.schedulers import as_executed, make_policy
 from repro.core.serving import ServingExecutor, groups_for_platform
 from repro.core.simulate import Platform, Processor, WorkerDrop, simulate
 from repro.launch.steps import DistConfig
@@ -51,10 +52,10 @@ from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.launch.steps import make_ctx
 
-# assignment-producing policies the real executor can honor (reactive
-# queue policies like eager/dmda decide per-dispatch inside the simulator
-# and have no kernel->class map to execute)
-EXECUTED_POLICIES = ("gp", "incremental-gp")
+# every policy runs in executed mode: gp/incremental-gp produce class
+# assignments natively; eager/dmda/heft go through the worker-pull dispatch
+# shim (repro.core.schedulers.as_executed)
+EXECUTED_POLICIES = ("eager", "dmda", "heft", "gp", "incremental-gp")
 
 
 # ---------------------------------------------------------------------------
@@ -118,15 +119,19 @@ def request_dag(n_requests: int, decode_chunks: int, *, prefill_ms_big: float,
 
 
 def heterogeneous_platform(link_gbps: float = 6.25,
-                           mem_capacity_bytes: dict | None = None) -> Platform:
+                           mem_capacity_bytes: dict | None = None,
+                           lanes: int = 2) -> Platform:
     """A big pod (fast class) + a small pod (slow class) over DCN.
     ``mem_capacity_bytes`` optionally budgets each pod's KV capacity
-    (class -> bytes), turning memory pressure on in the simulator."""
+    (class -> bytes), turning memory pressure on in the simulator.
+    The cross-pod DCN link carries ``lanes`` concurrent copy engines
+    (per-link transfer lanes; KV migrations overlap with compute)."""
     procs = [Processor("big0", "big", 0), Processor("small0", "small", 1),
              Processor("small1", "small", 1)]
-    return Platform(procs, link=Link("dcn", bw=link_gbps * 1e9,
-                                     latency_ms=0.05), host_node=0,
-                    mem_capacity_bytes=dict(mem_capacity_bytes or {}))
+    dcn = Link("dcn", bw=link_gbps * 1e9, latency_ms=0.05)
+    return Platform(procs, link=dcn, host_node=0,
+                    mem_capacity_bytes=dict(mem_capacity_bytes or {}),
+                    topology=Topology.dedicated(dcn, lanes=lanes))
 
 
 def _policy_kwargs(scheduler: str) -> dict:
@@ -201,9 +206,9 @@ def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
         arrival_spread_ms=0.5, events_at=events_at)
     plat = heterogeneous_platform()
     executor = ServingExecutor(groups_for_platform(plat), plat, side=side)
-    arena = SchedulerArena(plat, policies,
-                           policy_kwargs={p: _policy_kwargs(p)
-                                          for p in policies})
+    factories = {p: (lambda n=p: as_executed(make_policy(n, **_policy_kwargs(n))))
+                 for p in policies}
+    arena = SchedulerArena(plat, factories)
     rows = arena.run_executed(stream, executor)
     return rows, arena
 

@@ -1,0 +1,394 @@
+"""Communication engine invariants: per-link lanes, compute/transfer
+overlap, spill-reload accounting, and simulator/executor unification.
+
+Plain pytest — must run without hypothesis (the tier-1 floor).  Randomized
+coverage uses the repo's deterministic LCG over seeds instead.
+"""
+
+import jax
+import pytest
+
+from repro.core.comm import CommEngine, Topology
+from repro.core.cost import Link
+from repro.core.executor import JaxExecutor
+from repro.core.graph import SOURCE, Kernel, TaskGraph, generate_dag
+from repro.core.partition import _lcg
+from repro.core.schedulers import WorkerPullPolicy, as_executed, make_policy
+from repro.core.serving import ServingExecutor, groups_for_platform
+from repro.core.simulate import Platform, Processor, simulate
+from repro.launch.serve import run_arena_executed
+
+DEV = jax.devices()[0]
+KV = 1 << 20
+GB = Link("gb", bw=1e9)  # 1 GB/s, zero latency: 1e9 bytes take 1000 ms
+
+
+# -- topology resolution -------------------------------------------------------
+
+
+def test_single_bus_serializes_and_dedicated_runs_concurrently():
+    bus = CommEngine(Topology.single_bus(GB))
+    t1 = bus.fetch("a", 0, 1, 10**9, now=0.0)
+    t2 = bus.fetch("b", 2, 3, 10**9, now=0.0)  # different pair, same bus
+    assert t1 == pytest.approx(1000.0)
+    assert t2 == pytest.approx(2000.0)  # queued behind on the shared lane
+
+    ded = CommEngine(Topology.dedicated(GB))
+    t1 = ded.fetch("a", 0, 1, 10**9, now=0.0)
+    t2 = ded.fetch("b", 2, 3, 10**9, now=0.0)  # its own link: overlaps
+    assert t1 == pytest.approx(1000.0)
+    assert t2 == pytest.approx(1000.0)
+
+
+def test_multi_lane_link_overlaps_up_to_lane_count():
+    eng = CommEngine(Topology.single_bus(GB, lanes=2))
+    finishes = [eng.fetch(f"b{i}", 0, 1, 10**9, now=0.0) for i in range(3)]
+    assert finishes[0] == pytest.approx(1000.0)
+    assert finishes[1] == pytest.approx(1000.0)  # second copy engine
+    assert finishes[2] == pytest.approx(2000.0)  # queues on the earliest lane
+
+
+def test_add_link_overrides_pair_and_scale_matrix():
+    fast = Link("fast", bw=10e9)
+    topo = Topology.dedicated(GB).add_link(0, 1, fast, lanes=2)
+    assert topo.transfer_ms(10**9, 0, 1) == pytest.approx(100.0)
+    assert topo.transfer_ms(10**9, 0, 2) == pytest.approx(1000.0)
+    assert topo.worst_ms(10**9) == pytest.approx(1000.0)
+    scale = topo.scale_matrix([0, 1, 2])
+    assert scale[0][0] == 0.0 and scale[1][1] == 0.0
+    assert scale[0][1] == pytest.approx(0.1)
+    assert scale[0][2] == pytest.approx(1.0)
+    # same node id on both ends: no transfer, scale 0
+    assert topo.scale_matrix([0, 0])[0][1] == 0.0
+
+
+def test_same_node_fetch_is_free_and_unbooked():
+    eng = CommEngine(Topology.single_bus(GB))
+    assert eng.fetch("a", 1, 1, 10**9, now=3.0) == pytest.approx(3.0)
+    assert eng.n_transfers == 0 and not eng.transfers
+
+
+# -- per-lane conservation -----------------------------------------------------
+
+
+def test_lane_busy_conservation_and_disjoint_intervals():
+    topo = Topology.dedicated(GB, lanes=2).add_link(0, 1, Link("f", bw=4e9))
+    eng = CommEngine(topo)
+    rnd = _lcg(7)
+    for i in range(200):
+        src = rnd(4)
+        dst = (src + 1 + rnd(3)) % 4
+        eng.fetch(
+            f"b{i}",
+            src,
+            dst,
+            (1 + rnd(50)) * 10**7,
+            now=rnd(1000) / 10.0,
+            src_ready=rnd(500) / 10.0,
+            kind="prefetch" if rnd(2) else "demand",
+        )
+    assert eng.n_transfers == 200
+    per_lane = eng.lane_busy_ms()
+    assert sum(per_lane.values()) == pytest.approx(eng.busy_ms)
+    total = 0.0
+    for lane, ts in eng.lane_log().items():
+        last = -1.0
+        for t in ts:
+            assert t.finish - t.start > 0
+            assert t.start >= last - 1e-9, f"lane {lane} overlaps itself"
+            last = t.finish
+            total += t.finish - t.start
+    assert total == pytest.approx(eng.busy_ms)
+
+
+# -- overlap invariants in the simulator ---------------------------------------
+
+
+def _two_class_platform(lanes: int = 2) -> Platform:
+    procs = [Processor("a0", "a", 0), Processor("b0", "b", 1)]
+    link = Link("ab", bw=2e9, latency_ms=0.01)
+    return Platform(
+        procs, link=link, host_node=0, topology=Topology.dedicated(link, lanes=lanes)
+    )
+
+
+def _alternating_chains(n_chains: int, length: int, nbytes: int) -> TaskGraph:
+    """Parallel chains whose kernels alternate their cheap class, so any
+    cost-aware placement cuts every hop — the transfer-heavy regime."""
+    g = TaskGraph()
+    for c in range(n_chains):
+        prev = None
+        for i in range(length):
+            cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+            g.add(
+                f"c{c}.k{i}",
+                op="decode",
+                costs={cheap: 4.0, dear: 40.0},
+                out_bytes=nbytes,
+            )
+            if prev is not None:
+                g.add_edge(prev, f"c{c}.k{i}", nbytes=nbytes)
+            prev = f"c{c}.k{i}"
+    g.validate()
+    return g
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("policy", ("heft", "gp"))
+def test_overlap_never_worse_than_serialized(policy, seed):
+    """Randomized DAGs: overlapped transfers never increase makespan over the
+    serialized issue-at-start semantics, and move the same demand."""
+    rnd = _lcg(seed)
+    g = generate_dag(18 + rnd(10), op="decode", seed=seed, include_source=False)
+    for i, k in enumerate(g.nodes.values()):
+        cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+        k.costs = {cheap: 2.0 + rnd(40) / 10.0, dear: 20.0 + rnd(100) / 10.0}
+        k.out_bytes = (1 + rnd(8)) * (KV // 2)
+    for e in g.edges:
+        g._edges[e.src, e.dst] = type(e)(e.src, e.dst, g.nodes[e.src].out_bytes, 1)
+    plat = _two_class_platform()
+    kw = {"weight_source": "min"} if policy == "gp" else {}
+    serial = simulate(g, make_policy(policy, **kw), plat, overlap=False)
+    overlapped = simulate(g, make_policy(policy, **kw), plat, overlap=True)
+    assert overlapped.makespan_ms <= serial.makespan_ms + 1e-6
+    assert overlapped.n_transfers == serial.n_transfers
+    assert overlapped.bytes_transferred == serial.bytes_transferred
+
+
+def test_overlap_hides_transfers_on_alternating_chains():
+    """Forced cut-per-hop workload: overlap must strictly win, and the win
+    comes from prefetch (prefetched transfer count > 0)."""
+    g = _alternating_chains(6, 6, 4 << 20)  # 4 MiB per hop over 2 GB/s = 2 ms
+    plat = _two_class_platform()
+    serial = simulate(g, make_policy("heft"), plat, overlap=False)
+    overlapped = simulate(g, make_policy("heft"), plat, overlap=True)
+    assert overlapped.n_prefetched > 0
+    assert overlapped.makespan_ms < serial.makespan_ms * 0.95
+    # conservation holds inside the full simulation too
+    assert sum(overlapped.lane_busy_ms.values()) == pytest.approx(
+        overlapped.transfer_busy_ms
+    )
+
+
+# -- spill reload accounting ---------------------------------------------------
+
+
+def test_spill_reload_reoccupies_residency_and_cascades():
+    """A spilled KV block pulled back from host re-occupies residency on the
+    pulling class and can evict further blocks (reload accounting)."""
+    g = TaskGraph()
+    req = {"req": "r0"}
+    for i in range(4):
+        g.add(f"k{i}", op="decode", costs={"a": 5.0}, mem_bytes=KV, meta=dict(req))
+    g.add_edge("k0", "k1", nbytes=KV)
+    g.add_edge("k1", "k2", nbytes=KV)
+    g.add_edge("k2", "k3", nbytes=KV)
+    g.add_edge("k0", "k3", nbytes=KV)  # k3 re-reads k0 after k0 was spilled
+    plat = Platform(
+        [Processor("h0", "h", 0), Processor("a0", "a", 1)],
+        host_node=0,
+        mem_capacity_bytes={"a": 2.2 * KV},
+    )
+    r = simulate(g, make_policy("only-a"), plat)
+    assert r.spill_events >= 2  # the reload itself forced further eviction
+    assert r.reload_events >= 1
+    assert r.spilled_bytes >= 2 * KV
+    assert r.makespan_ms > 0
+
+
+def test_host_coresident_spill_still_pays_the_staging_link():
+    """A class whose memory node IS the host node still pays wire time to
+    spill (HBM -> DRAM staging copy), as the shared-bus model always did."""
+    g = TaskGraph()
+    for i in range(4):
+        g.add(f"k{i}", op="decode", costs={"a": 5.0}, mem_bytes=KV, meta={"req": "r0"})
+        if i:
+            g.add_edge(f"k{i - 1}", f"k{i}", nbytes=KV)
+    plat = Platform(
+        [Processor("a0", "a", 0)],  # class a co-resident with the host node
+        host_node=0,
+        mem_capacity_bytes={"a": 2.2 * KV},
+    )
+    r = simulate(g, make_policy("only-a"), plat)
+    assert r.spill_events >= 1
+    assert r.transfer_busy_ms > 0.0  # the spill was booked on a lane
+    assert sum(r.lane_busy_ms.values()) == pytest.approx(r.transfer_busy_ms)
+
+
+def test_link_scale_fallback_nodes_are_distinct_and_collision_free():
+    """Unknown classes price at the default link: never free same-node pairs,
+    never colliding with a real node's fast link."""
+    from repro.core.comm import link_scale_matrix
+
+    fast = Link("ici", bw=50e9)
+    topo = Topology.dedicated(GB).add_link(0, 1, fast)
+    scale = link_scale_matrix(topo, {"a": 0, "b": 1}, ["a", "b", "x", "y"])
+    ia, ib, ix, iy = 0, 1, 2, 3
+    assert scale[ia][ib] == pytest.approx(0.02)  # the real fast link
+    assert scale[ix][iy] > 0.0  # two unknown classes are NOT same-node
+    # unknown pairs ride the default (slow) link, not the 0-1 fast link
+    assert scale[ia][ix] == pytest.approx(1.0)
+    assert scale[ix][iy] == pytest.approx(1.0)
+    assert scale[ib][ix] == pytest.approx(1.0)  # no collision with node 1
+
+
+def test_no_reload_without_spills():
+    g = TaskGraph()
+    g.add("k0", op="decode", costs={"a": 5.0}, mem_bytes=KV)
+    g.add("k1", op="decode", costs={"a": 5.0}, mem_bytes=KV)
+    g.add_edge("k0", "k1", nbytes=KV)
+    plat = Platform([Processor("h0", "h", 0), Processor("a0", "a", 1)], host_node=0)
+    r = simulate(g, make_policy("only-a"), plat)
+    assert r.spill_events == 0 and r.reload_events == 0
+
+
+# -- one comm model, two backends ----------------------------------------------
+
+
+def _request_graph_with_source(n_req: int, chunks: int) -> TaskGraph:
+    g = TaskGraph()
+    g.add_kernel(Kernel(name=SOURCE, op="source", costs={"big": 0.0, "small": 0.0}))
+    for r in range(n_req):
+        g.add(
+            f"r{r}.prefill",
+            op="prefill",
+            costs={"big": 20.0, "small": 60.0},
+            out_bytes=KV,
+        )
+        g.add_edge(SOURCE, f"r{r}.prefill", nbytes=KV)
+        prev = f"r{r}.prefill"
+        for c in range(chunks):
+            name = f"r{r}.dec{c}"
+            g.add(name, op="decode", costs={"big": 8.0, "small": 24.0}, out_bytes=KV)
+            g.add_edge(prev, name, nbytes=KV)
+            prev = name
+    g.validate()
+    return g
+
+
+def test_simulated_and_executed_transfer_counts_match():
+    """The same placement on the same stream moves the same blocks in the
+    simulator and through the real executor — one consistency protocol."""
+    from repro.core.arena import ArenaStep
+    from repro.launch.serve import heterogeneous_platform
+
+    g = _request_graph_with_source(5, 3)
+    plat = heterogeneous_platform()
+    sim_pol = make_policy("gp", scale_by_workers=True)
+    sim_res = simulate(g.copy(), sim_pol, plat)
+
+    exec_pol = make_policy("gp", scale_by_workers=True)
+    sx = ServingExecutor(groups_for_platform(plat), plat, side=16)
+    rep = sx.run_stream([ArenaStep(graph=g.copy(), tag="parity")], exec_pol)
+    assert rep.steps[0].n_transfers == sim_res.n_transfers
+    real = sum(1 for k in g.nodes.values() if k.op != "source")
+    assert rep.steps[0].n_kernels == real
+    assert sum(sim_res.kernels_per_class.values()) == real + 1  # + the source
+
+
+def test_five_policy_executed_parity_smoke():
+    """All five policies produce executed rows on the same stream, each
+    completing every kernel (the --execute table's parity condition)."""
+    expected = {"eager", "dmda", "heft", "gp", "incremental-gp"}
+    rows, arena = run_arena_executed(3, 2, steps=2, kv_mb=1.0, seed=0, side=16)
+    assert {r.policy for r in rows} == expected
+    kernels = {name: rep.to_dict()["kernels"] for name, rep in arena.reports.items()}
+    assert len(set(kernels.values())) == 1, kernels  # same stream, same work
+    for rep in arena.reports.values():
+        assert all(s.makespan_ms > 0 for s in rep.steps)
+
+
+def test_worker_pull_shim_exports_class_assignment():
+    g = _request_graph_with_source(3, 2)
+    plat = _two_class_platform()
+    for k in g.nodes.values():
+        k.costs = {"a": 0.0, "b": 0.0} if k.op == "source" else {"a": 5.0, "b": 10.0}
+    pol = as_executed(make_policy("dmda"))
+    assert isinstance(pol, WorkerPullPolicy)
+    assert pol.name == "dmda"
+    pol.prepare(g, plat)
+    tasks = [n for n, k in g.nodes.items() if k.op != "source"]
+    assert set(pol.assignment) >= set(tasks)
+    assert set(pol.assignment.values()) <= {"a", "b"}
+    # gp family passes through untouched
+    gp = make_policy("gp")
+    assert as_executed(gp) is gp
+
+
+# -- executor: prefetch + eviction regression ----------------------------------
+
+
+def _exec_chain_session(prefetch_depth=2):
+    g = TaskGraph()
+    g.add("a", op="k", costs={}, out_bytes=KV)
+    g.add("b", op="k", costs={}, out_bytes=KV)
+    g.add("c", op="k", costs={}, out_bytes=KV)
+    g.add_edge("a", "b", nbytes=KV)
+    g.add_edge("b", "c", nbytes=KV)
+    for k in g.nodes.values():
+        k.fn = lambda *xs: xs[0]
+    inputs = {"a/in": jax.numpy.ones((8, 8))}
+    ex = JaxExecutor({"g0": DEV, "g1": DEV})
+    comm = CommEngine(Topology.dedicated(GB))
+    s = ex.session(
+        g,
+        {"a": "g0", "b": "g0", "c": "g1"},
+        inputs,
+        comm=comm,
+        group_nodes={"g0": 0, "g1": 1},
+        prefetch_depth=prefetch_depth,
+        time_kernels=True,
+    )
+    return s, comm
+
+
+def test_session_prefetches_next_ready_inputs():
+    s, comm = _exec_chain_session()
+    assert s.step().name == "a"
+    assert s.step().name == "b"
+    # c is next, on g1: b's output must already be staged there
+    assert ("b", "g1") in s.prefetched
+    assert any(t.kind == "prefetch" and t.block == "b" for t in comm.transfers)
+    run = s.step()
+    assert run.name == "c" and run.n_transfers == 0  # consumed the prefetch
+    assert ("b", "g1") not in s.prefetched
+    assert s.done()
+
+
+def test_evict_group_reissues_prefetched_transfers():
+    """Regression: a prefetched-but-unconsumed copy on a dead group must be
+    discarded from the comm model too, so the consumer's re-pull books (and
+    charges) a fresh transfer instead of riding a phantom one."""
+    s, comm = _exec_chain_session()
+    s.step()  # a on g0
+    s.step()  # b on g0; prefetch staged b -> g1 for c
+    before = sum(1 for t in comm.transfers if t.block == "b" and t.dst == 1)
+    assert before == 1
+    assert s.evict_group("g1") == []  # b's g0 copy survives: no recompute
+    assert ("b", "g1") not in s.prefetched
+    assert ("b", "g1") not in s.vt_block
+    run = s.step()  # c still assigned to g1: must re-pull b for real
+    assert run.name == "c" and run.n_transfers == 1
+    after = sum(1 for t in comm.transfers if t.block == "b" and t.dst == 1)
+    assert after == 2  # the wasted prefetch AND the re-issued demand fetch
+    assert s.done()
+
+
+def test_session_virtual_timeline_monotone_per_group():
+    s, comm = _exec_chain_session()
+    runs = []
+    while True:
+        r = s.step()
+        if r is None:
+            break
+        runs.append(r)
+    assert [r.name for r in runs] == ["a", "b", "c"]
+    by_group: dict = {}
+    for r in runs:
+        assert r.t_finish >= r.t_start >= 0.0
+        if r.group in by_group:
+            assert r.t_start >= by_group[r.group] - 1e-9
+        by_group[r.group] = r.t_finish
+    res = s.result()
+    assert res.model_makespan_ms == pytest.approx(max(r.t_finish for r in runs))
+    assert sum(res.lane_busy_ms.values()) == pytest.approx(comm.busy_ms)

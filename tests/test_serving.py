@@ -217,17 +217,20 @@ def test_subgraph_of_induces_consistent_prefix():
 
 # -- executed arena + bench artifact + gate -----------------------------------
 
+ALL_EXECUTED = {"eager", "dmda", "heft", "gp", "incremental-gp"}
+
+
 def test_run_arena_executed_rows_and_bench_gate(tmp_path):
     rows, arena = run_arena_executed(3, 2, steps=2, kv_mb=1.0, seed=0,
                                      drop_step=None, side=16)
-    assert {r.policy for r in rows} == {"gp", "incremental-gp"}
+    assert {r.policy for r in rows} == ALL_EXECUTED
     for r in rows:
         assert r.steps == 2
         assert r.total_makespan_ms > 0.0
     out = tmp_path / "BENCH_serve.json"
     doc = write_bench(str(out), meta={"test": True}, sim_rows=[], arena=arena)
     assert out.exists()
-    assert set(doc["executed"]) == {"gp", "incremental-gp"}
+    assert set(doc["executed"]) == ALL_EXECUTED
     # the gate passes a run against itself, fails a clear regression
     doc["simulated"] = {"incremental-gp":
                         {"total_makespan_ms": 100.0, "transfers": 5}}
