@@ -1,0 +1,294 @@
+"""Hierarchical-topology sweep: shared-uplink contention, priced or ignored.
+
+Two experiments on the rack/pod platform
+(:func:`repro.launch.serve.hierarchical_platform` — each pod holds a big
+rack and a small rack; cross-pod traffic books both *shared* pod uplinks,
+one copy engine each):
+
+* **Locality** — a streaming stage pipeline (every stage reads all of the
+  previous stage's outputs, the HPDC'23 dataflow shape) swept over the
+  uplink-transfer/compute ratio.  ``incremental-gp`` prices the hierarchy
+  (link-scale matrix from the :class:`~repro.core.comm.HierTopology`, the
+  topology-aware class grouping in recursive bisection) against a
+  *topology-blind* ablation: the same policy prepared on a flattened view of
+  the platform (every class pair one uniform link), simulated on the real
+  hierarchy.  Queue baselines (eager / dmda) ride along for reference.
+* **Throttle** — an uplink-hot stream (a deep bulk queue of prefetchable
+  cross-pod pulls next to a latency-sensitive demand chain) run with the
+  contention-aware prefetch throttle on vs off.  The throttle defers
+  prefetches that would queue on a hot tier, so demand fetches stop waiting
+  behind speculative copies.
+
+Acceptance (``--check``):
+
+* on uplink-bound streams (ratio >= 1.0) hierarchy-aware incremental-gp
+  beats the topology-blind ablation by at least 10% makespan, and never
+  regresses at any swept ratio;
+* prefetch throttling never regresses mean demand-fetch latency vs
+  unthrottled prefetch, at every swept ratio.
+
+Everything is deterministic (no RNG at all).  Usage::
+
+    PYTHONPATH=src python -m benchmarks.hierarchy_bench [--quick]
+        [--out BENCH_hierarchy.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.comm import Topology
+from repro.core.graph import SOURCE, Kernel, TaskGraph
+from repro.core.schedulers import Policy, make_policy
+from repro.core.simulate import Platform, simulate
+from repro.launch.serve import hierarchical_platform
+
+from .common import emit
+
+COMPUTE_MS = 4.0
+WIN_RATIO = 1.0  # ratios at or above this are "uplink-bound": must win >= WIN_MIN
+WIN_MIN = 0.10
+
+
+class TopologyBlind(Policy):
+    """The ablation: prepare the wrapped policy on a *flattened* platform
+    (every class pair rides one uniform link, so the link-scale matrix
+    degenerates and the partitioner prices all cuts equally), then dispatch
+    its placement on the real hierarchy."""
+
+    def __init__(self, inner: Policy):
+        self.inner = inner
+        self.name = f"{inner.name}-blind"
+
+    @property
+    def assignment(self):
+        return self.inner.assignment
+
+    def prepare(self, g: TaskGraph, platform: Platform) -> float:
+        flat = platform.copy()
+        flat.topology = Topology.dedicated(platform.topo.pod)
+        return self.inner.prepare(g, flat)
+
+    def on_ready(self, task, sim):
+        return self.inner.on_ready(task, sim)
+
+    def on_idle(self, proc, sim):
+        return self.inner.on_idle(proc, sim)
+
+
+class PinnedPolicy(Policy):
+    """Fixed kernel -> class placement (the throttle experiment isolates the
+    comm engine: same placement, throttle on vs off)."""
+
+    name = "pinned"
+
+    def __init__(self, assignment: dict[str, str]):
+        self.assignment = dict(assignment)
+
+    def on_ready(self, task, sim):
+        workers = sim.platform.workers_of(self.assignment[task])
+        w = min(workers, key=lambda p: (sim.est_proc_avail[p.name], p.name))
+        sim.est_proc_avail[w.name] = (
+            max(sim.est_proc_avail[w.name], sim.now) + sim.exec_ms(task, w.cls)
+        )
+        return w.name
+
+
+def _uplink_bytes(platform: Platform, ratio: float) -> int:
+    """Bytes whose pod-uplink transfer time is ``ratio`` * COMPUTE_MS."""
+    pod = platform.topo.pod
+    return max(1, int(pod.bw * (COMPUTE_MS / 1e3) * ratio))
+
+
+def build_pipeline(platform: Platform, stages: int, width: int, ratio: float):
+    """The streaming stage pipeline: stage s reads every stage s-1 output,
+    so stages form cohesive blocks and the class *order* along the pipeline
+    decides which boundaries ride the shared pod uplinks."""
+    nbytes = _uplink_bytes(platform, ratio)
+    g = TaskGraph()
+    costs = {c: COMPUTE_MS for c in platform.classes}
+    for s in range(stages):
+        for w in range(width):
+            g.add(f"s{s}.w{w}", op="decode", costs=dict(costs), out_bytes=nbytes)
+            if s:
+                for w2 in range(width):
+                    g.add_edge(f"s{s - 1}.w{w2}", f"s{s}.w{w}", nbytes=nbytes)
+    g.validate()
+    return g
+
+
+def build_hot_uplink(platform: Platform, n_bulk: int, chain_len: int, ratio: float):
+    """The throttle stream: ``n_bulk`` independent cross-pod pulls pile onto
+    the small pod-1 rack (deep worker queues -> prefetch pressure on the
+    uplink) while a serial chain on the big pod-1 rack demand-fetches a host
+    block at every hop — the fetches throttling exists to protect."""
+    nbytes = _uplink_bytes(platform, ratio)
+    g = TaskGraph()
+    assignment: dict[str, str] = {}
+    costs = {c: COMPUTE_MS for c in platform.classes}
+    g.add_kernel(Kernel(name=SOURCE, op="source", costs={c: 0.0 for c in costs}))
+    for i in range(n_bulk):
+        name = f"bulk{i}"
+        g.add(name, op="decode", costs=dict(costs), out_bytes=nbytes)
+        g.add_edge(SOURCE, name, nbytes=nbytes)
+        assignment[name] = "pod1.small"
+    prev = None
+    for i in range(chain_len):
+        name = f"u{i}"
+        g.add(
+            name,
+            op="decode",
+            costs={c: 1.5 * COMPUTE_MS for c in costs},
+            out_bytes=nbytes,
+        )
+        g.add_edge(SOURCE, name, nbytes=nbytes)
+        if prev is not None:
+            g.add_edge(prev, name, nbytes=1)
+        assignment[name] = "pod1.big"
+        prev = name
+    g.validate()
+    return g, assignment
+
+
+def run_locality(ratio: float, stages: int, width: int) -> dict:
+    plat = hierarchical_platform()
+    g = build_pipeline(plat, stages, width, ratio)
+    aware = simulate(g, make_policy("incremental-gp"), plat)
+    blind = simulate(g, TopologyBlind(make_policy("incremental-gp")), plat)
+    baselines = {
+        name: simulate(g, make_policy(name), plat).makespan_ms
+        for name in ("eager", "dmda")
+    }
+    win = 1.0 - aware.makespan_ms / blind.makespan_ms
+    return {
+        "ratio": ratio,
+        "aware_ms": aware.makespan_ms,
+        "blind_ms": blind.makespan_ms,
+        "win": win,
+        "aware_pod_busy_ms": aware.tier_busy_ms.get("pod", 0.0),
+        "blind_pod_busy_ms": blind.tier_busy_ms.get("pod", 0.0),
+        "baseline_ms": baselines,
+    }
+
+
+def run_throttle(ratio: float, n_bulk: int, chain_len: int) -> dict:
+    plat = hierarchical_platform()
+
+    def once(throttle: bool) -> dict:
+        g, assignment = build_hot_uplink(plat, n_bulk, chain_len, ratio)
+        r = simulate(g, PinnedPolicy(assignment), plat, throttle=throttle)
+        n_demand = max(r.n_transfers - r.n_prefetched, 1)
+        return {
+            "makespan_ms": r.makespan_ms,
+            "demand_latency_ms": r.demand_latency_ms / n_demand,
+            "n_demand": n_demand,
+            "n_prefetched": r.n_prefetched,
+            "n_throttled": r.n_throttled,
+        }
+
+    on, off = once(True), once(False)
+    return {"ratio": ratio, "throttled": on, "unthrottled": off}
+
+
+def check_rows(locality: list[dict], throttle: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in locality:
+        r, win = row["ratio"], row["win"]
+        if row["aware_ms"] > row["blind_ms"] + 1e-6:
+            failures.append(
+                f"locality ratio {r}: aware REGRESSED vs blind "
+                f"({row['aware_ms']:.1f} > {row['blind_ms']:.1f} ms)"
+            )
+        if r >= WIN_RATIO - 1e-9 and win < WIN_MIN:
+            failures.append(
+                f"locality ratio {r}: aware won only {win:.1%} "
+                f"(need >= {WIN_MIN:.0%} on uplink-bound streams)"
+            )
+    for row in throttle:
+        on, off = row["throttled"], row["unthrottled"]
+        if on["demand_latency_ms"] > off["demand_latency_ms"] + 1e-6:
+            failures.append(
+                f"throttle ratio {row['ratio']}: demand latency REGRESSED "
+                f"({on['demand_latency_ms']:.2f} > "
+                f"{off['demand_latency_ms']:.2f} ms)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true", help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    ratios = (0.5, 1.0, 2.0) if args.quick else (0.25, 0.5, 1.0, 2.0)
+    stages, width = (8, 4) if args.quick else (8, 6)
+    n_bulk, chain_len = (24, 8) if args.quick else (32, 10)
+
+    locality = [run_locality(r, stages, width) for r in ratios]
+    throttle = [run_throttle(r, n_bulk, chain_len) for r in ratios]
+
+    print(f"{'ratio':>6}  {'aware_ms':>9}  {'blind_ms':>9}  {'win':>6}  baselines")
+    for row in locality:
+        base = " ".join(f"{k}={v:.0f}" for k, v in row["baseline_ms"].items())
+        print(
+            f"{row['ratio']:>6.2f}  {row['aware_ms']:>9.1f}  "
+            f"{row['blind_ms']:>9.1f}  {row['win']:>6.1%}  {base}"
+        )
+        emit(
+            f"hierarchy.r{row['ratio']}.win",
+            f"{row['win']:.3f}",
+            f"aware_ms={row['aware_ms']:.1f};blind_ms={row['blind_ms']:.1f};"
+            f"pod_busy={row['aware_pod_busy_ms']:.1f}/"
+            f"{row['blind_pod_busy_ms']:.1f}",
+        )
+    print(f"\n{'ratio':>6}  {'lat_on':>7}  {'lat_off':>7}  {'mk_on':>8}  {'mk_off':>8}")
+    for row in throttle:
+        on, off = row["throttled"], row["unthrottled"]
+        print(
+            f"{row['ratio']:>6.2f}  {on['demand_latency_ms']:>7.2f}  "
+            f"{off['demand_latency_ms']:>7.2f}  {on['makespan_ms']:>8.1f}  "
+            f"{off['makespan_ms']:>8.1f}"
+        )
+        emit(
+            f"hierarchy.r{row['ratio']}.demand_latency",
+            f"{on['demand_latency_ms']:.3f}",
+            f"unthrottled={off['demand_latency_ms']:.3f};"
+            f"throttled_n={on['n_throttled']}",
+        )
+
+    if args.out:
+        doc = {
+            "meta": {
+                "stages": stages,
+                "width": width,
+                "n_bulk": n_bulk,
+                "chain_len": chain_len,
+                "quick": args.quick,
+            },
+            "locality": locality,
+            "throttle": throttle,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[hierarchy] wrote {args.out}")
+
+    failures = check_rows(locality, throttle)
+    if args.check:
+        for msg in failures:
+            print(f"[hierarchy] FAIL: {msg}")
+        if failures:
+            return 1
+        print(
+            "[hierarchy] PASS: aware igp never loses to the blind ablation "
+            f"(>= {WIN_MIN:.0%} win when uplink-bound); throttling never "
+            "regresses demand-fetch latency"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

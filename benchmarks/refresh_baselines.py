@@ -1,0 +1,156 @@
+"""Regenerate / validate the serving-gate baseline.
+
+``--refresh`` rebuilds ``benchmarks/baselines/serve_baseline.json`` with the
+EXACT stream flags the CI ``bench-smoke`` job runs (one source of truth:
+:data:`CI_STREAM`), so a refreshed baseline can never drift from the gated
+configuration.  Run it whenever an intentional scheduling-quality change
+moves the simulated numbers::
+
+    PYTHONPATH=src python -m benchmarks.refresh_baselines --refresh
+
+``--validate`` (the CI step) checks the checked-in baseline's schema and
+keys against what ``benchmarks/gate_serve.py`` consumes — the gated
+simulated fields, the executed sections for every executed policy, and the
+stream flags in ``meta`` — catching a stale or hand-mangled baseline before
+the gate mysteriously passes (or fails) against it::
+
+    PYTHONPATH=src python -m benchmarks.refresh_baselines --validate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import pathlib
+import sys
+
+from repro.launch.serve import (
+    EXECUTED_POLICIES,
+    run_arena,
+    run_arena_executed,
+    write_bench,
+)
+
+from .gate_serve import GATED_POLICY
+
+BASELINE = pathlib.Path(__file__).parent / "baselines" / "serve_baseline.json"
+
+# the CI bench-smoke stream, verbatim (.github/workflows/ci.yml)
+CI_STREAM = {
+    "requests": 12,
+    "decode_chunks": 6,
+    "steps": 5,
+    "drop_step": 2,
+    "seed": 0,
+    "kernel_side": 48,
+}
+
+# what gate_serve.check() actually reads
+GATED_SIM_FIELDS = ("total_makespan_ms", "transfers")
+EXECUTED_FIELDS = ("kernels", "steps")
+
+
+def refresh(path: pathlib.Path) -> dict:
+    rows, _ = run_arena(
+        CI_STREAM["requests"],
+        CI_STREAM["decode_chunks"],
+        steps=CI_STREAM["steps"],
+        drop_step=CI_STREAM["drop_step"],
+        seed=CI_STREAM["seed"],
+    )
+    _, arena = run_arena_executed(
+        CI_STREAM["requests"],
+        CI_STREAM["decode_chunks"],
+        steps=CI_STREAM["steps"],
+        drop_step=CI_STREAM["drop_step"],
+        seed=CI_STREAM["seed"],
+        side=CI_STREAM["kernel_side"],
+    )
+    return write_bench(str(path), meta=dict(CI_STREAM), sim_rows=rows, arena=arena)
+
+
+def validate(path: pathlib.Path) -> list[str]:
+    """Human-readable schema/keys failures (empty = baseline is gateable)."""
+    failures: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read baseline {path}: {e}"]
+
+    meta = doc.get("meta", {})
+    for key, want in CI_STREAM.items():
+        got = meta.get(key)
+        if got != want:
+            failures.append(
+                f"meta.{key} = {got!r} but CI runs the stream with {want!r} "
+                "(stale baseline? refresh with --refresh)"
+            )
+
+    sim = doc.get("simulated", {}).get(GATED_POLICY)
+    if not isinstance(sim, dict):
+        failures.append(f"simulated section lacks the gated policy {GATED_POLICY!r}")
+    else:
+        for field in GATED_SIM_FIELDS:
+            if not isinstance(sim.get(field), numbers.Number):
+                failures.append(
+                    f"simulated.{GATED_POLICY}.{field} missing or non-numeric "
+                    f"({sim.get(field)!r}) — gate_serve.py gates on it"
+                )
+
+    executed = doc.get("executed", {})
+    missing = [p for p in EXECUTED_POLICIES if p not in executed]
+    if missing:
+        failures.append(f"executed section lacks policies {missing}")
+    steps_seen = set()
+    for policy, rep in executed.items():
+        for field in EXECUTED_FIELDS:
+            if not isinstance(rep.get(field), numbers.Number):
+                failures.append(
+                    f"executed.{policy}.{field} missing or non-numeric "
+                    f"({rep.get(field)!r})"
+                )
+        if isinstance(rep.get("steps"), numbers.Number):
+            steps_seen.add(rep["steps"])
+    if steps_seen and steps_seen != {CI_STREAM["steps"]}:
+        failures.append(
+            f"executed steps {sorted(steps_seen)} != CI stream steps "
+            f"{CI_STREAM['steps']}"
+        )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true", help="rebuild the baseline")
+    ap.add_argument(
+        "--validate", action="store_true", help="schema-check the checked-in baseline"
+    )
+    ap.add_argument("--path", type=str, default=str(BASELINE))
+    args = ap.parse_args(argv)
+    path = pathlib.Path(args.path)
+    if not (args.refresh or args.validate):
+        ap.error("pick --refresh and/or --validate")
+
+    if args.refresh:
+        doc = refresh(path)
+        sim = doc["simulated"][GATED_POLICY]
+        print(
+            f"[baseline] wrote {path}: {GATED_POLICY} "
+            f"makespan={sim['total_makespan_ms']:.2f}ms "
+            f"transfers={sim['transfers']}"
+        )
+
+    if args.validate:
+        failures = validate(path)
+        for msg in failures:
+            print(f"[baseline] FAIL: {msg}")
+        if failures:
+            return 1
+        print(f"[baseline] PASS: {path} matches gate_serve.py expectations")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

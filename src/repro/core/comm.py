@@ -30,12 +30,25 @@ compute/transfer overlap happens: the copy proceeds while the destination
 worker is still busy with the previous kernel, so the cut edges the
 graph-partition policy minimizes are exactly the transfers that can hide
 under compute.
+
+Real serving fleets are not flat either: nodes sit in racks, racks in pods,
+and cross-rack / cross-pod traffic funnels through *shared* uplinks where
+contention — not point-to-point bandwidth — decides what a cut costs.
+:class:`HierTopology` models exactly that: each tier (leaf NIC, rack switch
+uplink, pod uplink) has its own bandwidth/latency/lane pool and a transfer
+books a lane on **every** tier it crosses, so two cross-pod copies between
+disjoint node pairs still contend on the same pod uplink.  On hierarchical
+topologies the engine also turns on **contention-aware prefetch throttling**
+by default: a prefetch only books when every tier on its path has a free
+lane *right now* — otherwise it is deferred (``n_throttled``) and retried at
+the next scheduling event, so speculative copies never queue a later demand
+fetch behind them on a hot tier.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 from .cost import Link
 
@@ -44,7 +57,12 @@ REF_BYTES = 1 << 20  # representative block for relative link pricing
 
 @dataclasses.dataclass(frozen=True)
 class Transfer:
-    """One booked copy: ``block`` moved ``src`` -> ``dst`` on ``lane``."""
+    """One booked copy: ``block`` moved ``src`` -> ``dst`` on ``lane``.
+
+    ``lanes`` lists every lane the copy occupies — one per tier crossed on a
+    hierarchical topology, a 1-tuple on flat ones (``lane`` is the bottleneck
+    tier's lane).  ``requested`` is when the copy was asked for, so
+    ``finish - requested`` is the fetch latency including queueing."""
 
     block: str
     src: int
@@ -54,6 +72,12 @@ class Transfer:
     finish: float
     lane: str
     kind: str = "demand"  # "demand" | "prefetch" | "spill"
+    lanes: tuple = ()
+    requested: float = 0.0
+
+    @property
+    def all_lanes(self) -> tuple:
+        return self.lanes or (self.lane,)
 
 
 class Topology:
@@ -65,6 +89,10 @@ class Topology:
     the default link.  :meth:`add_link` overrides individual pairs either way
     (host<->class and class<->class links with distinct speeds).
     """
+
+    # flat topologies never auto-enable prefetch throttling (bit-for-bit
+    # back-compat); HierTopology flips this
+    hierarchical = False
 
     def __init__(
         self,
@@ -121,6 +149,12 @@ class Topology:
         name = f"{self.default.name}:{key[0]}-{key[1]}"
         return (name, self.default, self.default_lanes)
 
+    def route(self, src: int, dst: int) -> list[tuple[str, Link, int]]:
+        """The lane groups a ``src`` -> ``dst`` copy must book, in path order.
+        Flat topologies are single-hop: one link per node pair.  Hierarchical
+        topologies return every tier the copy crosses."""
+        return [self.link_of(src, dst)]
+
     def links(self) -> list[tuple[str, Link, int]]:
         """Every explicitly registered link plus the default."""
         out = [(f"{self.default.name}:*", self.default, self.default_lanes)]
@@ -165,26 +199,177 @@ class Topology:
         return out
 
 
+class HierTopology(Topology):
+    """Rack/pod hierarchy with shared uplinks between memory nodes.
+
+    Three tiers, each with its own :class:`~repro.core.cost.Link` and lane
+    pool:
+
+    * ``leaf`` — every node's NIC into its rack switch (lane group per node);
+    * ``rack`` — every rack's uplink into its pod switch (lane group per
+      rack, shared by all that rack's nodes);
+    * ``pod`` — every pod's uplink into the cross-pod spine (lane group per
+      pod, shared by *everything* leaving the pod).
+
+    A transfer books a lane on every tier it crosses: same-rack copies ride
+    the two leaf NICs, cross-rack copies additionally book both rack
+    uplinks, and cross-pod copies both pod uplinks too — so two cross-pod transfers
+    between disjoint node pairs still contend on the shared uplinks, which is
+    the regime where partition locality (not point-to-point bandwidth)
+    decides the cut cost.  The transfer's wall time is priced at the
+    bottleneck tier (cut-through routing: every crossed lane is held for the
+    whole copy).
+
+    Nodes absent from ``node_rack`` (and racks absent from ``rack_pod``) get
+    a synthetic rack/pod of their own, so unknown endpoints always price and
+    contend as worst-case cross-pod traffic — the same conservative fallback
+    the flat ``link_scale_matrix`` uses for unknown classes.
+    """
+
+    hierarchical = True
+
+    def __init__(
+        self,
+        *,
+        leaf: Link,
+        rack: Link,
+        pod: Link,
+        node_rack: Mapping[int, object],
+        rack_pod: Mapping[object, object],
+        leaf_lanes: int = 1,
+        rack_lanes: int = 1,
+        pod_lanes: int = 1,
+    ):
+        super().__init__(pod, default_lanes=pod_lanes, shared_bus=False)
+        if min(leaf_lanes, rack_lanes, pod_lanes) < 1:
+            raise ValueError("every tier needs at least one lane")
+        self.leaf = leaf
+        self.rack = rack
+        self.pod = pod
+        self.node_rack = dict(node_rack)
+        self.rack_pod = dict(rack_pod)
+        self.leaf_lanes = leaf_lanes
+        self.rack_lanes = rack_lanes
+        self.pod_lanes = pod_lanes
+
+    def copy(self) -> "HierTopology":
+        return HierTopology(
+            leaf=self.leaf,
+            rack=self.rack,
+            pod=self.pod,
+            node_rack=self.node_rack,
+            rack_pod=self.rack_pod,
+            leaf_lanes=self.leaf_lanes,
+            rack_lanes=self.rack_lanes,
+            pod_lanes=self.pod_lanes,
+        )
+
+    def add_link(self, a: int, b: int, link: Link, *, lanes: int = 1):
+        raise NotImplementedError(
+            "HierTopology prices paths by tier, not per-pair links"
+        )
+
+    # -- membership ----------------------------------------------------------
+
+    def rack_of(self, node: int):
+        """The node's rack; unknown nodes get a private synthetic rack."""
+        return self.node_rack.get(node, ("?rack", node))
+
+    def pod_of(self, node: int):
+        """The node's pod; unknown racks get a private synthetic pod."""
+        rack = self.rack_of(node)
+        return self.rack_pod.get(rack, ("?pod", rack))
+
+    # -- resolution ----------------------------------------------------------
+
+    def route(self, src: int, dst: int) -> list[tuple[str, Link, int]]:
+        """Every tier lane group a ``src`` -> ``dst`` copy crosses, leaf out
+        through the shared uplinks and back down.  Same-node routes (spill
+        staging) occupy just the node's own NIC."""
+        segs = [(f"leaf:{src}", self.leaf, self.leaf_lanes)]
+        if src == dst:
+            return segs
+        ra, rb = self.rack_of(src), self.rack_of(dst)
+        if ra != rb:
+            segs.append((f"rack:{ra}", self.rack, self.rack_lanes))
+            pa, pb = self.pod_of(src), self.pod_of(dst)
+            if pa != pb:
+                segs.append((f"pod:{pa}", self.pod, self.pod_lanes))
+                segs.append((f"pod:{pb}", self.pod, self.pod_lanes))
+            segs.append((f"rack:{rb}", self.rack, self.rack_lanes))
+        segs.append((f"leaf:{dst}", self.leaf, self.leaf_lanes))
+        return segs
+
+    def link_of(self, src: int, dst: int) -> tuple[str, Link, int]:
+        """The bottleneck tier of the path (slowest crossed link)."""
+        return max(
+            self.route(src, dst), key=lambda seg: seg[1].transfer_ms(REF_BYTES)
+        )
+
+    def links(self) -> list[tuple[str, Link, int]]:
+        return [
+            ("leaf:*", self.leaf, self.leaf_lanes),
+            ("rack:*", self.rack, self.rack_lanes),
+            ("pod:*", self.pod, self.pod_lanes),
+        ]
+
+    # -- pricing -------------------------------------------------------------
+
+    def transfer_ms(
+        self, nbytes: int, src: int | None = None, dst: int | None = None
+    ) -> float:
+        """Bottleneck-tier price of the actual path (leaf for same-rack,
+        rack uplink for cross-rack, pod uplink for cross-pod); endpoint-free
+        calls price at the worst tier, exactly as the flat model prices at
+        the worst link."""
+        if src is None or dst is None:
+            return self.worst_ms(nbytes)
+        if src == dst:
+            return 0.0
+        return max(link.transfer_ms(nbytes) for _, link, _ in self.route(src, dst))
+
+
 class CommEngine:
     """Event-driven transfer scheduler over a :class:`Topology`'s lanes.
 
     Pure resource model: :meth:`fetch` books one copy on the earliest-free
-    lane of the right link and returns its completion time.  Validity (which
-    node holds which block) is the caller's job — the simulator keeps its
-    ``valid`` map, the executor session its virtual block times — so the same
-    engine backs both without owning either's consistency protocol.
+    lane of every link on the route and returns its completion time.
+    Validity (which node holds which block) is the caller's job — the
+    simulator keeps its ``valid`` map, the executor session its virtual block
+    times — so the same engine backs both without owning either's
+    consistency protocol.
+
+    ``throttle`` (default: on for hierarchical topologies, off for flat
+    ones) is the contention-aware prefetch policy: a ``kind="prefetch"``
+    fetch only books when every lane group on its path has a free lane at
+    the desired start — a prefetch that would queue (and that a later demand
+    fetch would then queue *behind* on a hot tier) is rejected instead
+    (``None`` return, counted in ``n_throttled``); the caller retries at its
+    next scheduling event, by which point the consumer may simply demand the
+    block at full priority.  Demand fetches and spills always book.
     """
 
-    def __init__(self, topo: Topology):
+    def __init__(self, topo: Topology, *, throttle: bool | None = None):
         self.topo = topo
+        self.throttle = topo.hierarchical if throttle is None else throttle
         self._lane_free: dict[str, list[float]] = {}
         self.transfers: list[Transfer] = []
         self.n_transfers = 0
         self.n_prefetched = 0
+        # distinct (block, dst) prefetches the throttle deferred at least
+        # once — callers retry a deferred prefetch at every scheduling event,
+        # and those retries must not inflate the surfaced counter
+        self._throttled: set[tuple[str, int]] = set()
         self.bytes_transferred = 0
         self.busy_ms = 0.0
         self.kind_counts: dict[str, int] = {}
         self.kind_bytes: dict[str, int] = {}
+
+    @property
+    def n_throttled(self) -> int:
+        """Distinct prefetches (block, destination) the contention throttle
+        deferred at least once — not retry attempts."""
+        return len(self._throttled)
 
     def fetch(
         self,
@@ -197,32 +382,59 @@ class CommEngine:
         src_ready: float = 0.0,
         kind: str = "demand",
         book_same_node: bool = False,
-    ) -> float:
+    ) -> float | None:
         """Book one ``src`` -> ``dst`` copy; returns its completion time.
 
-        The copy starts at max(now, source-ready, earliest-free lane of the
-        link) — a busy link queues the transfer, an idle one overlaps it with
-        whatever compute is running.  Same-node "copies" are free and not
-        booked, unless ``book_same_node`` forces the booking (spills from a
-        host-coresident memory node still cross a staging link)."""
+        The copy starts at max(now, source-ready, earliest-free lane of
+        every crossed link) — a busy link queues the transfer, an idle one
+        overlaps it with whatever compute is running.  On a hierarchical
+        topology the copy occupies one lane per crossed tier for its whole
+        duration, priced at the bottleneck tier.  Same-node "copies" are
+        free and not booked, unless ``book_same_node`` forces the booking
+        (spills from a host-coresident memory node still cross a staging
+        link).  A throttled prefetch books nothing and returns ``None``
+        (see class docstring)."""
         if src == dst and not book_same_node:
             return max(now, src_ready)
-        key, link, lanes = self.topo.link_of(src, dst)
-        frees = self._lane_free.setdefault(key, [0.0] * lanes)
-        lane_i = min(range(lanes), key=lambda i: (frees[i], i))
-        start = max(now, src_ready, frees[lane_i])
-        dur = link.transfer_ms(nbytes)
+        segs = self.topo.route(src, dst)
+        picks: list[tuple[str, list[float], int]] = []
+        for key, _link, lanes in segs:
+            frees = self._lane_free.setdefault(key, [0.0] * lanes)
+            lane_i = min(range(lanes), key=lambda i: (frees[i], i))
+            picks.append((key, frees, lane_i))
+        want = max(now, src_ready)
+        start = max([want] + [frees[i] for _, frees, i in picks])
+        if kind == "prefetch" and self.throttle and start > want + 1e-9:
+            self._throttled.add((block, dst))
+            return None
+        dur = max(link.transfer_ms(nbytes) for _, link, _ in segs)
         finish = start + dur
-        frees[lane_i] = finish
-        lane = f"{key}[{lane_i}]"
+        lanes_used = []
+        for key, frees, lane_i in picks:
+            frees[lane_i] = finish
+            lanes_used.append(f"{key}[{lane_i}]")
+        bottleneck = max(
+            range(len(segs)), key=lambda i: segs[i][1].transfer_ms(nbytes)
+        )
         self.transfers.append(
-            Transfer(block, src, dst, nbytes, start, finish, lane, kind)
+            Transfer(
+                block,
+                src,
+                dst,
+                nbytes,
+                start,
+                finish,
+                lanes_used[bottleneck],
+                kind,
+                lanes=tuple(lanes_used),
+                requested=want,
+            )
         )
         self.n_transfers += 1
         if kind == "prefetch":
             self.n_prefetched += 1
         self.bytes_transferred += nbytes
-        self.busy_ms += dur
+        self.busy_ms += dur * len(segs)
         self.kind_counts[kind] = self.kind_counts.get(kind, 0) + 1
         self.kind_bytes[kind] = self.kind_bytes.get(kind, 0) + nbytes
         return finish
@@ -231,14 +443,34 @@ class CommEngine:
         """Total booked time per lane (conservation: sums to ``busy_ms``)."""
         out: dict[str, float] = {}
         for t in self.transfers:
-            out[t.lane] = out.get(t.lane, 0.0) + (t.finish - t.start)
+            for lane in t.all_lanes:
+                out[lane] = out.get(lane, 0.0) + (t.finish - t.start)
         return out
+
+    def tier_busy_ms(self) -> dict[str, float]:
+        """Booked lane time aggregated per tier (the lane key's prefix:
+        ``leaf``/``rack``/``pod`` on a hierarchy, the link name on flat
+        topologies) — the contention signal the throttle acts on."""
+        out: dict[str, float] = {}
+        for lane, ms in self.lane_busy_ms().items():
+            tier = lane.split(":", 1)[0]
+            out[tier] = out.get(tier, 0.0) + ms
+        return out
+
+    def demand_latency_ms(self) -> float:
+        """Total demand-fetch latency (completion minus request time,
+        queueing included) — the quantity prefetch throttling exists to
+        protect."""
+        return sum(
+            t.finish - t.requested for t in self.transfers if t.kind == "demand"
+        )
 
     def lane_log(self) -> dict[str, list[Transfer]]:
         """Per-lane transfer intervals in booking order (for invariants)."""
         out: dict[str, list[Transfer]] = {}
         for t in self.transfers:
-            out.setdefault(t.lane, []).append(t)
+            for lane in t.all_lanes:
+                out.setdefault(lane, []).append(t)
         return out
 
 
@@ -292,6 +524,7 @@ def link_scale_for(
 
 __all__ = [
     "CommEngine",
+    "HierTopology",
     "Topology",
     "Transfer",
     "class_nodes_of",

@@ -81,6 +81,14 @@ PCIE3_X16 = Link("pcie3_x16", bw=12.0e9, latency_ms=0.010)     # ~12 GB/s effect
 ICI_LINK = Link("ici", bw=50e9, latency_ms=0.001)               # intra-pod
 DCN_CROSSPOD = Link("dcn", bw=6.25e9, latency_ms=0.050)         # inter-pod (slow bus)
 
+# Hierarchical-fabric tier presets (repro.core.comm.HierTopology): a node's
+# NIC into its rack switch, the rack's uplink into the pod switch, and the
+# pod's uplink into the cross-pod spine — the shared tier everything leaving
+# the pod contends on.
+LEAF_NIC = Link("leaf", bw=50e9, latency_ms=0.001)
+RACK_UPLINK = Link("rack", bw=25e9, latency_ms=0.002)
+POD_UPLINK = Link("pod", bw=6.25e9, latency_ms=0.050)
+
 # Efficiencies calibrated to the paper's MEASURED kernel characteristics
 # (Fig 3: CPU/GPU exec ratio — MA flat and low (~3), MM steep; Fig 4:
 # GPU-exec/transfer ratio — MA ~0.3-0.6, MM >1 rising).  The paper's MA GPU

@@ -21,7 +21,10 @@ lanes): compute starts when the group is free AND the inputs' modeled copies
 have landed, instead of serializing measured kernel time plus modeled
 transfer time on one clock.  Inputs of the next ready kernels are
 *prefetched* (real ``device_put`` + a ``kind="prefetch"`` lane booking), so
-cut-edge transfers hide under the previous kernel's compute.
+cut-edge transfers hide under the previous kernel's compute.  On a
+hierarchical topology every pull books each tier its path crosses (shared
+pod uplinks contend) and prefetches are contention-throttled: a deferred
+prefetch moves nothing and simply retries at the next step.
 
 Two entry points:
 
@@ -56,7 +59,7 @@ from .comm import CommEngine
 
 @dataclasses.dataclass
 class ExecResult:
-    outputs: dict                       # block name -> array (exit kernels)
+    outputs: dict  # block name -> array (exit kernels)
     makespan_ms: float
     n_transfers: int
     bytes_transferred: int
@@ -65,9 +68,12 @@ class ExecResult:
     #                                   # kernel -> wall ms (time_kernels=True)
     reexecuted: list = dataclasses.field(default_factory=list)
     #                                   # kernels re-run after group eviction
-    model_makespan_ms: float = 0.0      # two-resource virtual-clock makespan
+    model_makespan_ms: float = 0.0  # two-resource virtual-clock makespan
     lane_busy_ms: dict = dataclasses.field(default_factory=dict)
     n_prefetched: int = 0
+    tier_busy_ms: dict = dataclasses.field(default_factory=dict)
+    #                                   # wire time per topology tier
+    n_throttled: int = 0  # prefetches deferred by the throttle
 
 
 @dataclasses.dataclass
@@ -76,11 +82,11 @@ class KernelRun:
 
     name: str
     group: str
-    ms: float            # wall ms (0.0 unless the session times kernels)
-    n_transfers: int     # transfers this kernel's input gather caused
-    nbytes: int          # bytes those transfers moved
-    t_start: float = 0.0     # virtual start (comm model attached)
-    t_finish: float = 0.0    # virtual finish (compute + overlapped transfers)
+    ms: float  # wall ms (0.0 unless the session times kernels)
+    n_transfers: int  # transfers this kernel's input gather caused
+    nbytes: int  # bytes those transfers moved
+    t_start: float = 0.0  # virtual start (comm model attached)
+    t_finish: float = 0.0  # virtual finish (compute + overlapped transfers)
 
 
 class ExecSession:
@@ -92,18 +98,26 @@ class ExecSession:
     an online scheduling policy needs to co-drive real execution.
 
     ``comm`` + ``group_nodes`` attach the shared communication model: every
-    pull books a lane on the actual src-node -> dst-node link and kernels get
-    virtual start/finish times with transfers overlapping compute
-    (``prefetch_depth`` next-ready kernels have their inputs staged early).
+    pull books a lane on the actual src-node -> dst-node link (every crossed
+    tier of a hierarchical topology) and kernels get virtual start/finish
+    times with transfers overlapping compute (``prefetch_depth`` next-ready
+    kernels have their inputs staged early).
     """
 
-    def __init__(self, executor: "JaxExecutor", g, assignment: Mapping[str, str],
-                 inputs: Mapping[str, jax.Array] | None = None, *,
-                 host_group: str | None = None, time_kernels: bool = False,
-                 gated: Iterable[str] = (),
-                 comm: CommEngine | None = None,
-                 group_nodes: Mapping[str, int] | None = None,
-                 prefetch_depth: int = 2):
+    def __init__(
+        self,
+        executor: "JaxExecutor",
+        g,
+        assignment: Mapping[str, str],
+        inputs: Mapping[str, jax.Array] | None = None,
+        *,
+        host_group: str | None = None,
+        time_kernels: bool = False,
+        gated: Iterable[str] = (),
+        comm: CommEngine | None = None,
+        group_nodes: Mapping[str, int] | None = None,
+        prefetch_depth: int = 2,
+    ):
         g.validate()
         self.ex = executor
         self.g = g
@@ -137,8 +151,7 @@ class ExecSession:
         self.kernel_ms: dict[str, float] = {}
         self.blocks: dict[str, jax.Array] = {}
         self.reexecuted: list[str] = []
-        self._order = [n for n in g.topo_order()
-                       if g.nodes[n].op != "source"]
+        self._order = [n for n in g.topo_order() if g.nodes[n].op != "source"]
         self._done: set[str] = set()
         self._t0 = time.perf_counter()
 
@@ -150,8 +163,7 @@ class ExecSession:
     def _seed(self, block: str) -> None:
         """(Re-)materialize a host-resident input block on the host group."""
         dev = self.ex.groups[self.host_group]
-        self.valid[block] = {self.host_group: jax.device_put(
-            self._inputs[block], dev)}
+        self.valid[block] = {self.host_group: jax.device_put(self._inputs[block], dev)}
         self.vt_block[(block, self.host_group)] = 0.0
 
     def pending(self) -> list[str]:
@@ -178,8 +190,10 @@ class ExecSession:
         for n in self._order:
             if n in self._done or n in self.gated:
                 continue
-            if all(p in self._done or self.g.nodes[p].op == "source"
-                   for p in self.g.predecessors(n)):
+            if all(
+                p in self._done or self.g.nodes[p].op == "source"
+                for p in self.g.predecessors(n)
+            ):
                 return n
         return None
 
@@ -189,8 +203,10 @@ class ExecSession:
         for n in self._order:
             if n in self._done or n in self.gated:
                 continue
-            if all(p in self._done or self.g.nodes[p].op == "source"
-                   for p in self.g.predecessors(n)):
+            if all(
+                p in self._done or self.g.nodes[p].op == "source"
+                for p in self.g.predecessors(n)
+            ):
                 out.append(n)
                 if len(out) >= count:
                     break
@@ -233,7 +249,8 @@ class ExecSession:
             if block in self._inputs:
                 self._seed(block)
             elif block in self.g.nodes and any(
-                    s not in self._done for s in self.g.successors(block)):
+                s not in self._done for s in self.g.successors(block)
+            ):
                 self._requeue(block)
         return self.reexecuted[before:]
 
@@ -255,7 +272,9 @@ class ExecSession:
 
     def _pull(self, key: str, nbytes: int, grp: str, dev, kind: str) -> int:
         """Copy ``key`` onto ``grp`` if missing; returns bytes moved (0 when
-        already valid there).  Books the comm model + virtual block time."""
+        already valid there, or when the contention throttle deferred a
+        prefetch — the lanes are booked *before* the real ``device_put``, so
+        a throttled prefetch costs nothing and retries later)."""
         ent = self.valid.get(key)
         if ent is None or grp in ent:
             return 0
@@ -264,17 +283,23 @@ class ExecSession:
         else:
             donor_grp = next(iter(ent))
         donor = ent[donor_grp]
-        ent[grp] = jax.device_put(donor, dev)
         nb = nbytes or donor.size * donor.dtype.itemsize
         if self.comm is not None:
             te = self.comm.fetch(
-                key, self._node_of(donor_grp), self._node_of(grp), nb,
+                key,
+                self._node_of(donor_grp),
+                self._node_of(grp),
+                nb,
                 now=self.vnow,
                 src_ready=self.vt_block.get((key, donor_grp), 0.0),
-                kind=kind)
+                kind=kind,
+            )
+            if te is None:  # throttled prefetch: nothing moved
+                return 0
             self.vt_block[(key, grp)] = te
             if kind == "prefetch":
                 self.prefetched.add((key, grp))
+        ent[grp] = jax.device_put(donor, dev)
         return nb
 
     def _gather(self, name: str, grp: str, dev) -> tuple[list, int, int, float]:
@@ -339,8 +364,9 @@ class ExecSession:
             self.kernel_ms[name] = ms
         vstart = vfinish = 0.0
         if self.comm is not None:
-            vstart = max(self.group_free.get(grp, 0.0), ready_vt,
-                         self.earliest.get(name, 0.0))
+            vstart = max(
+                self.group_free.get(grp, 0.0), ready_vt, self.earliest.get(name, 0.0)
+            )
             vfinish = vstart + ms
             self.group_free[grp] = vfinish
             self.vnow = vfinish
@@ -358,22 +384,24 @@ class ExecSession:
             pass
 
     def result(self) -> ExecResult:
-        outs = {n: self.blocks[n] for n in self.g.exit_nodes()
-                if n in self.blocks}
+        outs = {n: self.blocks[n] for n in self.g.exit_nodes() if n in self.blocks}
         for a in outs.values():
             a.block_until_ready()
         dt = (time.perf_counter() - self._t0) * 1e3
-        return ExecResult(outputs=outs, makespan_ms=dt,
-                          n_transfers=self.n_transfers,
-                          bytes_transferred=self.nbytes,
-                          kernels_per_group=self.per_group,
-                          kernel_ms=dict(self.kernel_ms),
-                          reexecuted=list(self.reexecuted),
-                          model_makespan_ms=self.vmax,
-                          lane_busy_ms=(self.comm.lane_busy_ms()
-                                        if self.comm else {}),
-                          n_prefetched=(self.comm.n_prefetched
-                                        if self.comm else 0))
+        return ExecResult(
+            outputs=outs,
+            makespan_ms=dt,
+            n_transfers=self.n_transfers,
+            bytes_transferred=self.nbytes,
+            kernels_per_group=self.per_group,
+            kernel_ms=dict(self.kernel_ms),
+            reexecuted=list(self.reexecuted),
+            model_makespan_ms=self.vmax,
+            lane_busy_ms=self.comm.lane_busy_ms() if self.comm else {},
+            n_prefetched=self.comm.n_prefetched if self.comm else 0,
+            tier_busy_ms=self.comm.tier_busy_ms() if self.comm else {},
+            n_throttled=self.comm.n_throttled if self.comm else 0,
+        )
 
 
 class JaxExecutor:
@@ -391,28 +419,47 @@ class JaxExecutor:
             raise KeyError(f"unknown host group {host_group!r}")
         return host_group
 
-    def session(self, g, assignment: Mapping[str, str],
-                inputs: Mapping[str, jax.Array] | None = None, *,
-                host_group: str | None = None,
-                time_kernels: bool = False,
-                gated: Iterable[str] = (),
-                comm: CommEngine | None = None,
-                group_nodes: Mapping[str, int] | None = None,
-                prefetch_depth: int = 2) -> ExecSession:
-        return ExecSession(self, g, assignment, inputs,
-                           host_group=host_group, time_kernels=time_kernels,
-                           gated=gated, comm=comm, group_nodes=group_nodes,
-                           prefetch_depth=prefetch_depth)
+    def session(
+        self,
+        g,
+        assignment: Mapping[str, str],
+        inputs: Mapping[str, jax.Array] | None = None,
+        *,
+        host_group: str | None = None,
+        time_kernels: bool = False,
+        gated: Iterable[str] = (),
+        comm: CommEngine | None = None,
+        group_nodes: Mapping[str, int] | None = None,
+        prefetch_depth: int = 2,
+    ) -> ExecSession:
+        return ExecSession(
+            self,
+            g,
+            assignment,
+            inputs,
+            host_group=host_group,
+            time_kernels=time_kernels,
+            gated=gated,
+            comm=comm,
+            group_nodes=group_nodes,
+            prefetch_depth=prefetch_depth,
+        )
 
-    def run(self, g, assignment: Mapping[str, str],
-            inputs: Mapping[str, jax.Array] | None = None, *,
-            host_group: str | None = None,
-            time_kernels: bool = False) -> ExecResult:
+    def run(
+        self,
+        g,
+        assignment: Mapping[str, str],
+        inputs: Mapping[str, jax.Array] | None = None,
+        *,
+        host_group: str | None = None,
+        time_kernels: bool = False,
+    ) -> ExecResult:
         """assignment: kernel -> group name.  ``inputs`` seeds the source
         blocks (host-resident, like the paper's initial data) on
         ``host_group`` (explicit, or the deterministic default)."""
-        s = self.session(g, assignment, inputs, host_group=host_group,
-                         time_kernels=time_kernels)
+        s = self.session(
+            g, assignment, inputs, host_group=host_group, time_kernels=time_kernels
+        )
         s.run_all()
         return s.result()
 
@@ -428,14 +475,15 @@ def _attach_kernels(g, n: int, fns: Mapping, dtype: str, seed: int) -> dict:
         if k.op == "source":
             continue
         if k.op not in fns:
-            raise KeyError(f"kernel {name!r} has op {k.op!r} without an "
-                           f"implementation (have {sorted(fns)})")
+            raise KeyError(
+                f"kernel {name!r} has op {k.op!r} without an "
+                f"implementation (have {sorted(fns)})"
+            )
         k.fn = fns[k.op]
         preds = g.predecessors(name)
         if not preds or any(g.nodes[p].op == "source" for p in preds):
             key, sub = jax.random.split(key)
-            inputs[name + "/in"] = jax.random.normal(sub, (n, n),
-                                                     dtype=dtype)
+            inputs[name + "/in"] = jax.random.normal(sub, (n, n), dtype=dtype)
     return inputs
 
 
@@ -443,10 +491,10 @@ def attach_matrix_kernels(g, n: int, dtype="float32") -> dict:
     """The paper's MA/MM kernels (via kernels/ops.py) as real fns."""
     from ..kernels import ops
 
-    fns = {"matmul": lambda *xs: ops.matmul(xs[0], xs[1] if len(xs) > 1
-                                            else xs[0]),
-           "matadd": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1
-                                            else xs[0])}
+    fns = {
+        "matmul": lambda *xs: ops.matmul(xs[0], xs[1] if len(xs) > 1 else xs[0]),
+        "matadd": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1 else xs[0]),
+    }
     return _attach_kernels(g, n, fns, dtype, seed=0)
 
 
@@ -457,8 +505,8 @@ def attach_request_kernels(g, n: int, dtype="float32") -> dict:
     the cost-table asymmetry the scheduler reasons about."""
     from ..kernels import ops
 
-    fns = {"prefill": lambda *xs: ops.matmul(xs[0], xs[0].T if len(xs) < 2
-                                             else xs[1]),
-           "decode": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1
-                                            else xs[0])}
+    fns = {
+        "prefill": lambda *xs: ops.matmul(xs[0], xs[0].T if len(xs) < 2 else xs[1]),
+        "decode": lambda *xs: ops.matadd(xs[0], xs[1] if len(xs) > 1 else xs[0]),
+    }
     return _attach_kernels(g, n, fns, dtype, seed=1)

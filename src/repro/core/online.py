@@ -87,7 +87,11 @@ class OnlinePartitioner:
     ``topology`` + ``class_nodes`` make the cut objective and the FM gain
     link-aware: a cut edge is priced at the actual link between the two
     classes' memory nodes (ICI cheap, DCN expensive) instead of one flat
-    ``edge_ms``.  ``reload_copies=True`` additionally counts cut KV edges'
+    ``edge_ms``.  With a :class:`~repro.core.comm.HierTopology` that price
+    is the bottleneck *tier* of the path (rack uplink in-pod, shared pod
+    uplink across pods), and the full-repartition path inherits the
+    topology-aware class grouping in recursive bisection — cut edges land on
+    cheap tiers first.  ``reload_copies=True`` additionally counts cut KV edges'
     duplicated bytes against the consumer class's budget — the
     reload-accounting view (a block consumed across a cut is resident on
     both sides), so capacity pressure anticipates spill reloads.

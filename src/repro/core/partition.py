@@ -449,6 +449,53 @@ def _bisect_multilevel(
     return part
 
 
+def _group_classes(
+    targets: Sequence[float],
+    link_scale: Sequence[Sequence[float]] | None,
+) -> tuple[list[int], list[int], float, float]:
+    """Split class indices into two recursive-bisection sides.
+
+    Without ``link_scale``: the classic greedy halving on sorted targets
+    (bit-identical to the historical behaviour).  With it: exhaustively score
+    every split by (target-sum imbalance, intra-group link cost) — keeping
+    cheaply-linked classes (one pod's racks) on the same side, so the
+    expensive tier is crossed only by the first bisection's cut, whose
+    volume FM minimizes, while sub-splits cut across cheap links.  The
+    exhaustive scan is capped at 12 classes (2^k splits); beyond that the
+    legacy greedy halving applies and link awareness is left to the FM
+    passes — fleets with more classes than that should coarsen classes
+    before partitioning."""
+    k = len(targets)
+    if link_scale is not None and 2 < k <= 12:
+        best = None
+        for mask in range(1, 2 ** (k - 1)):  # class k-1 pinned to side B
+            sa = [i for i in range(k) if mask >> i & 1]
+            sb = [i for i in range(k) if not mask >> i & 1]
+            wa = sum(targets[i] for i in sa)
+            intra = sum(
+                link_scale[i][j]
+                for side in (sa, sb)
+                for i in side
+                for j in side
+                if i < j
+            )
+            cand = (round(abs(2 * wa - 1), 9), intra, mask)
+            if best is None or cand < best[0]:
+                best = (cand, sa, sb, wa)
+        _, sa, sb, wa = best
+        return sa, sb, wa, 1.0 - wa
+    order = sorted(range(k), key=lambda i: -targets[i])
+    ga, gb, wa, wb = [], [], 0.0, 0.0
+    for i in order:
+        if wa <= wb:
+            ga.append(i)
+            wa += targets[i]
+        else:
+            gb.append(i)
+            wb += targets[i]
+    return ga, gb, wa, wb
+
+
 def partition_indices(
     g: UGraph,
     targets: Sequence[float],
@@ -495,16 +542,14 @@ def partition_indices(
             g, part, targets, epsilon, mem_caps=capacities, link_scale=link_scale
         )
 
-    # recursive bisection: split target list into two halves with closest sums
-    order = sorted(range(k), key=lambda i: -targets[i])
-    ga, gb, wa, wb = [], [], 0.0, 0.0
-    for i in order:
-        if wa <= wb:
-            ga.append(i)
-            wa += targets[i]
-        else:
-            gb.append(i)
-            wb += targets[i]
+    # recursive bisection: split the class list into two halves with closest
+    # target sums.  With ``link_scale`` the grouping is topology-aware: among
+    # the best-balanced splits, pick the one with the least INTRA-group link
+    # cost (cheaply-linked classes stay on one side — on a rack/pod
+    # hierarchy, each pod's classes together), so the expensive tier is
+    # crossed only between the two sides, by the one cut whose volume the
+    # first bisection's FM minimizes, and sub-splits cut across cheap links.
+    ga, gb, wa, wb = _group_classes(targets, link_scale)
     caps2 = None
     if capacities is not None:
         caps2 = [

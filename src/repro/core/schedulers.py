@@ -19,7 +19,10 @@
 All cost estimates are topology-aware: dmda prices missing inputs per block
 at the actual source->destination link, HEFT's EFT loop charges the real
 src-node -> dst-node link, and gp's cut objective uses the platform
-topology's link-scale matrix (see ``repro.core.comm``).
+topology's link-scale matrix (see ``repro.core.comm``).  On a hierarchical
+topology every such price is the bottleneck tier of the actual path (a
+cross-pod hop costs the shared uplink, an in-pod hop only the rack link),
+so all five policies see the same tiered fabric the simulator charges.
 """
 
 from __future__ import annotations
@@ -137,11 +140,17 @@ class GpPolicy(Policy):
     name = "gp"
     produces_assignment = True
 
-    def __init__(self, *, weight_source: str = "gpu", epsilon: float = 0.05,
-                 seed: int = 1, targets: Mapping[str, float] | None = None,
-                 scale_by_workers: bool = False,
-                 capacities: Mapping[str, float] | None = None,
-                 mem_aware: bool = True):
+    def __init__(
+        self,
+        *,
+        weight_source: str = "gpu",
+        epsilon: float = 0.05,
+        seed: int = 1,
+        targets: Mapping[str, float] | None = None,
+        scale_by_workers: bool = False,
+        capacities: Mapping[str, float] | None = None,
+        mem_aware: bool = True,
+    ):
         """``scale_by_workers=False`` is the paper's literal Formula (1)/(2)
         (per-kernel times only); True additionally scales each class's share
         by its worker count (a natural extension when classes have several
@@ -178,8 +187,7 @@ class GpPolicy(Policy):
         classes = platform.classes
         targets = workload_ratios(g, classes)
         if self.scale_by_workers:
-            scaled = {c: targets[c] * len(platform.workers_of(c))
-                      for c in classes}
+            scaled = {c: targets[c] * len(platform.workers_of(c)) for c in classes}
             s = sum(scaled.values())
             targets = {c: v / s for c, v in scaled.items()}
         return targets
@@ -188,17 +196,21 @@ class GpPolicy(Policy):
         t0 = time.perf_counter()
         targets = self.targets_for(g, platform)
         topo = platform.topo
-        host_cls = next(p.cls for p in platform.procs
-                        if p.node == platform.host_node)
+        host_cls = next(p.cls for p in platform.procs if p.node == platform.host_node)
         pin = {n: host_cls for n, k in g.nodes.items() if k.op == "source"}
         # edge weights priced at the worst link; the link-scale matrix turns
         # that into per-class-pair prices inside the FM gain function
         self.assignment = partition_taskgraph(
-            g, targets, weight_source=self.weight_source,
+            g,
+            targets,
+            weight_source=self.weight_source,
             edge_ms=lambda nb: topo.worst_ms(nb),
-            epsilon=self.epsilon, seed=self.seed, pin=pin,
+            epsilon=self.epsilon,
+            seed=self.seed,
+            pin=pin,
             capacities=self.capacities_for(platform),
-            link_scale=link_scale_for(platform, list(targets)))
+            link_scale=link_scale_for(platform, list(targets)),
+        )
         self.targets = targets
         return (time.perf_counter() - t0) * 1e3
 
@@ -211,12 +223,19 @@ class GpPolicy(Policy):
             costs = sim.g.nodes[task].costs
             workers = [p for p in sim.platform.procs if p.cls in costs]
             cls = None
-        w = min(workers, key=lambda p: (sim.est_proc_avail[p.name],
-                                        len(sim.proc_queue[p.name]), p.name))
+        w = min(
+            workers,
+            key=lambda p: (
+                sim.est_proc_avail[p.name],
+                len(sim.proc_queue[p.name]),
+                p.name,
+            ),
+        )
         # least-loaded worker within the pinned class (StarPU would let its
         # per-class queue do this; we approximate with earliest-available)
-        sim.est_proc_avail[w.name] = max(sim.est_proc_avail[w.name], sim.now) \
-            + sim.exec_ms(task, cls if cls is not None else w.cls)
+        sim.est_proc_avail[w.name] = max(
+            sim.est_proc_avail[w.name], sim.now
+        ) + sim.exec_ms(task, cls if cls is not None else w.cls)
         return w.name
 
 
@@ -232,16 +251,20 @@ class HeftPolicy(Policy):
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
         classes = platform.classes
-        mean_cost = {n: sum(k.costs.get(c, 0.0) for c in classes) / len(classes)
-                     for n, k in g.nodes.items()}
+        mean_cost = {
+            n: sum(k.costs.get(c, 0.0) for c in classes) / len(classes)
+            for n, k in g.nodes.items()
+        }
         topo = platform.topo
-        mean_edge = {(e.src, e.dst): topo.worst_ms(e.nbytes) * 0.5
-                     for e in g.edges}  # 0.5: same-node edges are free on average
+        mean_edge = {
+            (e.src, e.dst): topo.worst_ms(e.nbytes) * 0.5 for e in g.edges
+        }  # 0.5: same-node edges are free on average
         rank: dict[str, float] = {}
         for n in reversed(g.topo_order()):
             succ = g.successors(n)
             rank[n] = mean_cost[n] + max(
-                (mean_edge[(n, s)] + rank[s] for s in succ), default=0.0)
+                (mean_edge[(n, s)] + rank[s] for s in succ), default=0.0
+            )
         self.rank = rank
         # EFT assignment in rank order, non-insertion variant
         avail = {p.name: 0.0 for p in platform.procs}
@@ -255,8 +278,9 @@ class HeftPolicy(Policy):
                     c = finish.get(pr, 0.0)
                     if where.get(pr) is not None and where[pr].node != p.node:
                         # the actual src-node -> dst-node link, not a flat bus
-                        c += topo.transfer_ms(g.edge(pr, n).nbytes,
-                                              where[pr].node, p.node)
+                        c += topo.transfer_ms(
+                            g.edge(pr, n).nbytes, where[pr].node, p.node
+                        )
                     ready = max(ready, c)
                 eft = max(avail[p.name], ready) + g.nodes[n].cost_on(p.cls)
                 if best is None or eft < best[0]:
@@ -284,7 +308,7 @@ class RandomPolicy(Policy):
 
     def on_ready(self, task: str, sim: Sim) -> str:
         self._n += 1
-        h = (hash((task, self.seed, self._n)) & 0xFFFFFFFF)
+        h = hash((task, self.seed, self._n)) & 0xFFFFFFFF
         procs = sim.platform.procs
         return procs[h % len(procs)].name
 
@@ -300,8 +324,9 @@ class SingleClassPolicy(Policy):
     def on_ready(self, task: str, sim: Sim) -> str:
         workers = sim.platform.workers_of(self.cls)
         w = min(workers, key=lambda p: (sim.est_proc_avail[p.name], p.name))
-        sim.est_proc_avail[w.name] = max(sim.est_proc_avail[w.name], sim.now) \
-            + sim.exec_ms(task, self.cls)
+        sim.est_proc_avail[w.name] = max(
+            sim.est_proc_avail[w.name], sim.now
+        ) + sim.exec_ms(task, self.cls)
         return w.name
 
 
@@ -328,9 +353,11 @@ class WorkerPullPolicy(Policy):
     def _pull_assign(self, g: TaskGraph, platform: Platform) -> dict[str, str]:
         res = simulate(g, self.base, platform)
         cls_of = {p.name: p.cls for p in platform.procs}
-        return {task: cls_of[proc]
-                for task, proc, _start, _finish in res.trace
-                if proc in cls_of and g.nodes[task].op != "source"}
+        return {
+            task: cls_of[proc]
+            for task, proc, _start, _finish in res.trace
+            if proc in cls_of and g.nodes[task].op != "source"
+        }
 
     def prepare(self, g: TaskGraph, platform: Platform) -> float:
         t0 = time.perf_counter()
@@ -382,9 +409,10 @@ ALL_POLICIES = {
 
 def make_policy(name: str, **kw) -> Policy:
     if name.startswith("only-"):
-        return SingleClassPolicy(name[len("only-"):])
+        return SingleClassPolicy(name[len("only-") :])
     if name == "incremental-gp":
         from .online import IncrementalGpPolicy  # lazy: avoids import cycle
+
         return IncrementalGpPolicy(**kw)
     return ALL_POLICIES[name](**kw)
 

@@ -32,6 +32,10 @@ quantities fed back to the policy stay real.  Transfers are charged to the
 actual src-node -> dst-node link of the platform topology and the inputs of
 upcoming kernels are prefetched under the running kernel's compute, instead
 of serializing measured kernel time plus modeled transfer time on one clock.
+On a hierarchical platform (:class:`~repro.core.comm.HierTopology`) each
+real ``device_put`` pull books every tier its path crosses — cross-pod pulls
+contend on the shared uplinks — and prefetches are contention-throttled
+(``StepReport.n_throttled``, per-tier wire time in ``tier_busy_ms``).
 """
 
 from __future__ import annotations
@@ -76,6 +80,11 @@ class StepReport:
     transfer_busy_ms: float = 0.0   # modeled wire time on the comm lanes
     lane_busy_ms: dict = dataclasses.field(default_factory=dict)
     n_prefetched: int = 0           # transfers staged ahead of their consumer
+    tier_busy_ms: dict = dataclasses.field(default_factory=dict)
+    #                               # wire time per topology tier (leaf/rack/
+    #                               # pod on a hierarchy, link name on flat)
+    n_throttled: int = 0            # prefetches deferred by the contention
+    #                               # throttle (hierarchical topologies)
 
 
 @dataclasses.dataclass
@@ -134,6 +143,7 @@ class ServeReport:
             "peak_mem_bytes": self.peak_mem_bytes(),
             "transfer_busy_ms": self.total("transfer_busy_ms"),
             "prefetched": int(self.total("n_prefetched")),
+            "throttled": int(self.total("n_throttled")),
         }
 
 
@@ -483,6 +493,8 @@ class ServingExecutor:
             transfer_busy_ms=comm.busy_ms,
             lane_busy_ms=comm.lane_busy_ms(),
             n_prefetched=comm.n_prefetched,
+            tier_busy_ms=comm.tier_busy_ms(),
+            n_throttled=comm.n_throttled,
         )
 
     # -- whole stream ----------------------------------------------------------

@@ -19,6 +19,12 @@ x16 link with one copy engine):
   heap) that makes graph-partition scheduling win on real fabrics.
   ``overlap=False`` reproduces the paper's serialized issue-at-dispatch
   semantics on the same lanes;
+* **hierarchical fabrics**: with a :class:`~repro.core.comm.HierTopology`
+  every transfer books lanes on each tier it crosses (leaf NIC, rack
+  uplink, shared pod uplink), cross-pod traffic contends on the shared
+  uplinks, and prefetches are contention-throttled (``throttle``, auto-on
+  for hierarchies) so they never queue a demand fetch behind them on a hot
+  tier;
 * transfer counting / byte accounting (the paper's second metric);
 * scheduling-decision overhead (paper §IV.D: dmda pays per-task decision
   time, gp decides once offline);
@@ -189,6 +195,13 @@ class SimResult:
     lane_busy_ms: dict[str, float] = dataclasses.field(default_factory=dict)
     n_prefetched: int = 0
     reload_events: int = 0  # spilled blocks pulled back into residency
+    # hierarchical-topology accounting: per-tier wire time (leaf/rack/pod on
+    # a HierTopology, the link name on flat ones), prefetches deferred by the
+    # contention throttle, and total demand-fetch latency (finish - request,
+    # queueing included — the quantity throttling protects)
+    tier_busy_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    n_throttled: int = 0
+    demand_latency_ms: float = 0.0
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -199,13 +212,13 @@ class SimResult:
 class Sim:
     """Mutable simulation state handed to policies."""
 
-    def __init__(self, g: TaskGraph, platform: Platform):
+    def __init__(self, g: TaskGraph, platform: Platform, throttle: bool | None = None):
         self.g = g
         # own copy of the proc list: dynamic events mutate it, and the caller's
         # Platform must stay reusable across runs (the arena shares one)
         self.platform = platform.copy()
         self.topo = self.platform.topo
-        self.comm = CommEngine(self.topo)
+        self.comm = CommEngine(self.topo, throttle=throttle)
         self.now = 0.0
         # live KV residency per class: insertion-ordered block -> bytes (the
         # order is the FIFO spill victim order); mem_load is the running sum
@@ -275,6 +288,7 @@ def simulate(
     events: Sequence = (),
     overlap: bool = True,
     prefetch_depth: int = 2,
+    throttle: bool | None = None,
 ) -> SimResult:
     """Run ``policy`` over task graph ``g`` on ``platform``.
 
@@ -294,9 +308,15 @@ def simulate(
     every worker's queue while the worker is busy, hiding transfers under
     compute.  ``overlap=False`` issues every transfer at task start (the
     paper's serialized semantics) on the same per-link lanes.
+
+    ``throttle``: contention-aware prefetch throttling — a prefetch only
+    books lanes when every tier on its path is idle; a deferred prefetch
+    retries at the next event (or the consumer demands the block at full
+    priority).  ``None`` (default) enables it exactly on hierarchical
+    topologies, keeping every flat-topology result bit-for-bit unchanged.
     """
     g.validate()
-    sim = Sim(g, platform)
+    sim = Sim(g, platform, throttle=throttle)
     platform = sim.platform  # the mutable copy; dynamic events edit this one
     comm = sim.comm
     offline_ms = policy.prepare(g, platform)
@@ -451,15 +471,19 @@ def simulate(
 
     def fetch_block(
         block: str, nbytes: int, dst_node: int, dst_cls: str, t: float, kind: str
-    ) -> float:
+    ) -> float | None:
         """Book a copy of ``block`` onto ``dst_node`` from its cheapest valid
         source; marks validity at the completion time (so in-flight copies
-        dedup naturally) and applies spill-reload residency accounting."""
+        dedup naturally) and applies spill-reload residency accounting.
+        A prefetch the contention throttle defers books nothing and returns
+        ``None`` — the next scheduling event retries it."""
         ent = sim.valid.get(block) or {}
         src_node, src_t = min(ent.items(), key=lambda kv: (kv[1], kv[0]))
         te = comm.fetch(
             block, src_node, dst_node, nbytes, now=t, src_ready=src_t, kind=kind
         )
+        if te is None:  # throttled prefetch: no booking, no validity
+            return None
         sim.valid.setdefault(block, {})[dst_node] = te
         tr = comm.transfers[-1]
         transfers.append((block, tr.src, tr.dst, tr.start, tr.finish))
@@ -696,4 +720,7 @@ def simulate(
         lane_busy_ms=comm.lane_busy_ms(),
         n_prefetched=comm.n_prefetched,
         reload_events=metrics["reloads"],
+        tier_busy_ms=comm.tier_busy_ms(),
+        n_throttled=comm.n_throttled,
+        demand_latency_ms=comm.demand_latency_ms(),
     )

@@ -41,8 +41,8 @@ import numpy as np
 from repro.configs.registry import get_config, canon, make_batch
 from repro.core.arena import (SchedulerArena, format_table,
                               make_request_stream, DEFAULT_POLICIES)
-from repro.core.comm import Topology
-from repro.core.cost import Link
+from repro.core.comm import HierTopology, Topology
+from repro.core.cost import LEAF_NIC, POD_UPLINK, RACK_UPLINK, Link
 from repro.core.graph import TaskGraph
 from repro.core.schedulers import as_executed, make_policy
 from repro.core.serving import ServingExecutor, groups_for_platform
@@ -134,6 +134,65 @@ def heterogeneous_platform(link_gbps: float = 6.25,
                     topology=Topology.dedicated(dcn, lanes=lanes))
 
 
+def hierarchical_platform(n_pods: int = 2, *, pod_lanes: int = 1,
+                          rack_lanes: int = 1, leaf_lanes: int = 2,
+                          leaf: Link = LEAF_NIC, rack: Link = RACK_UPLINK,
+                          pod: Link = POD_UPLINK,
+                          mem_capacity_bytes: dict | None = None) -> Platform:
+    """The rack/pod preset: each pod holds a big-class rack (1 worker) and a
+    small-class rack (2 workers); classes are named ``pod<i>.big`` /
+    ``pod<i>.small``.  Cross-rack traffic books both rack uplinks, cross-pod
+    traffic additionally the two *shared* pod uplinks (``pod_lanes`` copy
+    engines each) — the contention regime the hierarchy bench sweeps."""
+    procs: list[Processor] = []
+    node_rack: dict[int, str] = {}
+    rack_pod: dict[str, str] = {}
+    node = 0
+    for p in range(n_pods):
+        for cls_kind, n_workers in (("big", 1), ("small", 2)):
+            cls = f"pod{p}.{cls_kind}"
+            for j in range(n_workers):
+                procs.append(Processor(f"{cls}.w{j}", cls, node))
+            rack_name = f"r{node}"
+            node_rack[node] = rack_name
+            rack_pod[rack_name] = f"p{p}"
+            node += 1
+    topo = HierTopology(leaf=leaf, rack=rack, pod=pod,
+                        node_rack=node_rack, rack_pod=rack_pod,
+                        leaf_lanes=leaf_lanes, rack_lanes=rack_lanes,
+                        pod_lanes=pod_lanes)
+    return Platform(procs, link=pod, host_node=0,
+                    mem_capacity_bytes=dict(mem_capacity_bytes or {}),
+                    topology=topo)
+
+
+def hier_request_costs(platform: Platform, *, prefill_big: float = 20.0,
+                       prefill_small: float = 60.0, decode_big: float = 8.0,
+                       decode_small: float = 24.0) -> tuple[dict, dict]:
+    """Per-class cost tables for request streams on a rack/pod platform
+    (every pod's big class prices like ``big``, small like ``small``)."""
+    prefill = {c: prefill_big if c.endswith("big") else prefill_small
+               for c in platform.classes}
+    decode = {c: decode_big if c.endswith("big") else decode_small
+              for c in platform.classes}
+    return prefill, decode
+
+
+def _arena_setup(hier: bool, drop_proc: str
+                 ) -> tuple[Platform, str, dict | None, dict | None]:
+    """Shared arena plumbing for the simulated and executed runners:
+    (platform, drop_proc, costs_prefill, costs_decode).  On the rack/pod
+    platform the default flat drop target remaps to its small-rack
+    equivalent and the cost tables grow per-pod classes."""
+    if not hier:
+        return heterogeneous_platform(), drop_proc, None, None
+    plat = hierarchical_platform()
+    if drop_proc == "small1":
+        drop_proc = "pod0.small.w1"
+    costs_prefill, costs_decode = hier_request_costs(plat)
+    return plat, drop_proc, costs_prefill, costs_decode
+
+
 def _policy_kwargs(scheduler: str) -> dict:
     """Both GP flavours scale Formula (1)/(2) by per-class worker counts here
     (1 big worker vs 2 small ones — without it the big pod serializes)."""
@@ -160,10 +219,13 @@ def schedule_requests(n_requests: int, decode_chunks: int, scheduler: str,
 def run_arena(n_requests: int, decode_chunks: int, *, steps: int = 6,
               kv_mb: float = 16.0, churn: float = 0.3, seed: int = 0,
               drop_step: int | None = None, drop_proc: str = "small1",
-              policies=DEFAULT_POLICIES) -> tuple[list, SchedulerArena]:
+              policies=DEFAULT_POLICIES,
+              hier: bool = False) -> tuple[list, SchedulerArena]:
     """Replay a churning request stream through every policy (the online
     serving experiment).  ``drop_step`` optionally kills ``drop_proc``
-    mid-run at that step — the elastic path."""
+    mid-run at that step — the elastic path.  ``hier=True`` swaps in the
+    rack/pod platform (shared-uplink contention + prefetch throttling)."""
+    plat, drop_proc, costs_prefill, costs_decode = _arena_setup(hier, drop_proc)
     events_at = {}
     if drop_step is not None:
         # each step simulates on a fresh platform copy, so the death must be
@@ -174,9 +236,10 @@ def run_arena(n_requests: int, decode_chunks: int, *, steps: int = 6,
     stream = make_request_stream(
         steps, base_requests=n_requests, decode_chunks=decode_chunks,
         churn=churn, kv_bytes=int(kv_mb * 2**20), seed=seed,
+        costs_prefill=costs_prefill, costs_decode=costs_decode,
         arrival_spread_ms=10.0, events_at=events_at)
     arena = SchedulerArena(
-        heterogeneous_platform(), policies,
+        plat, policies,
         policy_kwargs={p: _policy_kwargs(p) for p in policies})
     rows = arena.run(stream)
     return rows, arena
@@ -186,7 +249,8 @@ def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
                        kv_mb: float = 16.0, churn: float = 0.3, seed: int = 0,
                        drop_step: int | None = None, drop_proc: str = "small1",
                        policies=EXECUTED_POLICIES, side: int = 48,
-                       drop_t_ms: float = 1.0) -> tuple[list, SchedulerArena]:
+                       drop_t_ms: float = 1.0,
+                       hier: bool = False) -> tuple[list, SchedulerArena]:
     """The arena stream EXECUTED on real device groups.
 
     Same stream construction as :func:`run_arena`, but each interval is
@@ -194,7 +258,11 @@ def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
     kernels run for real, per-kernel wall times feed the measured-cost /
     heartbeat loop, and drop events fire on the virtual stream clock
     (``drop_t_ms`` — virtual milliseconds, so a mid-interval drop actually
-    lands mid-interval regardless of host speed)."""
+    lands mid-interval regardless of host speed).  ``hier=True`` executes on
+    the rack/pod platform: every ``device_put`` pull books the tiered lanes
+    (shared-uplink contention + prefetch throttling), matching the
+    simulated ``run_arena(hier=True)`` stream."""
+    plat, drop_proc, costs_prefill, costs_decode = _arena_setup(hier, drop_proc)
     events_at = {}
     if drop_step is not None:
         events_at[drop_step] = (WorkerDrop(drop_t_ms, drop_proc),)
@@ -203,8 +271,8 @@ def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
     stream = make_request_stream(
         steps, base_requests=n_requests, decode_chunks=decode_chunks,
         churn=churn, kv_bytes=int(kv_mb * 2**20), seed=seed,
+        costs_prefill=costs_prefill, costs_decode=costs_decode,
         arrival_spread_ms=0.5, events_at=events_at)
-    plat = heterogeneous_platform()
     executor = ServingExecutor(groups_for_platform(plat), plat, side=side)
     factories = {p: (lambda n=p: as_executed(make_policy(n, **_policy_kwargs(n))))
                  for p in policies}
@@ -245,6 +313,10 @@ def main(argv=None):
     ap.add_argument("--arena", action="store_true",
                     help="replay a churning request stream through every "
                          "policy and print the comparison table")
+    ap.add_argument("--hier", action="store_true",
+                    help="with --arena (and --execute): run the stream on "
+                         "the rack/pod platform — shared-uplink contention "
+                         "+ prefetch throttling, simulated and executed")
     ap.add_argument("--steps", type=int, default=6,
                     help="stream length (scheduling intervals) for --arena")
     ap.add_argument("--drop-step", type=int, default=None,
@@ -263,20 +335,21 @@ def main(argv=None):
     if args.arena:
         rows, _ = run_arena(args.requests, args.decode_chunks,
                             steps=args.steps, drop_step=args.drop_step,
-                            seed=args.seed)
+                            seed=args.seed, hier=args.hier)
         print(format_table(rows))
         if args.execute:
             xrows, xarena = run_arena_executed(
                 args.requests, args.decode_chunks, steps=args.steps,
                 drop_step=args.drop_step, seed=args.seed,
-                side=args.kernel_side)
+                side=args.kernel_side, hier=args.hier)
             print("\n[serve] executed on device groups "
                   f"({', '.join(r.policy for r in xrows)}):")
             print(format_table(xrows))
             meta = {"requests": args.requests,
                     "decode_chunks": args.decode_chunks,
                     "steps": args.steps, "drop_step": args.drop_step,
-                    "seed": args.seed, "kernel_side": args.kernel_side}
+                    "seed": args.seed, "kernel_side": args.kernel_side,
+                    "hier": args.hier}
             write_bench(args.bench_out, meta=meta, sim_rows=rows,
                         arena=xarena)
             print(f"[serve] wrote {args.bench_out}")

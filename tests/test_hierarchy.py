@@ -1,0 +1,343 @@
+"""Hierarchical-topology invariants: multi-tier lane booking, shared-uplink
+contention, contention-aware prefetch throttling, and flat-topology
+bit-for-bit back-compat.
+
+Plain pytest — must run without hypothesis (the tier-1 floor).
+"""
+
+import jax
+import pytest
+
+from repro.core.comm import CommEngine, HierTopology, Topology, link_scale_for
+from repro.core.cost import Link
+from repro.core.executor import JaxExecutor
+from repro.core.graph import TaskGraph
+from repro.core.partition import _group_classes, _lcg
+from repro.core.schedulers import make_policy
+from repro.core.simulate import simulate
+from repro.launch.serve import (
+    heterogeneous_platform,
+    hier_request_costs,
+    hierarchical_platform,
+    run_arena,
+)
+
+DEV = jax.devices()[0]
+KV = 1 << 20
+LEAF = Link("leaf", bw=50e9)
+RACK = Link("rack", bw=25e9)
+POD = Link("pod", bw=5e9)  # 1e9 bytes take 200 ms
+
+
+def two_pod_topo(**kw) -> HierTopology:
+    """Nodes 0..3, one per rack; racks r0/r1 in pod p0, r2/r3 in pod p1."""
+    return HierTopology(
+        leaf=LEAF,
+        rack=RACK,
+        pod=POD,
+        node_rack={0: "r0", 1: "r1", 2: "r2", 3: "r3"},
+        rack_pod={"r0": "p0", "r1": "p0", "r2": "p1", "r3": "p1"},
+        **kw,
+    )
+
+
+# -- routing and pricing -------------------------------------------------------
+
+
+def test_route_books_every_crossed_tier():
+    topo = two_pod_topo()
+    same_rack = [k for k, _, _ in topo.route(0, 0)]
+    assert same_rack == ["leaf:0"]
+    cross_rack = [k for k, _, _ in topo.route(0, 1)]
+    assert cross_rack == ["leaf:0", "rack:r0", "rack:r1", "leaf:1"]
+    cross_pod = [k for k, _, _ in topo.route(0, 2)]
+    assert cross_pod == ["leaf:0", "rack:r0", "pod:p0", "pod:p1", "rack:r2", "leaf:2"]
+
+
+def test_transfer_priced_at_bottleneck_tier():
+    topo = two_pod_topo()
+    nb = 10**9
+    assert topo.transfer_ms(nb, 0, 0) == 0.0
+    assert topo.transfer_ms(nb, 0, 1) == pytest.approx(RACK.transfer_ms(nb))
+    assert topo.transfer_ms(nb, 0, 3) == pytest.approx(POD.transfer_ms(nb))
+    assert topo.worst_ms(nb) == pytest.approx(POD.transfer_ms(nb))
+    # endpoint-free pricing is the conservative worst tier (cut objective)
+    assert topo.transfer_ms(nb) == pytest.approx(POD.transfer_ms(nb))
+
+
+def test_unknown_nodes_price_as_cross_pod():
+    topo = two_pod_topo()
+    nb = 10**9
+    # two unknown nodes: distinct synthetic racks/pods -> worst-tier price
+    assert topo.transfer_ms(nb, 7, 8) == pytest.approx(POD.transfer_ms(nb))
+    assert topo.transfer_ms(nb, 0, 7) == pytest.approx(POD.transfer_ms(nb))
+
+
+def test_scale_matrix_prices_in_pod_cheaper_than_cross_pod():
+    topo = two_pod_topo()
+    scale = topo.scale_matrix([0, 1, 2, 3])
+    assert scale[0][1] < scale[0][2]  # rack hop cheaper than pod hop
+    assert scale[0][2] == pytest.approx(1.0)  # cross-pod is the worst tier
+    assert scale[0][0] == 0.0
+
+
+def test_link_scale_for_hier_platform():
+    plat = hierarchical_platform()
+    scale = link_scale_for(plat, plat.classes)
+    assert scale is not None
+    idx = {c: i for i, c in enumerate(plat.classes)}
+    in_pod = scale[idx["pod0.big"]][idx["pod0.small"]]
+    cross = scale[idx["pod0.big"]][idx["pod1.small"]]
+    assert 0.0 < in_pod < cross == pytest.approx(1.0)
+
+
+# -- shared-uplink contention --------------------------------------------------
+
+
+def test_disjoint_cross_pod_pairs_contend_on_shared_uplink():
+    eng = CommEngine(two_pod_topo())
+    t1 = eng.fetch("a", 0, 2, 10**9, now=0.0)
+    t2 = eng.fetch("b", 1, 3, 10**9, now=0.0)  # disjoint pair, same uplinks
+    assert t1 == pytest.approx(200.0)
+    assert t2 == pytest.approx(400.0)  # queued behind on pod:p0/pod:p1
+
+
+def test_same_pod_traffic_does_not_touch_the_uplink():
+    eng = CommEngine(two_pod_topo())
+    eng.fetch("a", 0, 1, 10**9, now=0.0)
+    assert not any(lane.startswith("pod:") for lane in eng.lane_busy_ms())
+    t = eng.fetch("b", 2, 3, 10**9, now=0.0)  # other pod: fully independent
+    assert t == pytest.approx(RACK.transfer_ms(10**9))
+
+
+def test_uplink_lanes_widen_with_pod_lanes():
+    eng = CommEngine(two_pod_topo(pod_lanes=2))
+    t1 = eng.fetch("a", 0, 2, 10**9, now=0.0)
+    t2 = eng.fetch("b", 1, 3, 10**9, now=0.0)  # second uplink copy engine
+    assert t1 == t2 == pytest.approx(200.0)
+
+
+def test_hier_lane_conservation_and_disjoint_intervals():
+    eng = CommEngine(two_pod_topo(), throttle=False)
+    rnd = _lcg(11)
+    for i in range(200):
+        src = rnd(4)
+        dst = (src + 1 + rnd(3)) % 4
+        eng.fetch(
+            f"b{i}",
+            src,
+            dst,
+            (1 + rnd(50)) * 10**7,
+            now=rnd(1000) / 10.0,
+            src_ready=rnd(500) / 10.0,
+            kind="prefetch" if rnd(2) else "demand",
+        )
+    per_lane = eng.lane_busy_ms()
+    assert sum(per_lane.values()) == pytest.approx(eng.busy_ms)
+    for lane, ts in eng.lane_log().items():
+        last = -1.0
+        for t in ts:
+            assert t.start >= last - 1e-9, f"lane {lane} overlaps itself"
+            last = t.finish
+    tiers = eng.tier_busy_ms()
+    assert set(tiers) <= {"leaf", "rack", "pod"}
+    assert sum(tiers.values()) == pytest.approx(eng.busy_ms)
+
+
+# -- contention-aware prefetch throttling --------------------------------------
+
+
+def test_prefetch_throttled_on_hot_tier_demand_still_books():
+    eng = CommEngine(two_pod_topo())
+    assert eng.throttle  # auto-on for hierarchies
+    eng.fetch("a", 0, 2, 10**9, now=0.0)  # saturate the uplinks
+    assert eng.fetch("b", 1, 3, 10**9, now=0.0, kind="prefetch") is None
+    assert eng.n_throttled == 1
+    assert eng.n_prefetched == 0  # nothing booked
+    # a demand fetch queues instead of being rejected
+    assert eng.fetch("c", 1, 3, 10**9, now=0.0) == pytest.approx(400.0)
+    # an idle path still prefetches (only hot tiers throttle)
+    t = eng.fetch("d", 0, 1, 10**9, now=500.0, kind="prefetch")
+    assert t == pytest.approx(500.0 + RACK.transfer_ms(10**9))
+    assert eng.n_prefetched == 1
+
+
+def test_flat_topologies_do_not_throttle_by_default():
+    eng = CommEngine(Topology.single_bus(Link("gb", bw=1e9)))
+    assert not eng.throttle
+    eng.fetch("a", 0, 1, 10**9, now=0.0)
+    t = eng.fetch("b", 0, 1, 10**9, now=0.0, kind="prefetch")
+    assert t == pytest.approx(2000.0)  # queued, not rejected
+    assert eng.n_throttled == 0
+
+
+def test_explicit_throttle_override_wins():
+    hot = CommEngine(Topology.single_bus(Link("gb", bw=1e9)), throttle=True)
+    hot.fetch("a", 0, 1, 10**9, now=0.0)
+    assert hot.fetch("b", 0, 1, 10**9, now=0.0, kind="prefetch") is None
+    free = CommEngine(two_pod_topo(), throttle=False)
+    free.fetch("a", 0, 2, 10**9, now=0.0)
+    assert free.fetch("b", 1, 3, 10**9, now=0.0, kind="prefetch") is not None
+
+
+# -- simulator integration -----------------------------------------------------
+
+
+def _hier_chain_graph(n_chains: int, length: int, nbytes: int) -> TaskGraph:
+    g = TaskGraph()
+    classes = ("pod0.big", "pod0.small", "pod1.big", "pod1.small")
+    for c in range(n_chains):
+        prev = None
+        for i in range(length):
+            name = f"c{c}.k{i}"
+            g.add(
+                name, op="decode", costs={cl: 4.0 for cl in classes}, out_bytes=nbytes
+            )
+            if prev is not None:
+                g.add_edge(prev, name, nbytes=nbytes)
+            prev = name
+    g.validate()
+    return g
+
+
+def test_simulator_surfaces_hier_counters():
+    plat = hierarchical_platform()
+    g = _hier_chain_graph(3, 16, 8 << 20)
+    r = simulate(g, make_policy("incremental-gp"), plat)
+    assert set(r.tier_busy_ms) <= {"leaf", "rack", "pod"}
+    assert sum(r.lane_busy_ms.values()) == pytest.approx(r.transfer_busy_ms)
+    assert r.demand_latency_ms >= 0.0
+    assert r.makespan_ms > 0
+
+
+@pytest.mark.parametrize("policy", ("eager", "dmda", "heft", "gp"))
+def test_all_policies_run_on_hierarchical_platform(policy):
+    plat = hierarchical_platform()
+    g = _hier_chain_graph(2, 6, 1 << 20)
+    kw = {"weight_source": "min"} if policy == "gp" else {}
+    r = simulate(g, make_policy(policy, **kw), plat)
+    assert r.makespan_ms > 0
+    assert sum(r.kernels_per_class.values()) == 12
+
+
+def test_throttle_auto_is_off_on_flat_platforms_bit_for_bit():
+    plat = heterogeneous_platform()
+    g = _hier_chain_graph(4, 8, 4 << 20)
+    for k in g.nodes.values():
+        k.costs = {"big": 8.0, "small": 24.0}
+    auto = simulate(g, make_policy("gp", scale_by_workers=True), plat)
+    off = simulate(g, make_policy("gp", scale_by_workers=True), plat, throttle=False)
+    assert auto.n_throttled == 0
+    assert auto.makespan_ms == off.makespan_ms
+    assert auto.n_transfers == off.n_transfers
+    assert auto.lane_busy_ms == off.lane_busy_ms
+
+
+def test_flat_serve_stream_unchanged_against_checked_in_baseline():
+    """The CI stream's simulated incremental-gp numbers are the serve gate's
+    baseline: with the hierarchy code in place, flat-topology results must
+    stay bit-for-bit identical (3276.00 ms, 0 transfers)."""
+    rows, _ = run_arena(12, 6, steps=5, drop_step=2, seed=0)
+    row = next(r for r in rows if r.policy == "incremental-gp")
+    assert row.total_makespan_ms == pytest.approx(3276.0, abs=1e-9)
+    assert row.transfers == 0
+
+
+# -- topology-aware class grouping (recursive bisection) -----------------------
+
+
+def test_group_classes_clusters_pods_together():
+    # classes: pod0.a, pod0.b, pod1.a, pod1.b — uniform targets
+    scale = [
+        [0.0, 0.2, 1.0, 1.0],
+        [0.2, 0.0, 1.0, 1.0],
+        [1.0, 1.0, 0.0, 0.2],
+        [1.0, 1.0, 0.2, 0.0],
+    ]
+    ga, gb, wa, wb = _group_classes([0.25] * 4, scale)
+    assert sorted(map(sorted, (ga, gb))) == [[0, 1], [2, 3]]
+    assert wa == pytest.approx(0.5) and wb == pytest.approx(0.5)
+
+
+def test_group_classes_without_scale_keeps_legacy_greedy():
+    ga, gb, wa, wb = _group_classes([0.4, 0.3, 0.2, 0.1], None)
+    assert ga == [0, 3] and gb == [1, 2]
+    assert wa == pytest.approx(0.5) and wb == pytest.approx(0.5)
+
+
+# -- executor integration ------------------------------------------------------
+
+
+def _hier_exec_session(throttle=None):
+    g = TaskGraph()
+    for n in ("a", "b", "c"):
+        g.add(n, op="k", costs={}, out_bytes=KV)
+    g.add_edge("a", "b", nbytes=KV)
+    g.add_edge("b", "c", nbytes=KV)
+    for k in g.nodes.values():
+        k.fn = lambda *xs: xs[0]
+    inputs = {"a/in": jax.numpy.ones((8, 8))}
+    ex = JaxExecutor({"g0": DEV, "g1": DEV, "g2": DEV})
+    comm = CommEngine(two_pod_topo(), throttle=throttle)
+    s = ex.session(
+        g,
+        {"a": "g0", "b": "g0", "c": "g2"},
+        inputs,
+        comm=comm,
+        group_nodes={"g0": 0, "g1": 1, "g2": 2},
+        prefetch_depth=2,
+        time_kernels=True,
+    )
+    return s, comm
+
+
+def test_exec_session_books_tiered_lanes_and_reports_counters():
+    s, comm = _hier_exec_session(throttle=False)
+    s.run_all()
+    res = s.result()
+    assert res.n_transfers >= 1
+    assert set(res.tier_busy_ms) <= {"leaf", "rack", "pod"}
+    assert res.tier_busy_ms.get("pod", 0.0) > 0.0  # b -> c crossed pods
+    assert sum(res.lane_busy_ms.values()) == pytest.approx(comm.busy_ms)
+
+
+def test_exec_session_throttled_prefetch_moves_nothing_and_recovers():
+    s, comm = _hier_exec_session(throttle=True)
+    # saturate the uplinks so the b -> g2 prefetch would have to queue
+    comm.fetch("noise", 1, 3, 10**9, now=0.0)
+    s.step()  # a
+    s.step()  # b; prefetch of b -> g2 must be deferred, not booked
+    assert comm.n_throttled >= 1
+    assert ("b", "g2") not in s.prefetched
+    run = s.step()  # c demand-fetches b for real
+    assert run.name == "c" and run.n_transfers == 1
+    assert s.done()
+    assert s.result().n_throttled >= 1
+
+
+# -- serving executor on the rack/pod platform ---------------------------------
+
+
+def test_serving_executor_on_hierarchical_platform():
+    from repro.core.arena import make_request_stream
+    from repro.core.serving import ServingExecutor, groups_for_platform
+
+    plat = hierarchical_platform()
+    prefill, decode = hier_request_costs(plat)
+    stream = make_request_stream(
+        2,
+        base_requests=3,
+        decode_chunks=2,
+        kv_bytes=KV,
+        seed=0,
+        costs_prefill=prefill,
+        costs_decode=decode,
+    )
+    sx = ServingExecutor(groups_for_platform(plat), plat, side=16)
+    rep = sx.run_stream(stream, make_policy("incremental-gp"))
+    assert len(rep.steps) == 2
+    for step in rep.steps:
+        assert step.makespan_ms > 0
+        assert set(step.tier_busy_ms) <= {"leaf", "rack", "pod"}
+        assert step.n_throttled >= 0
+    assert "throttled" in rep.to_dict()
