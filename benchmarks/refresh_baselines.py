@@ -1,18 +1,20 @@
-"""Regenerate / validate the serving-gate baseline.
+"""Regenerate / validate the serving-gate and router baselines.
 
 ``--refresh`` rebuilds ``benchmarks/baselines/serve_baseline.json`` with the
 EXACT stream flags the CI ``bench-smoke`` job runs (one source of truth:
-:data:`CI_STREAM`), so a refreshed baseline can never drift from the gated
-configuration.  Run it whenever an intentional scheduling-quality change
-moves the simulated numbers::
+:data:`CI_STREAM`), plus ``router_baseline.json`` from the router bench's
+quick-mode sweep (:data:`benchmarks.router_bench.QUICK`), so a refreshed
+baseline can never drift from the gated configuration.  Run it whenever an
+intentional scheduling-quality change moves the simulated numbers::
 
     PYTHONPATH=src python -m benchmarks.refresh_baselines --refresh
 
-``--validate`` (the CI step) checks the checked-in baseline's schema and
-keys against what ``benchmarks/gate_serve.py`` consumes — the gated
-simulated fields, the executed sections for every executed policy, and the
-stream flags in ``meta`` — catching a stale or hand-mangled baseline before
-the gate mysteriously passes (or fails) against it::
+``--validate`` (the CI step) checks the checked-in baselines' schema and
+keys against what the gates consume — the gated simulated fields, the
+executed sections for every executed policy, the stream flags in ``meta``,
+and the router sweep's swept churns + win fields — catching a stale or
+hand-mangled baseline before a gate mysteriously passes (or fails) against
+it::
 
     PYTHONPATH=src python -m benchmarks.refresh_baselines --validate
 """
@@ -33,8 +35,17 @@ from repro.launch.serve import (
 )
 
 from .gate_serve import GATED_POLICY
+from .router_bench import QUICK as ROUTER_QUICK
+from .router_bench import SEED as ROUTER_SEED
+from .router_bench import run_point as router_point
 
 BASELINE = pathlib.Path(__file__).parent / "baselines" / "serve_baseline.json"
+ROUTER_BASELINE = (
+    pathlib.Path(__file__).parent / "baselines" / "router_baseline.json"
+)
+
+# what check_rows() in router_bench.py gates on, per swept churn
+ROUTER_ROW_FIELDS = ("churn", "win_rr", "win_jsq")
 
 # the CI bench-smoke stream, verbatim (.github/workflows/ci.yml)
 CI_STREAM = {
@@ -68,6 +79,21 @@ def refresh(path: pathlib.Path) -> dict:
         side=CI_STREAM["kernel_side"],
     )
     return write_bench(str(path), meta=dict(CI_STREAM), sim_rows=rows, arena=arena)
+
+
+def refresh_router(path: pathlib.Path) -> dict:
+    sizing = {k: v for k, v in ROUTER_QUICK.items() if k != "churns"}
+    rows = [router_point(ch, **sizing) for ch in ROUTER_QUICK["churns"]]
+    doc = {
+        "meta": dict(
+            sizing, churns=list(ROUTER_QUICK["churns"]), seed=ROUTER_SEED,
+            quick=True,
+        ),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
 
 
 def validate(path: pathlib.Path) -> list[str]:
@@ -121,6 +147,47 @@ def validate(path: pathlib.Path) -> list[str]:
     return failures
 
 
+def validate_router(path: pathlib.Path) -> list[str]:
+    """Router-baseline schema failures (empty = matches the quick sweep)."""
+    failures: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read router baseline {path}: {e}"]
+
+    meta = doc.get("meta", {})
+    want_meta = dict(
+        {k: v for k, v in ROUTER_QUICK.items() if k != "churns"},
+        churns=list(ROUTER_QUICK["churns"]), seed=ROUTER_SEED,
+    )
+    for key, want in want_meta.items():
+        got = meta.get(key)
+        if got != want:
+            failures.append(
+                f"router meta.{key} = {got!r} but the quick sweep runs with "
+                f"{want!r} (stale baseline? refresh with --refresh)"
+            )
+
+    rows = doc.get("rows", [])
+    churns = []
+    for i, row in enumerate(rows):
+        for field in ROUTER_ROW_FIELDS:
+            if not isinstance(row.get(field), numbers.Number):
+                failures.append(
+                    f"router rows[{i}].{field} missing or non-numeric "
+                    f"({row.get(field)!r}) — router_bench.py gates on it"
+                )
+        if isinstance(row.get("churn"), numbers.Number):
+            churns.append(row["churn"])
+    if churns != list(ROUTER_QUICK["churns"]):
+        failures.append(
+            f"router rows sweep churns {churns} != quick sweep "
+            f"{list(ROUTER_QUICK['churns'])}"
+        )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--refresh", action="store_true", help="rebuild the baseline")
@@ -128,8 +195,10 @@ def main(argv=None) -> int:
         "--validate", action="store_true", help="schema-check the checked-in baseline"
     )
     ap.add_argument("--path", type=str, default=str(BASELINE))
+    ap.add_argument("--router-path", type=str, default=str(ROUTER_BASELINE))
     args = ap.parse_args(argv)
     path = pathlib.Path(args.path)
+    router_path = pathlib.Path(args.router_path)
     if not (args.refresh or args.validate):
         ap.error("pick --refresh and/or --validate")
 
@@ -141,14 +210,23 @@ def main(argv=None) -> int:
             f"makespan={sim['total_makespan_ms']:.2f}ms "
             f"transfers={sim['transfers']}"
         )
+        rdoc = refresh_router(router_path)
+        wins = " ".join(
+            f"c{r['churn']}={r['win_rr']:.1%}/{r['win_jsq']:.1%}"
+            for r in rdoc["rows"]
+        )
+        print(f"[baseline] wrote {router_path}: affinity wins rr/jsq {wins}")
 
     if args.validate:
-        failures = validate(path)
+        failures = validate(path) + validate_router(router_path)
         for msg in failures:
             print(f"[baseline] FAIL: {msg}")
         if failures:
             return 1
-        print(f"[baseline] PASS: {path} matches gate_serve.py expectations")
+        print(
+            f"[baseline] PASS: {path} matches gate_serve.py expectations; "
+            f"{router_path} matches the router quick sweep"
+        )
     return 0
 
 

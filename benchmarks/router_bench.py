@@ -1,0 +1,156 @@
+"""Fleet-routing sweep: partition affinity vs locality-oblivious front ends.
+
+One shared bursty (Markov ON/OFF) request stream is admitted to a fleet of
+simulated executor replicas (:func:`repro.launch.serve.run_router` — every
+replica runs a persistent ``incremental-gp`` policy, so the router's
+affinity score reads real partitioner residency).  The sweep varies the
+stream's ``churn`` — the fraction of requests replaced per interval, i.e.
+``1 - churn`` of each step's requests are *warm* (their KV cache already
+resides on some replica) — and compares three routing modes on identical
+streams and identical replicas:
+
+* ``affinity`` — warm requests go home (cheap KV resume), everything else
+  spills to the least-loaded replica;
+* ``round-robin`` — rotate, oblivious to residency;
+* ``jsq`` — join-shortest-queue by estimated interval work, oblivious to
+  residency.
+
+Request counts run at 10x (quick) / 20x (full) the CI arena stream, so the
+fleet actually has queueing to route around.
+
+Acceptance (``--check``):
+
+* at KV-warm churn (<= ``WARM_CHURN``) affinity beats BOTH round robin and
+  jsq by at least ``WIN_MIN`` mean completion latency;
+* affinity never loses to either baseline at any swept churn (within
+  ``LOSS_TOL``) — with nothing warm it degenerates to exactly jsq.
+
+Everything is deterministic in the stream seed.  Usage::
+
+    PYTHONPATH=src python -m benchmarks.router_bench [--quick]
+        [--out BENCH_router.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.serve import run_router
+
+from .common import emit
+
+MODES = ("affinity", "round-robin", "jsq")
+WARM_CHURN = 0.3   # churns at or below this are "KV-warm": must win >= WIN_MIN
+WIN_MIN = 0.10
+LOSS_TOL = 0.01    # affinity may never lose by more than this, at any churn
+SEED = 0
+
+# 10x / 20x the 12-request CI arena stream; 125 (not a multiple of the fleet
+# size) keeps round robin's rotation from accidentally phase-locking onto
+# warm homes across churned steps.  QUICK is also the checked-in
+# router_baseline.json configuration (refresh_baselines.py imports it).
+QUICK = {"n_requests": 125, "decode_chunks": 4, "steps": 4, "replicas": 3,
+         "churns": (0.2, 0.6, 1.0)}
+FULL = {"n_requests": 250, "decode_chunks": 4, "steps": 6, "replicas": 3,
+        "churns": (0.1, 0.2, 0.4, 0.6, 1.0)}
+
+
+def run_point(churn: float, *, n_requests: int, decode_chunks: int,
+              steps: int, replicas: int) -> dict:
+    """One swept churn: the same stream through all three routing modes
+    (fresh fleets each — ``run_router`` rebuilds stream + replicas from the
+    seed, so the comparison isolates the placement rule)."""
+    per_mode = {}
+    for mode in MODES:
+        rep = run_router(n_requests, decode_chunks, replicas=replicas,
+                         mode=mode, steps=steps, kv_mb=4.0, churn=churn,
+                         seed=SEED)
+        per_mode[mode] = {
+            "mean_latency_ms": rep.mean_latency_ms(),
+            "p95_latency_ms": rep.p95_latency_ms(),
+            "fleet_makespan_ms": rep.total_makespan_ms(),
+            "warm_hit_rate": rep.warm_hit_rate(),
+        }
+    aff = per_mode["affinity"]["mean_latency_ms"]
+    return {
+        "churn": churn,
+        "warm_frac": 1.0 - churn,
+        "modes": per_mode,
+        "win_rr": 1.0 - aff / per_mode["round-robin"]["mean_latency_ms"],
+        "win_jsq": 1.0 - aff / per_mode["jsq"]["mean_latency_ms"],
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        ch = row["churn"]
+        for base, win in (("round-robin", row["win_rr"]),
+                          ("jsq", row["win_jsq"])):
+            if win < -LOSS_TOL:
+                failures.append(
+                    f"churn {ch}: affinity LOSES {-win:.1%} mean latency "
+                    f"to {base} (tolerance {LOSS_TOL:.0%})")
+            if ch <= WARM_CHURN + 1e-9 and win < WIN_MIN:
+                failures.append(
+                    f"churn {ch}: affinity won only {win:.1%} vs {base} "
+                    f"(need >= {WIN_MIN:.0%} at KV-warm churn)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true",
+                    help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    cfg = QUICK if args.quick else FULL
+    sizing = {k: v for k, v in cfg.items() if k != "churns"}
+    rows = [run_point(ch, **sizing) for ch in cfg["churns"]]
+
+    print(f"{'churn':>6}  {'aff_ms':>8}  {'rr_ms':>8}  {'jsq_ms':>8}  "
+          f"{'win_rr':>7}  {'win_jsq':>7}  {'warm_hit':>8}")
+    for row in rows:
+        m = row["modes"]
+        print(f"{row['churn']:>6.2f}  "
+              f"{m['affinity']['mean_latency_ms']:>8.1f}  "
+              f"{m['round-robin']['mean_latency_ms']:>8.1f}  "
+              f"{m['jsq']['mean_latency_ms']:>8.1f}  "
+              f"{row['win_rr']:>7.1%}  {row['win_jsq']:>7.1%}  "
+              f"{m['affinity']['warm_hit_rate']:>8.2f}")
+        emit(f"router.c{row['churn']}.win_rr", f"{row['win_rr']:.3f}",
+             f"aff={m['affinity']['mean_latency_ms']:.1f};"
+             f"rr={m['round-robin']['mean_latency_ms']:.1f};"
+             f"warm_hit={m['affinity']['warm_hit_rate']:.2f}")
+        emit(f"router.c{row['churn']}.win_jsq", f"{row['win_jsq']:.3f}",
+             f"aff={m['affinity']['mean_latency_ms']:.1f};"
+             f"jsq={m['jsq']['mean_latency_ms']:.1f}")
+
+    if args.out:
+        doc = {
+            "meta": dict(sizing, churns=list(cfg["churns"]), seed=SEED,
+                         quick=args.quick),
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[router] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[router] FAIL: {msg}")
+        if failures:
+            return 1
+        print(f"[router] PASS: affinity >= {WIN_MIN:.0%} mean-latency win vs "
+              "round robin AND jsq at KV-warm churn, never loses at any "
+              "swept churn")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -144,6 +144,89 @@ def format_table(rows: Sequence[ArenaRow]) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Stream splitting (fleet tier: one shared stream, N replicas)
+# ---------------------------------------------------------------------------
+
+def requests_of(g: TaskGraph) -> dict[str, list[str]]:
+    """Request id -> task names in topo order.  Tasks without a
+    ``meta["req"]`` tag form singleton groups under their own name, so a
+    router can place *any* graph request-by-request; virtual source nodes
+    belong to no group (they ride along with their consumers)."""
+    out: dict[str, list[str]] = {}
+    for n in g.topo_order():
+        k = g.nodes[n]
+        if k.op == "source":
+            continue
+        out.setdefault(k.meta.get("req", n), []).append(n)
+    return out
+
+
+def split_step(step: ArenaStep, assignment: Mapping[str, str], *,
+               warm: Mapping[str, set] | None = None,
+               resume_factor: float = 0.1) -> dict[str, ArenaStep]:
+    """Split one :class:`ArenaStep` across replicas by request assignment.
+
+    ``assignment`` maps request id -> replica name (every request of the
+    step's graph must be assigned).  Each replica gets the induced subgraph
+    of its requests plus any virtual source feeding them, the arrivals of
+    its own tasks, and a tag suffixed with its name.
+
+    ``warm[replica]`` is the set of requests whose KV already resides on
+    that replica: their *entry* kernels (the prefill) have costs scaled by
+    ``resume_factor`` — resuming a resident KV cache instead of recomputing
+    the full prefill.  That is the whole point of affinity routing: a warm
+    request re-admitted to its home replica skips the prefill work, one
+    re-routed elsewhere pays it in full.
+
+    Per-worker dynamic events are NOT forwarded (a ``WorkerDrop`` names a
+    proc of one replica's platform; fleet-level churn goes through the
+    router's drain / scale-out instead)."""
+    groups = requests_of(step.graph)
+    unknown = set(groups) - set(assignment)
+    if unknown:
+        raise KeyError(f"unassigned requests: {sorted(unknown)[:3]}")
+    by_rep: dict[str, list[str]] = {}
+    for req in groups:
+        by_rep.setdefault(assignment[req], []).append(req)
+    out: dict[str, ArenaStep] = {}
+    for rep, reqs in by_rep.items():
+        g = TaskGraph()
+        warm_here = (warm or {}).get(rep, set())
+        names: set[str] = set()
+        for req in reqs:
+            for n in groups[req]:
+                k = step.graph.nodes[n]
+                costs = dict(k.costs)
+                entry = all(step.graph.nodes[p].op == "source"
+                            for p in step.graph.predecessors(n))
+                if entry and req in warm_here:
+                    costs = {c: v * resume_factor for c, v in costs.items()}
+                g.add(n, op=k.op, costs=costs, out_bytes=k.out_bytes,
+                      mem_bytes=k.mem_bytes, meta=dict(k.meta), fn=k.fn)
+                names.add(n)
+        for e in step.graph.edges:
+            if e.dst not in names:
+                continue
+            if e.src not in names:
+                if step.graph.nodes[e.src].op != "source":
+                    raise ValueError(
+                        f"edge {e.src}->{e.dst} crosses request groups")
+                if e.src not in g.nodes:
+                    src = step.graph.nodes[e.src]
+                    g.add(e.src, op=src.op, costs=dict(src.costs),
+                          out_bytes=src.out_bytes, mem_bytes=src.mem_bytes,
+                          meta=dict(src.meta), fn=src.fn)
+            g.add_edge(e.src, e.dst, nbytes=e.nbytes, blocks=e.blocks)
+        g.validate()
+        arrivals = None
+        if step.arrivals:
+            arrivals = {n: t for n, t in step.arrivals.items() if n in names}
+        out[rep] = ArenaStep(graph=g, arrivals=arrivals, events=(),
+                             tag=f"{step.tag}@{rep}" if step.tag else rep)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Serving-stream generator (request chains with churn)
 # ---------------------------------------------------------------------------
 

@@ -62,7 +62,9 @@ class Transfer:
     ``lanes`` lists every lane the copy occupies — one per tier crossed on a
     hierarchical topology, a 1-tuple on flat ones (``lane`` is the bottleneck
     tier's lane).  ``requested`` is when the copy was asked for, so
-    ``finish - requested`` is the fetch latency including queueing."""
+    ``finish - requested`` is the fetch latency including queueing.
+    ``preempted`` marks a copy cancelled in flight (its destination group
+    died); ``finish`` is then the preemption time, not the planned one."""
 
     block: str
     src: int
@@ -74,6 +76,7 @@ class Transfer:
     kind: str = "demand"  # "demand" | "prefetch" | "spill"
     lanes: tuple = ()
     requested: float = 0.0
+    preempted: bool = False
 
     @property
     def all_lanes(self) -> tuple:
@@ -362,6 +365,7 @@ class CommEngine:
         self._throttled: set[tuple[str, int]] = set()
         self.bytes_transferred = 0
         self.busy_ms = 0.0
+        self.n_preempted = 0
         self.kind_counts: dict[str, int] = {}
         self.kind_bytes: dict[str, int] = {}
 
@@ -397,8 +401,15 @@ class CommEngine:
         if src == dst and not book_same_node:
             return max(now, src_ready)
         segs = self.topo.route(src, dst)
+        # Duplex links carry opposing directions on independent lane pools:
+        # the lane-group key gains a direction suffix, so an A->B copy never
+        # queues behind a B->A one.  Simplex links (duplex=False, the
+        # default) keep the undecorated key — bit-identical bookings.
+        direction = ">" if src <= dst else "<"
         picks: list[tuple[str, list[float], int]] = []
-        for key, _link, lanes in segs:
+        for key, link, lanes in segs:
+            if link.duplex:
+                key = f"{key}{direction}"
             frees = self._lane_free.setdefault(key, [0.0] * lanes)
             lane_i = min(range(lanes), key=lambda i: (frees[i], i))
             picks.append((key, frees, lane_i))
@@ -438,6 +449,45 @@ class CommEngine:
         self.kind_counts[kind] = self.kind_counts.get(kind, 0) + 1
         self.kind_bytes[kind] = self.kind_bytes.get(kind, 0) + nbytes
         return finish
+
+    def preempt_dst(self, dst: int, now: float) -> list[Transfer]:
+        """Cancel every copy still in flight (or queued) toward memory node
+        ``dst`` and release its remaining lane time on every crossed tier.
+
+        Called when a destination group dies (worker drop / eviction): a
+        copy nobody will consume must not hold lanes for its full
+        bottleneck-tier duration.  A partially-done copy is truncated at
+        ``now``; a not-yet-started one releases its whole booking.  Returns
+        the ORIGINAL (pre-truncation) records so the caller can undo its
+        validity bookkeeping; the cancelled copies are counted in
+        ``n_preempted``."""
+        cancelled: list[Transfer] = []
+        for i, t in enumerate(self.transfers):
+            if t.dst != dst or t.preempted or t.finish <= now + 1e-9:
+                continue
+            if t.start >= now:  # never started: release the whole booking
+                released, start, finish = t.finish - t.start, now, now
+            else:  # partially done: truncate at the preemption time
+                released, start, finish = t.finish - now, t.start, now
+            self.busy_ms -= released * len(t.all_lanes)
+            self.transfers[i] = dataclasses.replace(
+                t, start=start, finish=finish, preempted=True
+            )
+            cancelled.append(t)
+        if cancelled:
+            self.n_preempted += len(cancelled)
+            # lane clocks only track the tail of each lane's booking queue,
+            # so releasing segments means recomputing tails from what remains
+            for frees in self._lane_free.values():
+                for i in range(len(frees)):
+                    frees[i] = 0.0
+            for t in self.transfers:
+                for lane in t.all_lanes:
+                    key, _, idx = lane.rpartition("[")
+                    frees = self._lane_free[key]
+                    i = int(idx[:-1])
+                    frees[i] = max(frees[i], t.finish)
+        return cancelled
 
     def lane_busy_ms(self) -> dict[str, float]:
         """Total booked time per lane (conservation: sums to ``busy_ms``)."""

@@ -74,6 +74,7 @@ class ExecResult:
     tier_busy_ms: dict = dataclasses.field(default_factory=dict)
     #                                   # wire time per topology tier
     n_throttled: int = 0  # prefetches deferred by the throttle
+    n_preempted: int = 0  # in-flight copies cancelled by a group eviction
 
 
 @dataclasses.dataclass
@@ -231,8 +232,16 @@ class ExecSession:
         by a pending consumer force their producer (transitively) back onto
         the queue.  Prefetched-but-unconsumed copies on the dead group are
         discarded from the comm model too, so the consumer's re-pull books a
-        fresh transfer instead of riding a phantom one.  Returns the kernels
-        re-queued for re-execution."""
+        fresh transfer instead of riding a phantom one.  Copies still in
+        flight toward the dead group's memory node are preempted on the comm
+        engine — their remaining lane time is released and they count toward
+        ``n_preempted``.  Returns the kernels re-queued for re-execution."""
+        if self.comm is not None:
+            node = self._node_of(group)
+            if not any(
+                self._node_of(g) == node for g in self.group_nodes if g != group
+            ):
+                self.comm.preempt_dst(node, self.vnow)
         for block, grp in list(self.vt_block):
             if grp == group:
                 del self.vt_block[(block, grp)]
@@ -401,6 +410,7 @@ class ExecSession:
             n_prefetched=self.comm.n_prefetched if self.comm else 0,
             tier_busy_ms=self.comm.tier_busy_ms() if self.comm else {},
             n_throttled=self.comm.n_throttled if self.comm else 0,
+            n_preempted=self.comm.n_preempted if self.comm else 0,
         )
 
 

@@ -274,6 +274,24 @@ class OnlinePartitioner:
                              for c, load in loads.items()),
                             default=0.0))
 
+    def request_residency(self) -> dict[str, dict[str, float]]:
+        """Resident KV bytes per request id, split by holding class — the
+        partition-affinity signal the fleet tier consumes: a request whose
+        KV already lives on this partition's classes is *warm* here, and
+        routing it elsewhere throws that residency away (cold prefill)."""
+        out: dict[str, dict[str, float]] = {}
+        for n, k in self.g.nodes.items():
+            r = k.meta.get("req")
+            m = float(k.mem_bytes)
+            if r is None or m <= 0:
+                continue
+            c = self.assignment.get(n)
+            if c is None:
+                continue
+            ent = out.setdefault(r, {})
+            ent[c] = ent.get(c, 0.0) + m
+        return out
+
     # -- graph deltas --------------------------------------------------------
 
     def reset(self, g: TaskGraph, targets: Mapping[str, float] | None = None):
@@ -579,6 +597,23 @@ class IncrementalGpPolicy(GpPolicy):
         for cls, ms in step_ms.items():
             if ms > 0:
                 self.live_step_ms[cls] = float(ms)
+
+    # -- fleet-tier residency export -------------------------------------------
+
+    def residency(self) -> dict:
+        """Everything the fleet router's affinity score reads, in one dict:
+        per-request resident KV bytes by class (``requests``), class-level
+        residency (``mem_loads``) and cut-duplication pressure
+        (``cut_copy_bytes``), plus whether duplicated copies count against
+        capacity (``reload_copies``).  Empty before the first prepare."""
+        p = self.partitioner
+        if p is None:
+            return {"requests": {}, "mem_loads": {}, "cut_copy_bytes": {},
+                    "reload_copies": False}
+        return {"requests": p.request_residency(),
+                "mem_loads": p.mem_loads(),
+                "cut_copy_bytes": p.cut_copy_bytes(),
+                "reload_copies": p.reload_copies}
 
     def _targets_for(self, g: TaskGraph, platform: Platform) -> dict[str, float]:
         """Formula (1)/(2) targets corrected by *measured* throughput, then

@@ -85,6 +85,8 @@ class StepReport:
     #                               # pod on a hierarchy, link name on flat)
     n_throttled: int = 0            # prefetches deferred by the contention
     #                               # throttle (hierarchical topologies)
+    n_preempted: int = 0            # in-flight copies cancelled when their
+    #                               # destination group died mid-transfer
 
 
 @dataclasses.dataclass
@@ -144,6 +146,7 @@ class ServeReport:
             "transfer_busy_ms": self.total("transfer_busy_ms"),
             "prefetched": int(self.total("n_prefetched")),
             "throttled": int(self.total("n_throttled")),
+            "preempted": int(self.total("n_preempted")),
         }
 
 
@@ -495,6 +498,7 @@ class ServingExecutor:
             n_prefetched=comm.n_prefetched,
             tier_busy_ms=comm.tier_busy_ms(),
             n_throttled=comm.n_throttled,
+            n_preempted=comm.n_preempted,
         )
 
     # -- whole stream ----------------------------------------------------------
@@ -507,3 +511,99 @@ class ServingExecutor:
         for i, step in enumerate(stream):
             report.steps.append(self.run_step(step, policy, step_idx=i))
         return report
+
+
+# ---------------------------------------------------------------------------
+# Fleet tier: replica wrapper + merged reports
+# ---------------------------------------------------------------------------
+
+class ExecutorReplica:
+    """One real-device :class:`ServingExecutor` behind the fleet router.
+
+    Duck-type match for :class:`~repro.core.router.SimReplica`: the router
+    hands it per-step sub-streams (``run_step``), reads its partitioner's
+    residency export for the affinity score (``residency``), and snapshots
+    per-request KV bytes at drain time (``drain_kv`` — the drain hook that
+    makes proactive migration use the *executor's* view of residency, not
+    the router's running estimate)."""
+
+    def __init__(self, name: str, executor: ServingExecutor, policy):
+        self.name = name
+        self.executor = executor
+        self.policy = policy
+        self._step = 0
+
+    def run_step(self, step: ArenaStep) -> StepReport:
+        rep = self.executor.run_step(step, self.policy, step_idx=self._step)
+        self._step += 1
+        return rep
+
+    def residency(self) -> dict:
+        hook = getattr(self.policy, "residency", None)
+        return hook() if hook is not None else {}
+
+    def drain_kv(self) -> dict[str, float]:
+        """Per-request resident KV bytes to migrate before removal."""
+        per_req = self.residency().get("requests", {})
+        return {req: float(sum(by_cls.values()))
+                for req, by_cls in per_req.items()}
+
+
+def merge_serve_reports(reports: Sequence[ServeReport],
+                        name: str | None = None) -> ServeReport:
+    """Merge per-replica :class:`ServeReport` streams into one fleet view.
+
+    Replicas run their share of every interval concurrently, so step ``i``'s
+    merged makespan is the SLOWEST replica's; counters (kernels, transfers,
+    spills, preemptions, wall/decision time) sum; per-group peaks take the
+    max and per-class kernel means average across the replicas that ran the
+    class.  Tags keep the shared stream prefix (``step3:...@r0`` -> the
+    part before ``@``)."""
+    if not reports:
+        raise ValueError("nothing to merge")
+    merged = ServeReport(policy=name or reports[0].policy)
+    for i in range(max(len(r.steps) for r in reports)):
+        group = [r.steps[i] for r in reports if i < len(r.steps)]
+        classes: dict[str, list[float]] = {}
+        peaks: dict[str, float] = {}
+        lanes: dict[str, float] = {}
+        tiers: dict[str, float] = {}
+        for s in group:
+            for cls, ms in s.kernel_ms_by_class.items():
+                classes.setdefault(cls, []).append(ms)
+            for grp, b in s.peak_mem_bytes.items():
+                peaks[grp] = max(peaks.get(grp, 0.0), b)
+            for lane, ms in s.lane_busy_ms.items():
+                lanes[lane] = lanes.get(lane, 0.0) + ms
+            for tier, ms in s.tier_busy_ms.items():
+                tiers[tier] = tiers.get(tier, 0.0) + ms
+
+        def tot(field: str):
+            return sum(getattr(s, field) for s in group)
+
+        merged.steps.append(StepReport(
+            tag=group[0].tag.split("@", 1)[0],
+            n_kernels=int(tot("n_kernels")),
+            makespan_ms=max(s.makespan_ms for s in group),
+            wall_ms=tot("wall_ms"),
+            n_transfers=int(tot("n_transfers")),
+            bytes_transferred=int(tot("bytes_transferred")),
+            offline_ms=tot("offline_ms"),
+            decision_ms=tot("decision_ms"),
+            admitted_late=int(tot("admitted_late")),
+            redispatched=int(tot("redispatched")),
+            reexecuted=int(tot("reexecuted")),
+            kernel_ms_by_class={c: sum(v) / len(v) for c, v in classes.items()},
+            dropped=[d for s in group for d in s.dropped],
+            added=[a for s in group for a in s.added],
+            events_missed=[e for s in group for e in s.events_missed],
+            spills=int(tot("spills")),
+            peak_mem_bytes=peaks,
+            transfer_busy_ms=tot("transfer_busy_ms"),
+            lane_busy_ms=lanes,
+            n_prefetched=int(tot("n_prefetched")),
+            tier_busy_ms=tiers,
+            n_throttled=int(tot("n_throttled")),
+            n_preempted=int(tot("n_preempted")),
+        ))
+    return merged

@@ -202,6 +202,9 @@ class SimResult:
     tier_busy_ms: dict[str, float] = dataclasses.field(default_factory=dict)
     n_throttled: int = 0
     demand_latency_ms: float = 0.0
+    # copies cancelled in flight because their destination memory node died
+    # with its last worker (lanes released at the preemption time)
+    n_preempted: int = 0
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -341,7 +344,6 @@ def simulate(
     busy = {p.name: 0.0 for p in platform.procs}
     per_class: dict[str, int] = {}
     trace: list[tuple | None] = []  # None = slot voided by an abort
-    transfers: list[tuple] = []
     aborted: list[tuple] = []
     dropped: list[str] = []
     added: list[str] = []
@@ -485,8 +487,6 @@ def simulate(
         if te is None:  # throttled prefetch: no booking, no validity
             return None
         sim.valid.setdefault(block, {})[dst_node] = te
-        tr = comm.transfers[-1]
-        transfers.append((block, tr.src, tr.dst, tr.start, tr.finish))
         if block in spilled_live:
             # a spilled KV block pulled back from host re-occupies residency
             # on the pulling class — and can itself trigger further spills
@@ -609,6 +609,15 @@ def simulate(
                 aborted.append((task, pname, start, t))
                 mem_remove(task)  # its KV reservation re-reserves on restart
                 orphans.insert(0, task)
+        if not any(p.node == proc.node for p in platform.procs):
+            # last worker backed by this memory node: copies still in flight
+            # toward it have no consumer left — cancel them, release their
+            # lane time, and roll back the validity marked at booking (the
+            # source copy always survives, so re-dispatched consumers refetch)
+            for tr in comm.preempt_dst(proc.node, t):
+                ent = sim.valid.get(tr.block)
+                if ent and len(ent) > 1 and ent.get(tr.dst, 0.0) > t + 1e-9:
+                    ent.pop(tr.dst)
         hook = getattr(policy, "on_worker_drop", None)
         if hook is not None:
             metrics["overhead"] += hook(proc, sim) or 0.0
@@ -710,7 +719,11 @@ def simulate(
         decision_overhead_ms=metrics["overhead"],
         offline_decision_ms=offline_ms,
         trace=[e for e in trace if e is not None],
-        transfers=transfers,
+        transfers=[
+            (t.block, t.src, t.dst, t.start, t.finish)
+            for t in comm.transfers
+            if t.kind != "spill"
+        ],
         aborted=aborted,
         dropped_procs=dropped,
         added_procs=added,
@@ -723,4 +736,5 @@ def simulate(
         tier_busy_ms=comm.tier_busy_ms(),
         n_throttled=comm.n_throttled,
         demand_latency_ms=comm.demand_latency_ms(),
+        n_preempted=comm.n_preempted,
     )

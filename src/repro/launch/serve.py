@@ -44,6 +44,7 @@ from repro.core.arena import (SchedulerArena, format_table,
 from repro.core.comm import HierTopology, Topology
 from repro.core.cost import LEAF_NIC, POD_UPLINK, RACK_UPLINK, Link
 from repro.core.graph import TaskGraph
+from repro.core.router import MODES, ReplicaRouter, RouterReport, SimReplica
 from repro.core.schedulers import as_executed, make_policy
 from repro.core.serving import ServingExecutor, groups_for_platform
 from repro.core.simulate import Platform, Processor, WorkerDrop, simulate
@@ -281,6 +282,40 @@ def run_arena_executed(n_requests: int, decode_chunks: int, *, steps: int = 6,
     return rows, arena
 
 
+def run_router(n_requests: int, decode_chunks: int, *, replicas: int = 3,
+               mode: str = "affinity", steps: int = 6, kv_mb: float = 16.0,
+               churn: float = 0.3, seed: int = 0, hier: bool = False,
+               arrival_spread_ms: float = 40.0, burst_factor: float = 6.0,
+               drain_step: int | None = None,
+               drain_replica: str | None = None) -> RouterReport:
+    """Fleet mode: ``replicas`` platform replicas behind a
+    :class:`~repro.core.router.ReplicaRouter`, fed one shared bursty
+    (Markov ON/OFF) request stream.  Every replica runs a persistent
+    ``incremental-gp`` policy, so the router's affinity score reads real
+    partitioner residency.  ``drain_step`` gracefully drains a replica
+    (default: the last one) before that step — proactive KV migration."""
+    plat0 = hierarchical_platform() if hier else heterogeneous_platform()
+    costs_prefill, costs_decode = (hier_request_costs(plat0) if hier
+                                   else (None, None))
+    stream = make_request_stream(
+        steps, base_requests=n_requests, decode_chunks=decode_chunks,
+        churn=churn, kv_bytes=int(kv_mb * 2**20), seed=seed,
+        costs_prefill=costs_prefill, costs_decode=costs_decode,
+        arrival_spread_ms=arrival_spread_ms, arrival_mode="onoff",
+        burst_factor=burst_factor)
+    reps = [SimReplica(f"r{i}",
+                       hierarchical_platform() if hier
+                       else heterogeneous_platform(),
+                       "incremental-gp",
+                       policy_kwargs=_policy_kwargs("incremental-gp"))
+            for i in range(replicas)]
+    router = ReplicaRouter(reps, mode=mode)
+    drain_at = None
+    if drain_step is not None:
+        drain_at = {drain_step: drain_replica or f"r{replicas - 1}"}
+    return router.run(stream, drain_at=drain_at)
+
+
 def write_bench(path: str, *, meta: dict, sim_rows=(), arena=None) -> dict:
     """Dump the serving benchmark to JSON (the CI ``bench-smoke`` artifact).
 
@@ -319,6 +354,17 @@ def main(argv=None):
                          "+ prefetch throttling, simulated and executed")
     ap.add_argument("--steps", type=int, default=6,
                     help="stream length (scheduling intervals) for --arena")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --arena: >1 runs the fleet tier — N platform "
+                         "replicas behind the partition-affine router on a "
+                         "bursty ON/OFF stream")
+    ap.add_argument("--router", type=str, default="affinity",
+                    choices=list(MODES) + ["all"],
+                    help="fleet routing mode for --replicas > 1 "
+                         "('all' compares every mode on the same stream)")
+    ap.add_argument("--drain-step", type=int, default=None,
+                    help="with --replicas: gracefully drain the last replica "
+                         "before this step (proactive KV migration)")
     ap.add_argument("--drop-step", type=int, default=None,
                     help="kill a small-pod worker at this arena step")
     ap.add_argument("--execute", action="store_true",
@@ -331,6 +377,22 @@ def main(argv=None):
                     help="square matrix side for executed kernels")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.arena and args.replicas > 1:
+        modes = list(MODES) if args.router == "all" else [args.router]
+        for mode in modes:
+            rep = run_router(args.requests, args.decode_chunks,
+                             replicas=args.replicas, mode=mode,
+                             steps=args.steps, seed=args.seed,
+                             hier=args.hier, drain_step=args.drain_step)
+            d = rep.to_dict()
+            print(f"[router] mode={mode} replicas={args.replicas} "
+                  f"steps={d['steps']}: mean_lat={d['mean_latency_ms']:.1f}ms "
+                  f"p95={d['p95_latency_ms']:.1f}ms "
+                  f"fleet_mk={d['total_makespan_ms']:.1f}ms "
+                  f"warm_hit={d['warm_hit_rate']:.0%} "
+                  f"migrated={d['kv_migrated_bytes'] / 2**20:.0f}MiB")
+        return
 
     if args.arena:
         rows, _ = run_arena(args.requests, args.decode_chunks,

@@ -1,0 +1,234 @@
+"""Regression tests for the two comm follow-on fixes.
+
+* Transfer preemption on worker drop: an in-flight copy toward a dead
+  group's memory node must release its remaining lane time (it used to run
+  to completion, holding every crossed lane for the full bottleneck-tier
+  duration) and be counted in ``n_preempted`` — simulated and executed.
+* ``Link.duplex``: a duplex link carries opposing directions on independent
+  lane pools, so an A->B copy never queues behind a B->A one; ``duplex=False``
+  keeps the single shared pool bit-identically.
+"""
+
+import jax
+import pytest
+
+from repro.core.comm import CommEngine, HierTopology, Topology
+from repro.core.cost import Link
+from repro.core.executor import JaxExecutor
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import make_policy
+from repro.core.simulate import Platform, Processor, WorkerDrop, simulate
+
+DEV = jax.devices()[0]
+KV = 1 << 20
+GB = Link("gb", bw=1e9)  # 1 GB/s, zero latency: 1e9 bytes take 1000 ms
+GB_DUP = Link("gbd", bw=1e9, duplex=True)
+
+
+# -- duplex lane pools ---------------------------------------------------------
+
+
+def test_duplex_splits_directions_simplex_serializes():
+    sim = CommEngine(Topology.dedicated(GB))
+    assert sim.fetch("x", 0, 1, 10**9, now=0.0) == pytest.approx(1000.0)
+    assert sim.fetch("y", 1, 0, 10**9, now=0.0) == pytest.approx(2000.0)
+
+    dup = CommEngine(Topology.dedicated(GB_DUP))
+    assert dup.fetch("x", 0, 1, 10**9, now=0.0) == pytest.approx(1000.0)
+    # opposing direction rides its own pool: no queueing
+    assert dup.fetch("y", 1, 0, 10**9, now=0.0) == pytest.approx(1000.0)
+    # same direction still serializes on its pool
+    assert dup.fetch("z", 0, 1, 10**9, now=0.0) == pytest.approx(2000.0)
+    # direction-split pools are distinct lane keys, conservation holds
+    keys = {t.lane for t in dup.transfers}
+    assert len(keys) == 2
+    assert sum(dup.lane_busy_ms().values()) == pytest.approx(dup.busy_ms)
+
+
+def test_duplex_cross_stream_finishes_in_half_the_simplex_makespan():
+    n = 8
+
+    def makespan(link: Link) -> float:
+        eng = CommEngine(Topology.dedicated(link))
+        fins = []
+        for i in range(n):
+            fins.append(eng.fetch(f"f{i}", 0, 1, 10**9, now=0.0))
+            fins.append(eng.fetch(f"r{i}", 1, 0, 10**9, now=0.0))
+        return max(fins)
+
+    assert makespan(GB) == pytest.approx(2 * n * 1000.0)
+    assert makespan(GB_DUP) == pytest.approx(n * 1000.0)
+
+
+def test_duplex_tiers_on_hierarchy():
+    """A duplex leaf NIC lets an A->B / B->A cross-stream overlap: both
+    copies cross both leaves, but in opposite directions."""
+
+    def topo(leaf: Link) -> HierTopology:
+        return HierTopology(
+            leaf=leaf,
+            rack=Link("rack", bw=4e9),
+            pod=Link("pod", bw=2e9),
+            node_rack={0: "r0", 1: "r0"},
+            rack_pod={"r0": "p0"},
+        )
+
+    sim = CommEngine(topo(GB))
+    a = sim.fetch("x", 0, 1, 10**9, now=0.0)
+    b = sim.fetch("y", 1, 0, 10**9, now=0.0)
+    assert (a, b) == (pytest.approx(1000.0), pytest.approx(2000.0))
+
+    dup = CommEngine(topo(GB_DUP))
+    a = dup.fetch("x", 0, 1, 10**9, now=0.0)
+    b = dup.fetch("y", 1, 0, 10**9, now=0.0)
+    assert (a, b) == (pytest.approx(1000.0), pytest.approx(1000.0))
+
+
+# -- preemption: comm engine unit ----------------------------------------------
+
+
+def test_preempt_truncates_in_flight_and_releases_unstarted():
+    eng = CommEngine(Topology.dedicated(GB))
+    eng.fetch("a", 0, 1, 10**9, now=0.0)  # lane busy [0, 1000]
+    eng.fetch("b", 0, 1, 10**9, now=0.0)  # queued    [1000, 2000]
+    cancelled = eng.preempt_dst(1, 10.0)
+    assert sorted(t.block for t in cancelled) == ["a", "b"]
+    assert eng.n_preempted == 2
+    by_block = {t.block: t for t in eng.transfers}
+    assert by_block["a"].preempted and by_block["a"].finish == pytest.approx(10.0)
+    # the queued copy never started: its whole booking is released
+    assert by_block["b"].finish == pytest.approx(by_block["b"].start)
+    # the lane is free again at the preemption time, not at 2000
+    assert eng.fetch("c", 0, 1, 10**9, now=10.0) == pytest.approx(1010.0)
+    assert sum(eng.lane_busy_ms().values()) == pytest.approx(eng.busy_ms)
+
+
+def test_preempt_leaves_other_destinations_alone():
+    eng = CommEngine(Topology.dedicated(GB))
+    eng.fetch("a", 0, 1, 10**9, now=0.0)
+    eng.fetch("b", 0, 2, 10**9, now=0.0)
+    assert [t.block for t in eng.preempt_dst(1, 0.0)] == ["a"]
+    keep = next(t for t in eng.transfers if t.block == "b")
+    assert not keep.preempted and keep.finish == pytest.approx(1000.0)
+
+
+def test_preempt_releases_every_tier_on_a_hierarchy():
+    topo = HierTopology(
+        leaf=Link("leaf", bw=4e9),
+        rack=Link("rack", bw=2e9),
+        pod=GB,
+        node_rack={0: "r0", 1: "r1"},
+        rack_pod={"r0": "p0", "r1": "p1"},
+    )
+    eng = CommEngine(topo, throttle=False)
+    eng.fetch("a", 0, 1, 10**9, now=0.0)  # cross-pod: 6 tiers @ 1000 ms each
+    assert eng.busy_ms == pytest.approx(6000.0)
+    eng.preempt_dst(1, 100.0)
+    assert eng.busy_ms == pytest.approx(600.0)  # every tier truncated at 100
+    assert sum(eng.lane_busy_ms().values()) == pytest.approx(eng.busy_ms)
+    # the pod uplink is usable again right away by unrelated traffic
+    t = eng.fetch("b", 0, 2, 10**9, now=100.0)
+    assert t == pytest.approx(1100.0)
+
+
+# -- preemption: simulated worker drop -----------------------------------------
+
+
+def _drop_platform() -> Platform:
+    procs = [Processor("a0", "a", 0), Processor("b0", "b", 1)]
+    return Platform(procs, link=GB, host_node=0, topology=Topology.dedicated(GB))
+
+
+def _producer_consumer(nbytes: int) -> TaskGraph:
+    g = TaskGraph()
+    g.add("p", costs={"a": 1.0, "b": 100.0}, out_bytes=nbytes)
+    g.add("c", costs={"a": 50.0, "b": 1.0})
+    g.add_edge("p", "c", nbytes=nbytes)
+    return g
+
+
+def test_simulated_drop_mid_transfer_preempts_and_frees_lanes():
+    """WorkerDrop killing a class's last worker mid-transfer: the inbound
+    copy is cancelled at the drop time, its lane time is released (no
+    double-counted busy_ms), and the re-dispatched consumer completes."""
+    g = _producer_consumer(10**7)  # 10 ms transfer on the GB link
+    # p on a [0,1]; c placed on b (EFT 12 vs 51) -> copy flies [1, 11]
+    r = simulate(
+        g,
+        make_policy("heft"),
+        _drop_platform(),
+        events=[WorkerDrop(5.0, "b0")],
+        host_entry=False,
+    )
+    assert r.n_preempted == 1
+    assert r.dropped_procs == ["b0"]
+    # the preempted copy's record is truncated at the drop time
+    (tr,) = [t for t in r.transfers if t[2] == 1]
+    assert tr[4] == pytest.approx(5.0)
+    # conservation: released lane time never double-counts
+    assert sum(r.lane_busy_ms.values()) == pytest.approx(r.transfer_busy_ms)
+    # c re-ran on the survivor, paying compute but no fresh transfer
+    assert r.kernels_per_class.get("a") == 2
+    assert r.makespan_ms == pytest.approx(55.0)
+
+
+def test_simulated_drop_with_surviving_class_worker_preempts_nothing():
+    """The memory node outlives the worker while siblings remain: inbound
+    copies stay booked (bit-identical with the pre-fix engine)."""
+    g = _producer_consumer(10**7)
+    plat = _drop_platform()
+    plat.procs.append(Processor("b1", "b", 1))
+    r = simulate(
+        g,
+        make_policy("heft"),
+        plat,
+        events=[WorkerDrop(5.0, "b0")],
+        host_entry=False,
+    )
+    assert r.n_preempted == 0
+    assert sum(r.lane_busy_ms.values()) == pytest.approx(r.transfer_busy_ms)
+
+
+# -- preemption: executed parity -----------------------------------------------
+
+
+def _chain_session():
+    g = TaskGraph()
+    g.add("a", op="k", costs={}, out_bytes=KV)
+    g.add("b", op="k", costs={}, out_bytes=KV)
+    g.add("c", op="k", costs={}, out_bytes=KV)
+    g.add_edge("a", "b", nbytes=KV)
+    g.add_edge("b", "c", nbytes=KV)
+    for k in g.nodes.values():
+        k.fn = lambda *xs: xs[0]
+    ex = JaxExecutor({"g0": DEV, "g1": DEV})
+    comm = CommEngine(Topology.dedicated(GB))
+    s = ex.session(
+        g,
+        {"a": "g0", "b": "g0", "c": "g1"},
+        {"a/in": jax.numpy.ones((8, 8))},
+        comm=comm,
+        group_nodes={"g0": 0, "g1": 1},
+        prefetch_depth=2,
+    )
+    return s, comm
+
+
+def test_executed_evict_preempts_in_flight_prefetch():
+    """Executed parity for the simulated drop test: evicting a group with a
+    staged copy still in (virtual) flight preempts it on the comm engine."""
+    s, comm = _chain_session()
+    s.step()  # a on g0
+    s.step()  # b on g0; prefetch b -> g1 staged for c
+    (pf,) = [t for t in comm.transfers if t.kind == "prefetch"]
+    assert pf.finish > s.vnow  # still in flight on the virtual clock
+    s.evict_group("g1")
+    assert comm.n_preempted == 1
+    (pf,) = [t for t in comm.transfers if t.kind == "prefetch"]
+    assert pf.preempted and pf.finish <= s.vnow + 1e-9
+    assert sum(comm.lane_busy_ms().values()) == pytest.approx(comm.busy_ms)
+    while s.step() is not None:
+        pass
+    res = s.result()
+    assert res.n_preempted == 1
+    assert sum(res.lane_busy_ms.values()) == pytest.approx(comm.busy_ms)
