@@ -3,8 +3,10 @@
 ``--refresh`` rebuilds ``benchmarks/baselines/serve_baseline.json`` with the
 EXACT stream flags the CI ``bench-smoke`` job runs (one source of truth:
 :data:`CI_STREAM`), plus ``router_baseline.json`` from the router bench's
-quick-mode sweep (:data:`benchmarks.router_bench.QUICK`), so a refreshed
-baseline can never drift from the gated configuration.  Run it whenever an
+quick-mode sweep (:data:`benchmarks.router_bench.QUICK`) and
+``superstep_baseline.json`` from the fused super-step bench's quick-mode
+sweep (:data:`benchmarks.superstep_bench.QUICK`), so a refreshed baseline
+can never drift from the gated configuration.  Run it whenever an
 intentional scheduling-quality change moves the simulated numbers::
 
     PYTHONPATH=src python -m benchmarks.refresh_baselines --refresh
@@ -38,14 +40,38 @@ from .gate_serve import GATED_POLICY
 from .router_bench import QUICK as ROUTER_QUICK
 from .router_bench import SEED as ROUTER_SEED
 from .router_bench import run_point as router_point
+from .superstep_bench import QUICK as SUPERSTEP_QUICK
+from .superstep_bench import build_doc as superstep_doc
+from .superstep_bench import sweep as superstep_sweep
 
 BASELINE = pathlib.Path(__file__).parent / "baselines" / "serve_baseline.json"
 ROUTER_BASELINE = (
     pathlib.Path(__file__).parent / "baselines" / "router_baseline.json"
 )
+SUPERSTEP_BASELINE = (
+    pathlib.Path(__file__).parent / "baselines" / "superstep_baseline.json"
+)
 
 # what check_rows() in router_bench.py gates on, per swept churn
 ROUTER_ROW_FIELDS = ("churn", "win_rr", "win_jsq")
+
+# the superstep artifact's per-row schema (timings are machine-dependent, so
+# validation is schema-only — the live gate is superstep_bench --check)
+SUPERSTEP_ROW_FIELDS = (
+    "group_size",
+    "unfused_ms",
+    "fused_ms",
+    "ratio",
+    "per_kernel_unfused_us",
+    "per_kernel_fused_us",
+    "cache_hits",
+    "cache_misses",
+)
+SUPERSTEP_OVERHEAD_FIELDS = (
+    "unfused_us_per_kernel",
+    "fused_us_per_kernel",
+    "ratio",
+)
 
 # the CI bench-smoke stream, verbatim (.github/workflows/ci.yml)
 CI_STREAM = {
@@ -91,6 +117,13 @@ def refresh_router(path: pathlib.Path) -> dict:
         ),
         "rows": rows,
     }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
+
+
+def refresh_superstep(path: pathlib.Path) -> dict:
+    doc = superstep_doc(SUPERSTEP_QUICK, superstep_sweep(SUPERSTEP_QUICK), quick=True)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
     return doc
@@ -188,6 +221,63 @@ def validate_router(path: pathlib.Path) -> list[str]:
     return failures
 
 
+def validate_superstep(path: pathlib.Path) -> list[str]:
+    """Superstep-baseline schema failures (empty = matches the quick sweep).
+
+    Timings are machine-dependent reference numbers and deliberately NOT
+    compared; the acceptance criteria run live in ``superstep_bench --check``.
+    """
+    failures: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read superstep baseline {path}: {e}"]
+
+    meta = doc.get("meta", {})
+    want_meta = {
+        "sizes": list(SUPERSTEP_QUICK["sizes"]),
+        "repeats": SUPERSTEP_QUICK["repeats"],
+        "side": SUPERSTEP_QUICK["side"],
+        "quick": True,
+    }
+    for key, want in want_meta.items():
+        got = meta.get(key)
+        if got != want:
+            failures.append(
+                f"superstep meta.{key} = {got!r} but the quick sweep runs "
+                f"with {want!r} (stale baseline? refresh with --refresh)"
+            )
+
+    overhead = doc.get("overhead", {})
+    for field in SUPERSTEP_OVERHEAD_FIELDS:
+        if not isinstance(overhead.get(field), numbers.Number):
+            failures.append(
+                f"superstep overhead.{field} missing or non-numeric "
+                f"({overhead.get(field)!r})"
+            )
+
+    rows = doc.get("rows", [])
+    sizes = []
+    for i, row in enumerate(rows):
+        for field in SUPERSTEP_ROW_FIELDS:
+            if not isinstance(row.get(field), numbers.Number):
+                failures.append(
+                    f"superstep rows[{i}].{field} missing or non-numeric "
+                    f"({row.get(field)!r})"
+                )
+        if not row.get("parity", False):
+            failures.append(f"superstep rows[{i}] recorded a parity failure")
+        if isinstance(row.get("group_size"), numbers.Number):
+            sizes.append(row["group_size"])
+    if sizes != list(SUPERSTEP_QUICK["sizes"]):
+        failures.append(
+            f"superstep rows sweep sizes {sizes} != quick sweep "
+            f"{list(SUPERSTEP_QUICK['sizes'])}"
+        )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--refresh", action="store_true", help="rebuild the baseline")
@@ -196,9 +286,11 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--path", type=str, default=str(BASELINE))
     ap.add_argument("--router-path", type=str, default=str(ROUTER_BASELINE))
+    ap.add_argument("--superstep-path", type=str, default=str(SUPERSTEP_BASELINE))
     args = ap.parse_args(argv)
     path = pathlib.Path(args.path)
     router_path = pathlib.Path(args.router_path)
+    superstep_path = pathlib.Path(args.superstep_path)
     if not (args.refresh or args.validate):
         ap.error("pick --refresh and/or --validate")
 
@@ -216,16 +308,28 @@ def main(argv=None) -> int:
             for r in rdoc["rows"]
         )
         print(f"[baseline] wrote {router_path}: affinity wins rr/jsq {wins}")
+        sdoc = refresh_superstep(superstep_path)
+        print(
+            f"[baseline] wrote {superstep_path}: marginal overhead "
+            f"{sdoc['overhead']['unfused_us_per_kernel']:.1f} -> "
+            f"{sdoc['overhead']['fused_us_per_kernel']:.1f} us/kernel "
+            f"({sdoc['overhead']['ratio']:.1f}x)"
+        )
 
     if args.validate:
-        failures = validate(path) + validate_router(router_path)
+        failures = (
+            validate(path)
+            + validate_router(router_path)
+            + validate_superstep(superstep_path)
+        )
         for msg in failures:
             print(f"[baseline] FAIL: {msg}")
         if failures:
             return 1
         print(
             f"[baseline] PASS: {path} matches gate_serve.py expectations; "
-            f"{router_path} matches the router quick sweep"
+            f"{router_path} matches the router quick sweep; "
+            f"{superstep_path} matches the superstep quick sweep"
         )
     return 0
 

@@ -1,0 +1,260 @@
+"""Fused super-step dispatch-overhead sweep: fused vs unfused group-steps.
+
+The axis is kernels-per-group.  The workload is one partition group running a
+chain of ``n`` tiny ``matadd`` kernels (compute ~ microseconds, so wall time
+IS dispatch overhead).  The unfused executor pays, per kernel: a Python
+ready-scan, an eager op dispatch and — with ``time_kernels=True``, the real
+serving configuration — a host ``block_until_ready`` sync.  The fused
+executor dispatches the whole chain as ONE pre-compiled XLA call with a
+single barrier (:class:`repro.core.executor.SuperStepCache` is pre-warmed, so
+no compile time is measured on either side).
+
+**Metric.**  Both paths carry a fixed per-group-step cost that does not
+scale with chain length (session state, the one XLA dispatch + barrier), so
+the honest "per-kernel dispatch overhead" is the *marginal* cost of one more
+kernel in the chain: the least-squares slope of wall time over group size
+across the sweep.  Per-size total-time ratios are also reported — they
+converge toward the slope ratio as ``n`` grows but are dominated by the
+fixed cost (and timer noise, at tens of microseconds) for short chains.
+
+Acceptance (``--check``):
+
+* fused is NEVER slower: at every group size, fused wall <= unfused wall
+  (with relative ``SLACK`` plus absolute ``ABS_SLACK_MS`` headroom — wall
+  times here are tens of microseconds, single-digit timer noise);
+* marginal per-kernel dispatch overhead drops by at least ``GATE_RATIO`` x
+  (slope ratio over the sweep — the ISSUE-7 tentpole claim);
+* total wall time at >= ``GATE_SIZE`` kernels per group improves by at
+  least ``MIN_SIZE_RATIO`` x (the fixed one-dispatch cost is amortized);
+* fused and unfused outputs agree bitwise-closely (parity is re-checked
+  here on every run, not just in the test suite);
+* each size compiles its chain exactly once (the cache persists).
+
+Deterministic workload (seeded inputs); timings are min-of-repeats.  Usage::
+
+    PYTHONPATH=src python -m benchmarks.superstep_bench [--quick]
+        [--out BENCH_superstep.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.executor import JaxExecutor, SuperStepCache, attach_matrix_kernels
+from repro.core.graph import TaskGraph
+
+from .common import emit
+
+SIDE = 16  # matrix side: tiny on purpose — wall time must be dispatch-bound
+SLACK = 0.25  # relative timer-noise headroom on the "never slower" check
+ABS_SLACK_MS = 0.025  # absolute headroom: walls here are tens of microseconds
+GATE_RATIO = 5.0  # required unfused/fused marginal-overhead (slope) ratio
+GATE_SIZE = 8  # chains at least this long must also win on total time...
+MIN_SIZE_RATIO = 1.5  # ...by at least this much (fixed cost amortized)
+
+QUICK = {"sizes": (1, 2, 4, 8, 16), "repeats": 40, "side": SIDE}
+FULL = {"sizes": (1, 2, 4, 8, 16, 32, 64), "repeats": 60, "side": SIDE}
+
+
+def build_chain_graph(n: int) -> TaskGraph:
+    """k0 -> k1 -> ... -> k{n-1}, all matadd, all in one group."""
+    g = TaskGraph()
+    prev = None
+    for i in range(n):
+        name = f"k{i}"
+        g.add(name, op="matadd", costs={"g0": 1.0}, out_bytes=SIDE * SIDE * 4)
+        if prev is not None:
+            g.add_edge(prev, name, nbytes=SIDE * SIDE * 4)
+        prev = name
+    g.validate()
+    return g
+
+
+def run_once(ex, g, inputs, *, fused: bool, cache=None) -> tuple[float, np.ndarray]:
+    """One full chain execution; returns (wall ms, exit output)."""
+    assignment = {name: "g0" for name in g.nodes}
+    session = ex.session(
+        g, assignment, inputs, time_kernels=True, fused=fused, cache=cache
+    )
+    t0 = time.perf_counter()
+    session.run_all()
+    res = session.result()  # blocks on the exit outputs
+    ms = (time.perf_counter() - t0) * 1e3
+    (out,) = res.outputs.values()
+    return ms, np.asarray(out)
+
+
+def run_size(n: int, repeats: int) -> dict:
+    dev = jax.devices()[0]
+    ex = JaxExecutor({"g0": dev})
+    g = build_chain_graph(n)
+    inputs = attach_matrix_kernels(g, SIDE)
+    cache = SuperStepCache()
+
+    # warm both paths once (jnp dispatch caches / super-step compile), then
+    # measure min-of-repeats — every fused repeat below is a cache HIT
+    _, ref_out = run_once(ex, g, inputs, fused=False)
+    _, fused_out = run_once(ex, g, inputs, fused=True, cache=cache)
+    parity = bool(np.allclose(ref_out, fused_out, rtol=1e-5, atol=1e-5))
+
+    unfused_ms = min(
+        run_once(ex, g, inputs, fused=False)[0] for _ in range(repeats)
+    )
+    fused_ms = min(
+        run_once(ex, g, inputs, fused=True, cache=cache)[0] for _ in range(repeats)
+    )
+    hits, misses = cache.hits, cache.misses
+    return {
+        "group_size": n,
+        "unfused_ms": unfused_ms,
+        "fused_ms": fused_ms,
+        "ratio": unfused_ms / fused_ms if fused_ms > 0 else float("inf"),
+        "per_kernel_unfused_us": unfused_ms / n * 1e3,
+        "per_kernel_fused_us": fused_ms / n * 1e3,
+        "parity": parity,
+        "cache_hits": hits,
+        "cache_misses": misses,
+    }
+
+
+def overhead_slopes(rows: list[dict]) -> dict:
+    """Least-squares wall-vs-size slope per path: the marginal per-kernel
+    dispatch overhead, free of each path's fixed per-group-step cost."""
+    sizes = np.array([r["group_size"] for r in rows], dtype=float)
+    uf = np.array([r["unfused_ms"] for r in rows]) * 1e3
+    fu = np.array([r["fused_ms"] for r in rows]) * 1e3
+    slope_uf = float(np.polyfit(sizes, uf, 1)[0])
+    slope_fu = float(np.polyfit(sizes, fu, 1)[0])
+    return {
+        "unfused_us_per_kernel": slope_uf,
+        "fused_us_per_kernel": slope_fu,
+        "ratio": slope_uf / slope_fu if slope_fu > 0 else float("inf"),
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        n = row["group_size"]
+        if not row["parity"]:
+            failures.append(f"n={n}: fused output DIVERGED from unfused")
+        if row["fused_ms"] > row["unfused_ms"] * (1.0 + SLACK) + ABS_SLACK_MS:
+            failures.append(
+                f"n={n}: fused SLOWER ({row['fused_ms']:.3f} > "
+                f"{row['unfused_ms']:.3f} ms + {SLACK:.0%} + "
+                f"{ABS_SLACK_MS} ms slack)"
+            )
+        if n >= GATE_SIZE and row["ratio"] < MIN_SIZE_RATIO:
+            failures.append(
+                f"n={n}: total-time win only {row['ratio']:.2f}x "
+                f"(need >= {MIN_SIZE_RATIO}x at n >= {GATE_SIZE})"
+            )
+        if row["cache_misses"] != 1:
+            failures.append(
+                f"n={n}: expected exactly 1 compile, saw {row['cache_misses']} "
+                f"(cache not persisting across repeats?)"
+            )
+    slopes = overhead_slopes(rows)
+    if slopes["ratio"] < GATE_RATIO:
+        failures.append(
+            f"marginal per-kernel overhead reduction only "
+            f"{slopes['ratio']:.1f}x ({slopes['unfused_us_per_kernel']:.1f} -> "
+            f"{slopes['fused_us_per_kernel']:.1f} us/kernel; "
+            f"need >= {GATE_RATIO:.0f}x)"
+        )
+    return failures
+
+
+def sweep(cfg: dict) -> list[dict]:
+    """Run the whole group-size sweep for one sizing config."""
+    return [run_size(n, cfg["repeats"]) for n in cfg["sizes"]]
+
+
+def build_doc(cfg: dict, rows: list[dict], *, quick: bool) -> dict:
+    """The JSON artifact / baseline document (one schema for both)."""
+    return {
+        "meta": {
+            "sizes": list(cfg["sizes"]),
+            "repeats": cfg["repeats"],
+            "side": cfg["side"],
+            "quick": quick,
+            "gate_ratio": GATE_RATIO,
+            "gate_size": GATE_SIZE,
+            "min_size_ratio": MIN_SIZE_RATIO,
+            "slack": SLACK,
+            "abs_slack_ms": ABS_SLACK_MS,
+        },
+        "overhead": overhead_slopes(rows),
+        "rows": rows,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true", help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    cfg = QUICK if args.quick else FULL
+    rows = sweep(cfg)
+    slopes = overhead_slopes(rows)
+
+    print(
+        f"{'n':>4}  {'unfused_ms':>10}  {'fused_ms':>9}  {'ratio':>6}  "
+        f"{'us/kernel':>9}  {'hits':>4}"
+    )
+    for row in rows:
+        print(
+            f"{row['group_size']:>4}  {row['unfused_ms']:>10.3f}  "
+            f"{row['fused_ms']:>9.3f}  {row['ratio']:>6.1f}  "
+            f"{row['per_kernel_fused_us']:>9.1f}  {row['cache_hits']:>4}"
+        )
+        emit(
+            f"superstep.n{row['group_size']}.ratio",
+            f"{row['ratio']:.2f}",
+            f"unfused_ms={row['unfused_ms']:.3f};"
+            f"fused_ms={row['fused_ms']:.3f};"
+            f"parity={int(row['parity'])}",
+        )
+    print(
+        f"marginal overhead: {slopes['unfused_us_per_kernel']:.1f} -> "
+        f"{slopes['fused_us_per_kernel']:.1f} us/kernel "
+        f"({slopes['ratio']:.1f}x reduction)"
+    )
+    emit(
+        "superstep.overhead_ratio",
+        f"{slopes['ratio']:.2f}",
+        f"unfused_us={slopes['unfused_us_per_kernel']:.2f};"
+        f"fused_us={slopes['fused_us_per_kernel']:.2f}",
+    )
+
+    if args.out:
+        doc = build_doc(cfg, rows, quick=args.quick)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[superstep] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[superstep] FAIL: {msg}")
+        if failures:
+            return 1
+        print(
+            "[superstep] PASS: fused never slower; "
+            f">= {GATE_RATIO:.0f}x marginal dispatch-overhead reduction; "
+            f">= {MIN_SIZE_RATIO}x total at n >= {GATE_SIZE}; "
+            "outputs bit-close"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Run `ruff format --check` over the incrementally-adopted path list.
+#
+# scripts/format_paths.txt is the single source of truth for which files are
+# format-clean; CI's lint job calls this script, and so can you:
+#
+#   ./scripts/check_format.sh            # check only (what CI runs)
+#   ./scripts/check_format.sh --fix      # rewrite the listed files in place
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+mode="--check"
+if [[ "${1:-}" == "--fix" ]]; then
+  mode=""
+fi
+
+# strip comments and blank lines; fail loudly on a listed-but-missing path
+paths=()
+while IFS= read -r line; do
+  line="${line%%#*}"
+  line="$(echo "$line" | xargs || true)"
+  [[ -z "$line" ]] && continue
+  if [[ ! -e "$line" ]]; then
+    echo "error: scripts/format_paths.txt lists missing path: $line" >&2
+    exit 1
+  fi
+  paths+=("$line")
+done < scripts/format_paths.txt
+
+# shellcheck disable=SC2086
+exec ruff format $mode "${paths[@]}"

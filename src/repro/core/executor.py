@@ -41,20 +41,41 @@ Two entry points:
   from the consistency *and* the comm model, so the consumer's re-pull is
   charged again (the transfer really does happen twice).
 
+**Fused super-steps** (``fused=True``): instead of the Python-driven
+kernel-at-a-time loop — one async dispatch plus (with ``time_kernels``) one
+host sync *per kernel* — the session assembles each partition group's
+currently-runnable intra-group kernel chain into a single jitted,
+buffer-donating callable (:func:`repro.kernels.ops.build_chain` composed per
+the graph's topological order) and dispatches it as ONE XLA computation with
+one ready-barrier per group-step.  Per-kernel wall times are *apportioned*
+from the fused wall time by the kernels' cost-table weights, so the
+measured-cost / EWMA feedback loop keeps working, and the per-kernel input
+sync of the unfused path never pollutes them (the one sync per group-step
+happens outside the timed region).  Compiled group-steps live in a
+persistent :class:`SuperStepCache` keyed by (graph revision, group
+signature, input shapes/dtypes): an online re-partition only recompiles the
+groups whose membership actually changed, and a full-repartition escalation
+(a new revision tag) invalidates everything.  The unfused path is preserved
+bit-identical — it is the fallback when exact per-kernel event interleaving
+matters (platform churn lands *between* kernels, not between group-steps)
+and the A/B baseline for the parity suite.
+
 On this 1-CPU container all groups alias one device (transfers are
-no-op-counted but still exercised); on a real slice, groups are disjoint
-device sets.
+no-op-counted but still exercised; buffer donation is a no-op XLA ignores);
+on a real slice, groups are disjoint device sets.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Iterable, Mapping
 
 import jax
 
 from .comm import CommEngine
+from ..kernels.ops import build_chain
 
 
 @dataclasses.dataclass
@@ -75,6 +96,67 @@ class ExecResult:
     #                                   # wire time per topology tier
     n_throttled: int = 0  # prefetches deferred by the throttle
     n_preempted: int = 0  # in-flight copies cancelled by a group eviction
+    fused_steps: int = 0  # compiled group-steps dispatched (fused=True)
+    cache_hits: int = 0  # super-step cache hits (this session)
+    cache_misses: int = 0  # super-step compilations (this session)
+
+
+@dataclasses.dataclass
+class SuperStepRun:
+    """One fused group-step: a whole intra-group kernel chain dispatched as
+    a single jitted call (audit record for apportionment / donation)."""
+
+    group: str
+    members: list  # kernel names, chain order
+    ms: float  # fused wall ms (one barrier for the whole chain)
+    cache_hit: bool
+    donated: list  # external input blocks donated to XLA
+    n_transfers: int
+    nbytes: int
+
+
+class SuperStepCache:
+    """Persistent compiled-group-step cache.
+
+    Keys are ``(revision, group signature, shapes/dtypes)`` — the revision
+    tag comes from the online partitioner (bumped only by full-repartition
+    escalations, NOT by boundary-local FM moves or warm ingests), the group
+    signature encodes the chain's ops + internal wiring + donation mask, and
+    the shape/dtype tuple pins the compiled executable's layout.  Entries
+    are AOT-compiled (``jit(...).lower(...).compile()``), so a cache hit
+    dispatches with zero tracing/compilation on the timed path, and a miss
+    compiles *outside* the timed region (compile time never pollutes the
+    apportioned per-kernel wall times).
+
+    The cache assumes the op -> implementation mapping is stable for its
+    lifetime (one ``attach`` convention per serving executor): signatures
+    name kernel *ops*, not the identity of the attached callables.
+    """
+
+    def __init__(self, max_entries: int = 512):
+        self.max_entries = max_entries
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def clear(self) -> None:
+        self._fns.clear()
+
+    def get_or_build(self, key, builder):
+        """-> (compiled fn, hit).  ``builder`` runs only on a miss."""
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn, True
+        self.misses += 1
+        fn = builder()
+        if len(self._fns) >= self.max_entries:  # bounded: drop oldest entry
+            self._fns.pop(next(iter(self._fns)))
+        self._fns[key] = fn
+        return fn, False
 
 
 @dataclasses.dataclass
@@ -118,6 +200,9 @@ class ExecSession:
         comm: CommEngine | None = None,
         group_nodes: Mapping[str, int] | None = None,
         prefetch_depth: int = 2,
+        fused: bool = False,
+        cache: SuperStepCache | None = None,
+        revision: int = 0,
     ):
         g.validate()
         self.ex = executor
@@ -125,6 +210,16 @@ class ExecSession:
         self.assignment = dict(assignment)
         self.host_group = executor.resolve_host_group(host_group)
         self.time_kernels = time_kernels
+        self.fused = fused
+        self.cache = (
+            cache if cache is not None else (SuperStepCache() if fused else None)
+        )
+        self.revision = revision
+        self.fused_steps = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.superstep_runs: list[SuperStepRun] = []
+        self._fused_buf: list[KernelRun] = []
         # gated kernels exist in the graph but may not run until admitted
         # (online request streams: the task arrived in the revision but its
         # wall-clock arrival time has not passed yet)
@@ -261,6 +356,10 @@ class ExecSession:
                 s not in self._done for s in self.g.successors(block)
             ):
                 self._requeue(block)
+        if self._fused_buf:
+            # an already-executed-but-unreported member whose kernel was just
+            # re-queued will run (and be reported) again: drop its stale record
+            self._fused_buf = [r for r in self._fused_buf if r.name in self._done]
         return self.reexecuted[before:]
 
     # -- execution -------------------------------------------------------------
@@ -345,8 +444,301 @@ class ExecSession:
                     self.n_transfers += 1
                     self.nbytes += moved
 
+    # -- fused super-steps -----------------------------------------------------
+
+    def _plan_superstep(self) -> tuple[str | None, list[str]]:
+        """-> (group, maximal runnable intra-group chain, topological order).
+
+        The first ready kernel (what :meth:`next_ready` would return) anchors
+        the chain and fixes the group; every later not-done, not-gated kernel
+        of that group whose predecessors are all finished or earlier chain
+        members joins it.  The anchor is always a member, so progress is
+        guaranteed; kernels of other groups end up in later group-steps.
+        ``(None, [])`` when nothing is ready."""
+        members: list[str] = []
+        member_set: set[str] = set()
+        grp: str | None = None
+        done = self._done
+        gated = self.gated
+        nodes = self.g.nodes
+        predecessors = self.g.predecessors
+        get_group = self.assignment.get
+        host = self.host_group
+        for n in self._order:
+            if n in done or n in gated:
+                continue
+            n_grp = get_group(n, host)
+            if grp is not None and n_grp != grp:
+                continue
+            if all(
+                p in done or p in member_set or nodes[p].op == "source"
+                for p in predecessors(n)
+            ):
+                if grp is None:
+                    grp = n_grp
+                members.append(n)
+                member_set.add(n)
+        return grp, members
+
+    def _donatable(self, key: str, grp: str, member_set) -> bool:
+        """May the group's copy of ``key`` be donated to the fused call?
+        Only when it is dead afterwards: not a caller-owned seed (re-seeding
+        reads it), not an exit output, the group's copy is the ONLY one (a
+        sibling group may alias the same physical buffer on a shared
+        device), and every not-yet-finished consumer is inside the chain."""
+        if key in self._inputs:
+            return False
+        ent = self.valid.get(key)
+        if ent is None or set(ent) != {grp}:
+            return False
+        if key in self.g.nodes:
+            if not self.g.successors(key):
+                return False  # exit output: result() must return it
+            return all(
+                s in self._done or s in member_set for s in self.g.successors(key)
+            )
+        return False
+
+    def _fused_superstep(self, record: bool = True) -> bool:
+        """Plan + dispatch one compiled group-step; with ``record`` it fills
+        ``_fused_buf`` with per-kernel records (the :meth:`step` replay
+        queue; :meth:`run_all` skips them).  False when nothing is ready.
+
+        The planning scan inlines :meth:`_plan_superstep` (the reference
+        spec) and classifies each member's predecessors in the same pass —
+        this loop's per-kernel cost IS the fused path's dispatch overhead,
+        so it stays a single lean sweep with no helper calls."""
+        done = self._done
+        gated = self.gated
+        valid = self.valid
+        vt_block = self.vt_block
+        g_nodes = self.g.nodes
+        successors = self.g.successors
+        predecessors = self.g.predecessors
+        g_edge = self.g.edge
+        get_group = self.assignment.get
+        host = self.host_group
+
+        # pass 1 — membership + argument classification (side-effect free):
+        # the first ready kernel anchors the chain and fixes the group; each
+        # joining member's predecessors become int entries (intra-chain slot)
+        # or (key, nbytes) entries (external block)
+        grp: str | None = None
+        dev = None
+        members: list[str] = []
+        midx: dict[str, int] = {}
+        fns: list = []
+        ops: list[str] = []
+        costs: list[float] = []
+        entries: list[list] = []
+        for n in self._order:
+            if n in done or n in gated:
+                continue
+            n_grp = get_group(n, host)
+            if grp is not None and n_grp != grp:
+                continue
+            preds = predecessors(n)
+            entry: list = []
+            runnable = True
+            for p in preds:
+                j = midx.get(p)
+                if j is not None:
+                    entry.append(j)
+                elif g_nodes[p].op == "source":
+                    entry.append((n + "/in", 0))  # entry kernel: seeded input
+                elif p in done:
+                    entry.append((p, g_edge(p, n).nbytes))
+                else:
+                    runnable = False
+                    break
+            if not runnable:
+                continue
+            if not preds and (n + "/in") in valid:
+                entry.append((n + "/in", 0))  # source-less entry kernel
+            k = g_nodes[n]
+            if k.fn is None:
+                raise ValueError(f"kernel {n} has no fn")
+            if grp is None:
+                grp = n_grp
+                dev = self.ex.groups[grp]
+            midx[n] = len(members)
+            members.append(n)
+            fns.append(k.fn)
+            ops.append(k.op)
+            costs.append(k.costs.get(grp, 0.0))
+            entries.append(entry)
+        if grp is None:
+            return False
+        member_set = midx.keys()
+
+        # pass 2 — gather external inputs once (demand pulls book comm lanes
+        # exactly as the unfused path would, attributed to the first needing
+        # kernel) and pick which outputs to materialize
+        pull = self._pull
+        prefetched_discard = self.prefetched.discard
+        ext_keys: list[str] = []
+        ext_index: dict[str, int] = {}
+        plan: list[tuple] = []
+        per_nt: list[int] = []
+        per_nb: list[int] = []
+        ready_vt: list[float] = []
+        keep: list[int] = []
+        out_slot: dict[str, int] = {}
+        total_nt = total_nb = 0
+        for i, n in enumerate(members):
+            srcs: list[tuple[str, int]] = []
+            rv = 0.0
+            nt = nb = 0
+            for item in entries[i]:
+                if type(item) is int:
+                    srcs.append(("mem", item))
+                    continue
+                key, nbytes = item
+                if key not in valid:
+                    continue  # same skip as _gather on a missing block
+                e = ext_index.get(key)
+                if e is None:
+                    moved = pull(key, nbytes, grp, dev, "demand")
+                    if moved:
+                        nt += 1
+                        nb += moved
+                    prefetched_discard((key, grp))
+                    e = ext_index[key] = len(ext_keys)
+                    ext_keys.append(key)
+                srcs.append(("ext", e))
+                rv = max(rv, vt_block.get((key, grp), 0.0))
+            plan.append((ops[i], tuple(srcs)))
+            per_nt.append(nt)
+            per_nb.append(nb)
+            total_nt += nt
+            total_nb += nb
+            ready_vt.append(rv)
+            # materialize only LIVE outputs — exits, or blocks a kernel
+            # outside this chain still needs; dead intermediates stay inside
+            # the XLA computation where they fuse away (the dispatch win)
+            succs = successors(n)
+            if not succs or any(s not in done and s not in member_set for s in succs):
+                out_slot[n] = len(keep)
+                keep.append(i)
+        self.n_transfers += total_nt
+        self.nbytes += total_nb
+
+        ext_args = [valid[key][grp] for key in ext_keys]
+        donate = tuple(
+            i
+            for i, key in enumerate(ext_keys)
+            if self._donatable(key, grp, member_set)
+        )
+        sig = (
+            self.revision,
+            grp,
+            tuple(plan),
+            tuple(keep),
+            tuple((a.shape, a.dtype) for a in ext_args),
+            donate,
+        )
+
+        def compile_chain():
+            chain = build_chain(
+                [(fn, srcs) for fn, (_, srcs) in zip(fns, plan)], keep
+            )
+            specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ext_args]
+            with jax.default_device(dev), warnings.catch_warnings():
+                # donation is advisory: backends without aliasing (CPU) warn
+                warnings.filterwarnings("ignore", message=".*donated.*")
+                return jax.jit(chain, donate_argnums=donate).lower(*specs).compile()
+
+        fn, hit = self.cache.get_or_build(sig, compile_chain)
+        self.cache_hits += int(hit)
+        self.cache_misses += int(not hit)
+
+        ms = 0.0
+        tk = self.time_kernels
+        if tk:
+            # ONE host sync per group-step, outside the timed region: input
+            # production time must not leak into the apportioned kernel times
+            for a in ext_args:
+                if hasattr(a, "block_until_ready"):
+                    a.block_until_ready()
+            t0 = time.perf_counter()
+        if donate:
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*donated.*")
+                outs = fn(*ext_args)
+        else:
+            outs = fn(*ext_args)
+        if tk:
+            for o in outs:
+                if hasattr(o, "block_until_ready"):
+                    o.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
+
+        # donated external buffers are consumed: drop the group's copies
+        donated = [ext_keys[i] for i in donate]
+        for key in donated:
+            ent = valid.get(key)
+            if ent is not None:
+                ent.pop(grp, None)
+                if not ent:
+                    del valid[key]
+            vt_block.pop((key, grp), None)
+
+        # apportion the fused wall time to members by cost-table weight, so
+        # MeasuredCostModel.observe / EWMA feedback keeps working per kernel
+        weights = [c if c > 0.0 else 0.0 for c in costs]
+        wsum = sum(weights)
+        if wsum <= 0.0:
+            weights = [1.0] * len(members)
+            wsum = float(len(members))
+        comm = self.comm
+        kernel_ms = self.kernel_ms
+        blocks = self.blocks
+        buf_append = self._fused_buf.append
+        for i, (n, w) in enumerate(zip(members, weights)):
+            kms = ms * w / wsum
+            if tk:
+                kernel_ms[n] = kms
+            vstart = vfinish = 0.0
+            if comm is not None:
+                vstart = max(
+                    self.group_free.get(grp, 0.0),
+                    ready_vt[i],
+                    self.earliest.get(n, 0.0),
+                )
+                vfinish = vstart + kms
+                self.group_free[grp] = vfinish
+                self.vnow = vfinish
+                self.vmax = max(self.vmax, vfinish)
+            slot = out_slot.get(n)
+            if slot is not None:
+                out = outs[slot]
+                valid[n] = {grp: out}
+                blocks[n] = out
+                if comm is not None:
+                    vt_block[(n, grp)] = vfinish
+            done.add(n)
+            if record:
+                buf_append(
+                    KernelRun(n, grp, kms, per_nt[i], per_nb[i], vstart, vfinish)
+                )
+        self.per_group[grp] = self.per_group.get(grp, 0) + len(members)
+        self.fused_steps += 1
+        self.superstep_runs.append(
+            SuperStepRun(grp, members, ms, hit, donated, total_nt, total_nb)
+        )
+        self._prefetch_ready()
+        return True
+
     def step(self) -> KernelRun | None:
-        """Execute the next ready kernel; ``None`` when the graph is drained."""
+        """Execute the next ready kernel; ``None`` when the graph is drained.
+
+        In fused mode a whole group-step executes at once (one compiled
+        dispatch, one barrier) and its per-kernel records are replayed one
+        per call, so online callers consume the same stepwise interface."""
+        if self.fused:
+            if not self._fused_buf and not self._fused_superstep():
+                return None
+            return self._fused_buf.pop(0)
         name = self.next_ready()
         if name is None:
             return None
@@ -389,6 +781,14 @@ class ExecSession:
         return KernelRun(name, grp, ms, nt, nb, vstart, vfinish)
 
     def run_all(self) -> None:
+        if self.fused:
+            # drain whole group-steps directly: no one-record-per-step()
+            # replay, no per-kernel KernelRun construction — batch callers
+            # only consume the aggregate result()/superstep_runs state
+            self._fused_buf.clear()
+            while not self.done() and self._fused_superstep(record=False):
+                pass
+            return
         while self.step() is not None:
             pass
 
@@ -411,6 +811,9 @@ class ExecSession:
             tier_busy_ms=self.comm.tier_busy_ms() if self.comm else {},
             n_throttled=self.comm.n_throttled if self.comm else 0,
             n_preempted=self.comm.n_preempted if self.comm else 0,
+            fused_steps=self.fused_steps,
+            cache_hits=self.cache_hits,
+            cache_misses=self.cache_misses,
         )
 
 
@@ -441,6 +844,9 @@ class JaxExecutor:
         comm: CommEngine | None = None,
         group_nodes: Mapping[str, int] | None = None,
         prefetch_depth: int = 2,
+        fused: bool = False,
+        cache: SuperStepCache | None = None,
+        revision: int = 0,
     ) -> ExecSession:
         return ExecSession(
             self,
@@ -453,6 +859,9 @@ class JaxExecutor:
             comm=comm,
             group_nodes=group_nodes,
             prefetch_depth=prefetch_depth,
+            fused=fused,
+            cache=cache,
+            revision=revision,
         )
 
     def run(
@@ -463,12 +872,20 @@ class JaxExecutor:
         *,
         host_group: str | None = None,
         time_kernels: bool = False,
+        fused: bool = False,
+        cache: SuperStepCache | None = None,
     ) -> ExecResult:
         """assignment: kernel -> group name.  ``inputs`` seeds the source
         blocks (host-resident, like the paper's initial data) on
         ``host_group`` (explicit, or the deterministic default)."""
         s = self.session(
-            g, assignment, inputs, host_group=host_group, time_kernels=time_kernels
+            g,
+            assignment,
+            inputs,
+            host_group=host_group,
+            time_kernels=time_kernels,
+            fused=fused,
+            cache=cache,
         )
         s.run_all()
         return s.result()

@@ -125,6 +125,12 @@ class OnlinePartitioner:
         self.history: list[RefineRecord] = []
         self.n_full = 0
         self.n_incremental = 0
+        # compilation-cache revision tag: bumped ONLY by full repartitions
+        # (cold resets and escalations rewrite every group's membership, so
+        # every compiled super-step keyed on the old tag is stale); warm
+        # ingests and boundary-local FM moves keep the tag — only the groups
+        # whose chain signature actually changed recompile
+        self.revision = 0
         self._baseline_cut = 0.0
         # quantization floor: when neither local moves nor a full repartition
         # can push imbalance below the trigger (coarse task granularity), the
@@ -515,6 +521,7 @@ class OnlinePartitioner:
         return "incremental"
 
     def _full_repartition(self, reason: str):
+        self.revision += 1
         if self.g.num_nodes() == 0:
             self.assignment = {}
             self._mem_loads = {}
@@ -597,6 +604,17 @@ class IncrementalGpPolicy(GpPolicy):
         for cls, ms in step_ms.items():
             if ms > 0:
                 self.live_step_ms[cls] = float(ms)
+
+    # -- super-step cache keying -----------------------------------------------
+
+    @property
+    def revision(self) -> int:
+        """Compilation-cache revision tag for the executor's fused
+        super-steps: follows the partitioner's full-repartition counter, so
+        warm ingests / boundary-local refinements keep compiled group-steps
+        warm and a full-repartition escalation invalidates them all."""
+        p = self.partitioner
+        return p.revision if p is not None else 0
 
     # -- fleet-tier residency export -------------------------------------------
 

@@ -36,6 +36,15 @@ On a hierarchical platform (:class:`~repro.core.comm.HierTopology`) each
 real ``device_put`` pull books every tier its path crosses — cross-pod pulls
 contend on the shared uplinks — and prefetches are contention-throttled
 (``StepReport.n_throttled``, per-tier wire time in ``tier_busy_ms``).
+
+``fused=True`` swaps the per-kernel dispatch loop for compiled per-group
+**super-steps** (one jitted, buffer-donating chain per partition group with
+a single ready-barrier each; see :mod:`repro.core.executor`).  The stream
+clock then follows the *apportioned* per-kernel times on the same virtual
+timeline, the measured-cost loop keeps closing per kernel, and the
+persistent :class:`~repro.core.executor.SuperStepCache` hit/miss counters
+surface in every :class:`StepReport` — the policy's ``revision`` tag keys
+the cache, so only a full-repartition escalation recompiles everything.
 """
 
 from __future__ import annotations
@@ -49,7 +58,7 @@ import jax
 from .arena import ArenaRow, ArenaStep
 from .comm import CommEngine
 from .cost import Link, MeasuredCostModel
-from .executor import JaxExecutor, attach_request_kernels
+from .executor import JaxExecutor, SuperStepCache, attach_request_kernels
 from .graph import TaskGraph
 from .simulate import Platform, WorkerAdd, WorkerDrop
 from ..ft.elastic import Heartbeat, HeartbeatMonitor, feed_policy
@@ -87,6 +96,9 @@ class StepReport:
     #                               # throttle (hierarchical topologies)
     n_preempted: int = 0            # in-flight copies cancelled when their
     #                               # destination group died mid-transfer
+    fused_steps: int = 0            # compiled group-steps dispatched (fused)
+    cache_hits: int = 0             # super-step compilation-cache hits
+    cache_misses: int = 0           # super-step compilations this interval
 
 
 @dataclasses.dataclass
@@ -147,6 +159,9 @@ class ServeReport:
             "prefetched": int(self.total("n_prefetched")),
             "throttled": int(self.total("n_throttled")),
             "preempted": int(self.total("n_preempted")),
+            "fused_steps": int(self.total("fused_steps")),
+            "cache_hits": int(self.total("cache_hits")),
+            "cache_misses": int(self.total("cache_misses")),
         }
 
 
@@ -210,7 +225,8 @@ class ServingExecutor:
                  attach: Callable[[TaskGraph, int], dict] | None = None,
                  monitor: HeartbeatMonitor | None = None,
                  cost_model: MeasuredCostModel | None = None,
-                 link: Link | None = None):
+                 link: Link | None = None, fused: bool = False,
+                 superstep_cache: SuperStepCache | None = None):
         missing = [c for c in platform.classes if c not in groups]
         if missing:
             raise KeyError(f"platform classes without a device group: {missing}")
@@ -224,6 +240,13 @@ class ServingExecutor:
             list(platform.classes), straggle_factor=1.5)
         self.cost_model = cost_model or MeasuredCostModel(impls={},
                                                           link=self.link)
+        # fused super-step mode: each group's runnable chain dispatches as
+        # one compiled call; the cache persists across intervals AND streams
+        # (compiled group-steps are pure — a warm entry is reusable by any
+        # policy whose revision tag and chain signature match)
+        self.fused = fused
+        self.superstep_cache = (superstep_cache if superstep_cache is not None
+                                else (SuperStepCache() if fused else None))
 
     def reset_measurements(self) -> None:
         """Fresh measurement state (monitor EWMAs + cost history).  Called at
@@ -362,7 +385,9 @@ class ServingExecutor:
         session = self.executor.session(
             g, assignment, inputs, host_group=self.host_group,
             time_kernels=True, gated=gated, comm=comm,
-            group_nodes=group_nodes)
+            group_nodes=group_nodes, fused=self.fused,
+            cache=self.superstep_cache,
+            revision=int(getattr(policy, "revision", 0)))
 
         clock = 0.0
         decision_ms = 0.0
@@ -499,6 +524,9 @@ class ServingExecutor:
             tier_busy_ms=comm.tier_busy_ms(),
             n_throttled=comm.n_throttled,
             n_preempted=comm.n_preempted,
+            fused_steps=session.fused_steps,
+            cache_hits=session.cache_hits,
+            cache_misses=session.cache_misses,
         )
 
     # -- whole stream ----------------------------------------------------------
@@ -605,5 +633,8 @@ def merge_serve_reports(reports: Sequence[ServeReport],
             tier_busy_ms=tiers,
             n_throttled=int(tot("n_throttled")),
             n_preempted=int(tot("n_preempted")),
+            fused_steps=int(tot("fused_steps")),
+            cache_hits=int(tot("cache_hits")),
+            cache_misses=int(tot("cache_misses")),
         ))
     return merged

@@ -81,3 +81,43 @@ def wkv6(r, k, v, w, u):
     if not use:
         return _ref.wkv6(r, k, v, w, u)[0]
     return _wkv.wkv6(r, k, v, w, u, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Super-step chain builder
+# ---------------------------------------------------------------------------
+
+def build_chain(steps, keep=None):
+    """Compose a group's intra-group kernel chain into ONE callable.
+
+    ``steps`` is a sequence of ``(fn, srcs)`` in topological order, where each
+    ``srcs`` entry names one positional argument of ``fn``:
+
+    * ``("ext", i)`` — the i-th *external* input of the chain (a block that
+      lives outside the group-step: a host seed or another group's output);
+    * ``("mem", j)`` — the output of the j-th earlier step (an intra-group
+      edge; it never touches host or comm lanes).
+
+    ``keep`` selects which step outputs the chain returns (default: all).
+    Outputs that are dead after the chain — every consumer is an earlier
+    ``("mem", ...)`` reference — should be omitted: XLA then fuses straight
+    through them instead of materializing one buffer per kernel, which is
+    most of the super-step's dispatch-overhead win.
+
+    The returned ``chain(*ext) -> tuple(kept outputs)`` is pure and
+    jit-friendly: the executor jits it once per (revision, group signature,
+    shapes/dtypes) with dead external buffers donated, so a whole partition
+    group runs as a single XLA computation — one async dispatch and one
+    ready-barrier per group-step instead of one per kernel.
+    """
+    plan = [(fn, tuple(srcs)) for fn, srcs in steps]
+    keep = tuple(range(len(plan))) if keep is None else tuple(keep)
+
+    def chain(*ext):
+        outs = []
+        for fn, srcs in plan:
+            args = [ext[i] if kind == "ext" else outs[i] for kind, i in srcs]
+            outs.append(fn(*args))
+        return tuple(outs[i] for i in keep)
+
+    return chain

@@ -1,6 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
 
 """Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
 lowers, partitions and compiles on the production meshes, and extract the
@@ -29,28 +31,51 @@ from repro.configs.base import SHAPES, shape_applicable
 from repro.configs.registry import ARCH_IDS, get_config, input_specs, canon
 from repro.launch import hlo as hlo_mod
 from repro.launch import flops as flops_mod
-from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
-                               ICI_BW, HBM_PER_CHIP)
-from repro.launch.steps import (DistConfig, make_train_step,
-                                make_prefill_step, make_decode_step,
-                                param_shardings, shardings_for_batch,
-                                replicated)
+from repro.launch.mesh import (
+    make_production_mesh,
+    PEAK_FLOPS_BF16,
+    HBM_BW,
+    ICI_BW,
+    HBM_PER_CHIP,
+)
+from repro.launch.steps import (
+    DistConfig,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    param_shardings,
+    shardings_for_batch,
+    replicated,
+)
+from repro.models.params import eval_specs
 from repro.parallel import sharding as shd
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 
-def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
-               dist: DistConfig = DistConfig(), cfg_overrides=None):
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    dist: DistConfig = DistConfig(),
+    cfg_overrides=None,
+):
     """Lower + compile one cell; returns the result record."""
     import dataclasses as _dc
+
     cfg = get_config(arch)
     if cfg_overrides:
         cfg = _dc.replace(cfg, **cfg_overrides)
     shape = SHAPES[shape_name]
     ok, reason = shape_applicable(cfg, shape)
     if not ok:
-        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-                "status": "skip", "reason": reason}
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "multi_pod": multi_pod,
+            "status": "skip",
+            "reason": reason,
+        }
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     t0 = time.time()
@@ -61,9 +86,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         o_sh = param_shardings(o_specs, mesh, ctx.rules)
         batch = input_specs(cfg, shape)
         b_sh = shardings_for_batch(batch, mesh, ctx.rules)
-        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
-                     out_shardings=(p_sh, o_sh, replicated(mesh)),
-                     donate_argnums=(0, 1))
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
         args = (eval_specs(p_specs, _pdt(cfg)), eval_specs(o_specs), batch)
     elif shape.kind == "prefill":
         step, p_specs, ctx = make_prefill_step(cfg, mesh, dist)
@@ -74,24 +102,34 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         args = (eval_specs(p_specs, _pdt(cfg)), batch)
     else:  # decode
         step, p_specs, c_specs, ctx = make_decode_step(
-            cfg, mesh, dist, batch=shape.global_batch,
-            cache_len=shape.seq_len)
+            cfg, mesh, dist, batch=shape.global_batch, cache_len=shape.seq_len
+        )
         p_sh = param_shardings(p_specs, mesh, ctx.rules)
         c_sh = param_shardings(c_specs, mesh, ctx.rules)
-        tok_sh = NamedSharding(mesh, shd.spec_for(("batch",), ctx.rules, mesh,
-                                                  (shape.global_batch,)))
+        tok_sh = NamedSharding(
+            mesh, shd.spec_for(("batch",), ctx.rules, mesh, (shape.global_batch,))
+        )
         from repro.configs.base import pad_for_tp
-        vpad = pad_for_tp(cfg, mesh.shape["model"]).padded_vocab(
-            mesh.shape["model"])
-        logits_sh = NamedSharding(mesh, shd.spec_for(
-            ("batch", "vocab"), ctx.rules, mesh,
-            (shape.global_batch, vpad)))
-        fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, replicated(mesh)),
-                     out_shardings=(logits_sh, c_sh),
-                     donate_argnums=(1,))
-        args = (eval_specs(p_specs, _pdt(cfg)), eval_specs(c_specs),
-                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
-                jax.ShapeDtypeStruct((), jnp.int32))
+
+        vpad = pad_for_tp(cfg, mesh.shape["model"]).padded_vocab(mesh.shape["model"])
+        logits_sh = NamedSharding(
+            mesh,
+            shd.spec_for(
+                ("batch", "vocab"), ctx.rules, mesh, (shape.global_batch, vpad)
+            ),
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, replicated(mesh)),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(1,),
+        )
+        args = (
+            eval_specs(p_specs, _pdt(cfg)),
+            eval_specs(c_specs),
+            jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
 
     with mesh:
         lowered = fn.lower(*args)
@@ -105,7 +143,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         text = compiled.as_text()
     except Exception:
         text = lowered.as_text()
-    hlo_stats = hlo_mod.analyze(text)        # scan-aware walk of the HLO
+    hlo_stats = hlo_mod.analyze(text)  # scan-aware walk of the HLO
     coll = hlo_stats["collectives"]
     mem_bytes = hlo_stats["mem_bytes"]
 
@@ -121,15 +159,19 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mf = model_flops(cfg, shape, tp=mesh.shape.get("model", 1))
     rec = {
-        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-        "status": "ok", "n_chips": n_chips,
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "n_chips": n_chips,
         "accounting": "ring-wire-v2",
-        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
         "t_flops_s": round(t_flops, 1),
         "flops_per_device": flops,
         "flops_hlo_naive": hlo_mod.flops_of(cost),  # scan-body-once; recorded
-        "bytes_per_device": mem_traffic,            # fusion-optimistic model
-        "bytes_hlo_walk": mem_bytes,                # CPU-HLO walk (inflated)
+        "bytes_per_device": mem_traffic,  # fusion-optimistic model
+        "bytes_hlo_walk": mem_bytes,  # CPU-HLO walk (inflated)
         "bytes_hlo_naive": hlo_mod.bytes_accessed_of(cost),
         "collectives": coll,
         "mem": _mem_record(mem),
@@ -146,8 +188,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     }
     rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
     bound = max(rec["terms"].values())
-    rec["roofline_fraction"] = (rec["terms"]["compute_s"] / bound
-                                if bound else 0.0)
+    rec["roofline_fraction"] = rec["terms"]["compute_s"] / bound if bound else 0.0
     return rec
 
 
@@ -159,6 +200,7 @@ def model_flops(cfg, shape, tp: int = 1) -> float:
     from repro.models.moe import padded_experts
     from repro.configs.base import pad_for_tp
     import numpy as np
+
     cfg = pad_for_tp(cfg, tp)
     specs = model_param_specs(cfg, tp=tp)
     total = 0
@@ -176,8 +218,7 @@ def model_flops(cfg, shape, tp: int = 1) -> float:
         e_pad = padded_experts(cfg.n_experts, tp)
         active = expert * (cfg.top_k / e_pad)
         total = total - expert + active
-    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
-                                   else 1)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     factor = 6.0 if shape.kind == "train" else 2.0
     return factor * total * tokens
 
@@ -190,16 +231,23 @@ def _mem_record(mem):
     if mem is None:
         return None
     out = {}
-    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
-              "output_size_in_bytes", "generated_code_size_in_bytes",
-              "alias_size_in_bytes"):
+    for k in (
+        "temp_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
         v = getattr(mem, k, None)
         if v is not None:
             out[k] = int(v)
     if out:
-        live = out.get("argument_size_in_bytes", 0) + \
-            out.get("temp_size_in_bytes", 0) + \
-            out.get("output_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0)
+        live = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
         out["est_live_bytes"] = int(live)
         out["fits_hbm"] = bool(live <= HBM_PER_CHIP)
     return out
@@ -224,11 +272,15 @@ def main(argv=None):
     ap.add_argument("--out", type=str, default="artifacts/dryrun")
     args = ap.parse_args(argv)
 
-    dist = DistConfig(seq_parallel=args.seq_parallel,
-                      sharding_mode=args.mode,
-                      decode_seqpar=not args.no_decode_seqpar,
-                      moe_dedup=args.moe_dedup, moe_dest_k=args.moe_dest_k,
-                      q_chunk=args.q_chunk, kv_chunk=args.kv_chunk)
+    dist = DistConfig(
+        seq_parallel=args.seq_parallel,
+        sharding_mode=args.mode,
+        decode_seqpar=not args.no_decode_seqpar,
+        moe_dedup=args.moe_dedup,
+        moe_dest_k=args.moe_dest_k,
+        q_chunk=args.q_chunk,
+        kv_chunk=args.kv_chunk,
+    )
     archs = ARCH_IDS if (args.all or not args.arch) else [canon(args.arch)]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
@@ -243,15 +295,20 @@ def main(argv=None):
                     tag += f".{args.mode}"
                 if args.tag:
                     tag += f".{args.tag}"
-                ov = ({"param_dtype": args.param_dtype}
-                      if args.param_dtype else None)
+                ov = {"param_dtype": args.param_dtype} if args.param_dtype else None
                 try:
-                    rec = lower_cell(arch, shape, multi_pod=mp, dist=dist,
-                                     cfg_overrides=ov)
+                    rec = lower_cell(
+                        arch, shape, multi_pod=mp, dist=dist, cfg_overrides=ov
+                    )
                 except Exception as e:  # a failure here is a bug in the system
-                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
-                           "status": "fail", "error": f"{type(e).__name__}: {e}",
-                           "trace": traceback.format_exc()[-2000:]}
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "multi_pod": mp,
+                        "status": "fail",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
                     failures += 1
                 with open(os.path.join(args.out, tag + ".json"), "w") as f:
                     json.dump(rec, f, indent=1)
@@ -259,11 +316,13 @@ def main(argv=None):
                 extra = ""
                 if status == "ok":
                     t = rec["terms"]
-                    extra = (f" compute={t['compute_s']*1e3:.2f}ms "
-                             f"mem={t['memory_s']*1e3:.2f}ms "
-                             f"coll={t['collective_s']*1e3:.2f}ms "
-                             f"dom={rec['dominant']}"
-                             f" compile={rec['t_compile_s']}s")
+                    extra = (
+                        f" compute={t['compute_s'] * 1e3:.2f}ms "
+                        f"mem={t['memory_s'] * 1e3:.2f}ms "
+                        f"coll={t['collective_s'] * 1e3:.2f}ms "
+                        f"dom={rec['dominant']}"
+                        f" compile={rec['t_compile_s']}s"
+                    )
                 elif status == "fail":
                     extra = " " + rec["error"][:160]
                 print(f"[dryrun] {tag:55s} {status}{extra}", flush=True)

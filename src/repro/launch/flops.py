@@ -18,17 +18,67 @@ from __future__ import annotations
 import numpy as np
 
 
-_ELEMENTWISE_2X = {"exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "erf",
-                   "sin", "cos", "pow"}
-_FREE = {"reshape", "transpose", "broadcast_in_dim", "squeeze", "slice",
-         "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
-         "gather", "scatter", "scatter-add", "convert_element_type",
-         "bitcast_convert_type", "iota", "rev", "copy", "stop_gradient",
-         "select_n", "eq", "ne", "ge", "gt", "le", "lt", "and", "or", "not",
-         "xor", "sign", "is_finite", "device_put", "sharding_constraint",
-         "split", "squeeze", "expand_dims", "argmax", "argmin", "clamp",
-         "round", "floor", "ceil", "rem", "shift_left",
-         "shift_right_logical", "shift_right_arithmetic", "real", "imag"}
+_ELEMENTWISE_2X = {
+    "exp",
+    "log",
+    "tanh",
+    "logistic",
+    "rsqrt",
+    "sqrt",
+    "erf",
+    "sin",
+    "cos",
+    "pow",
+}
+_FREE = {
+    "reshape",
+    "transpose",
+    "broadcast_in_dim",
+    "squeeze",
+    "slice",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "concatenate",
+    "pad",
+    "gather",
+    "scatter",
+    "scatter-add",
+    "convert_element_type",
+    "bitcast_convert_type",
+    "iota",
+    "rev",
+    "copy",
+    "stop_gradient",
+    "select_n",
+    "eq",
+    "ne",
+    "ge",
+    "gt",
+    "le",
+    "lt",
+    "and",
+    "or",
+    "not",
+    "xor",
+    "sign",
+    "is_finite",
+    "device_put",
+    "sharding_constraint",
+    "split",
+    "expand_dims",
+    "argmax",
+    "argmin",
+    "clamp",
+    "round",
+    "floor",
+    "ceil",
+    "rem",
+    "shift_left",
+    "shift_right_logical",
+    "shift_right_arithmetic",
+    "real",
+    "imag",
+}
 
 
 def _out_elems(eqn) -> int:
@@ -92,12 +142,24 @@ def jaxpr_flops(jaxpr) -> float:
         elif prim == "cond":
             branches = eqn.params["branches"]
             total += max((jaxpr_flops(b.jaxpr) for b in branches), default=0.0)
-        elif prim in ("pjit", "jit", "closed_call", "core_call",
-                      "custom_jvp_call", "custom_vjp_call",
-                      "custom_vjp_call_jaxpr", "remat", "remat2",
-                      "checkpoint", "custom_lin"):
-            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
-                     or eqn.params.get("fun_jaxpr"))
+        elif prim in (
+            "pjit",
+            "jit",
+            "closed_call",
+            "core_call",
+            "custom_jvp_call",
+            "custom_vjp_call",
+            "custom_vjp_call_jaxpr",
+            "remat",
+            "remat2",
+            "checkpoint",
+            "custom_lin",
+        ):
+            inner = (
+                eqn.params.get("jaxpr")
+                or eqn.params.get("call_jaxpr")
+                or eqn.params.get("fun_jaxpr")
+            )
             if inner is not None:
                 total += jaxpr_flops(getattr(inner, "jaxpr", inner))
         elif prim == "shard_map":
@@ -108,13 +170,31 @@ def jaxpr_flops(jaxpr) -> float:
                 mesh = eqn.params.get("mesh")
                 n = getattr(mesh, "size", 1)
                 total += n * jaxpr_flops(getattr(inner, "jaxpr", inner))
-        elif prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
-                      "reduce_and", "reduce_or", "cumsum", "cummax",
-                      "cumlogsumexp"):
+        elif prim in (
+            "reduce_sum",
+            "reduce_max",
+            "reduce_min",
+            "reduce_prod",
+            "reduce_and",
+            "reduce_or",
+            "cumsum",
+            "cummax",
+            "cumlogsumexp",
+        ):
             # count input elements (one op per reduced element)
             total += int(np.prod(eqn.invars[0].aval.shape) or 1)
-        elif prim in ("add", "sub", "mul", "div", "max", "min", "neg", "abs",
-                      "integer_pow", "square"):
+        elif prim in (
+            "add",
+            "sub",
+            "mul",
+            "div",
+            "max",
+            "min",
+            "neg",
+            "abs",
+            "integer_pow",
+            "square",
+        ):
             total += _out_elems(eqn)
         elif prim in _ELEMENTWISE_2X:
             total += 2 * _out_elems(eqn)
@@ -144,6 +224,7 @@ def _while_trip_count(eqn) -> int:
 def count_step_flops(fn, *args) -> float:
     """Trace ``fn`` with ShapeDtypeStruct args and count global FLOPs."""
     import jax
+
     jx = jax.make_jaxpr(fn)(*args)
     return jaxpr_flops(jx.jaxpr)
 
@@ -152,13 +233,17 @@ def count_step_flops(fn, *args) -> float:
 # analytic peak-memory estimate (jaxpr liveness)
 # ---------------------------------------------------------------------------
 
+
 def _aval_bytes(aval) -> int:
     shape = getattr(aval, "shape", None)
     dtype = getattr(aval, "dtype", None)
     if shape is None or dtype is None:
         return 0
-    return int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else \
-        np.dtype(dtype).itemsize
+    return (
+        int(np.prod(shape)) * np.dtype(dtype).itemsize
+        if shape
+        else np.dtype(dtype).itemsize
+    )
 
 
 def jaxpr_peak_live_bytes(jaxpr, *, donated_in_bytes: int = 0) -> int:
@@ -173,6 +258,7 @@ def jaxpr_peak_live_bytes(jaxpr, *, donated_in_bytes: int = 0) -> int:
     donation lets XLA alias them with outputs, saving one copy.
     """
     from jax._src.core import Literal
+
     last_use: dict = {}
     for i, eqn in enumerate(jaxpr.eqns):
         for v in eqn.invars:
@@ -203,6 +289,7 @@ def jaxpr_peak_live_bytes(jaxpr, *, donated_in_bytes: int = 0) -> int:
 
 def step_peak_bytes(fn, *args, donated: float = 0) -> int:
     import jax
+
     jx = jax.make_jaxpr(fn)(*args)
     return jaxpr_peak_live_bytes(jx.jaxpr, donated_in_bytes=int(donated))
 
@@ -211,9 +298,18 @@ def step_peak_bytes(fn, *args, donated: float = 0) -> int:
 # fusion-optimistic HBM traffic model
 # ---------------------------------------------------------------------------
 
-_MEM_HEAVY = {"dot_general", "conv_general_dilated", "gather", "scatter",
-              "scatter-add", "scatter_add", "dynamic_update_slice",
-              "dynamic_slice", "sort", "cumsum"}
+_MEM_HEAVY = {
+    "dot_general",
+    "conv_general_dilated",
+    "gather",
+    "scatter",
+    "scatter-add",
+    "scatter_add",
+    "dynamic_update_slice",
+    "dynamic_slice",
+    "sort",
+    "cumsum",
+}
 
 
 def _eqn_io_bytes(eqn) -> int:
@@ -244,9 +340,8 @@ def jaxpr_memory_bytes(jaxpr) -> float:
             ncon = eqn.params["num_consts"]
             inner = jaxpr_memory_bytes(body)
             # per-iteration boundary traffic: carries r/w + xs read + ys write
-            carry = sum(_aval_bytes(v.aval)
-                        for v in body.invars[ncon:ncon + ncar])
-            xs = sum(_aval_bytes(v.aval) for v in body.invars[ncon + ncar:])
+            carry = sum(_aval_bytes(v.aval) for v in body.invars[ncon : ncon + ncar])
+            xs = sum(_aval_bytes(v.aval) for v in body.invars[ncon + ncar :])
             ys = sum(_aval_bytes(v.aval) for v in body.outvars[ncar:])
             total += length * (inner + 2 * carry + xs + ys)
         elif prim == "while":
@@ -255,19 +350,33 @@ def jaxpr_memory_bytes(jaxpr) -> float:
             carry = sum(_aval_bytes(v.aval) for v in body.invars)
             total += trips * (jaxpr_memory_bytes(body) + 2 * carry)
         elif prim == "cond":
-            total += max((jaxpr_memory_bytes(b.jaxpr)
-                          for b in eqn.params["branches"]), default=0.0)
-        elif prim in ("pjit", "jit", "closed_call", "core_call",
-                      "custom_jvp_call", "custom_vjp_call",
-                      "custom_vjp_call_jaxpr", "remat", "remat2",
-                      "checkpoint", "custom_lin"):
+            total += max(
+                (jaxpr_memory_bytes(b.jaxpr) for b in eqn.params["branches"]),
+                default=0.0,
+            )
+        elif prim in (
+            "pjit",
+            "jit",
+            "closed_call",
+            "core_call",
+            "custom_jvp_call",
+            "custom_vjp_call",
+            "custom_vjp_call_jaxpr",
+            "remat",
+            "remat2",
+            "checkpoint",
+            "custom_lin",
+        ):
             if str(eqn.params.get("name", "")).startswith("fusedkernel"):
                 # a region implemented as a Pallas TPU kernel: internals are
                 # VMEM-resident, HBM traffic = region inputs + outputs
                 total += _eqn_io_bytes(eqn)
                 continue
-            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
-                     or eqn.params.get("fun_jaxpr"))
+            inner = (
+                eqn.params.get("jaxpr")
+                or eqn.params.get("call_jaxpr")
+                or eqn.params.get("fun_jaxpr")
+            )
             if inner is not None:
                 total += jaxpr_memory_bytes(getattr(inner, "jaxpr", inner))
         elif prim == "shard_map":

@@ -24,19 +24,42 @@ import re
 from collections import defaultdict
 
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "token": 0,
 }
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute", "ragged-all-to-all")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
 _INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
-    r"([\w\-]+)\((.*)$")
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$"
+)
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -85,15 +108,23 @@ def parse_computations(text: str) -> dict[str, list[Instr]]:
             continue
         m = _INSTR_RE.match(line)
         if m:
-            cur.append(Instr(m.group(1), m.group(2), m.group(3),
-                             m.group(4)))
+            cur.append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
     comps["__entry__"] = comps.get(entry, [])
     comps["__entry_name__"] = entry
     return comps
 
 
-_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element",
-             "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+_SKIP_MEM = {
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "bitcast",
+    "after-all",
+    "partition-id",
+    "replica-id",
+    "iota",
+}
 
 
 def _operand_names(rest: str) -> list[str]:
@@ -126,8 +157,8 @@ def analyze(text: str) -> dict:
         coll = defaultdict(float)
         coll_n = defaultdict(int)
         ops: list = []
-        memo[name] = {"mem": 0.0, "coll": coll, "coll_n": coll_n,
-                      "ops": ops}  # cycle guard
+        # cycle guard
+        memo[name] = {"mem": 0.0, "coll": coll, "coll_n": coll_n, "ops": ops}
         for ins in instrs:
             op = ins.op
             if op in _SKIP_MEM:
@@ -171,8 +202,7 @@ def analyze(text: str) -> dict:
                 coll[base] += wire
                 coll_n[base] += 1
                 ops.append((f"{base} {ins.shape[:48]}", wire, 1))
-        memo[name] = {"mem": mem, "coll": coll, "coll_n": coll_n,
-                      "ops": ops}
+        memo[name] = {"mem": mem, "coll": coll, "coll_n": coll_n, "ops": ops}
         return memo[name]
 
     def _called(ins: Instr):
@@ -188,25 +218,32 @@ def analyze(text: str) -> dict:
                     out.append(nm)
         return out
 
-    c = comp_cost(entry_name) if entry_name else {"mem": 0.0, "coll": {},
-                                                  "coll_n": {}, "ops": []}
+    c = (
+        comp_cost(entry_name)
+        if entry_name
+        else {"mem": 0.0, "coll": {}, "coll_n": {}, "ops": []}
+    )
     coll_total = sum(c["coll"].values())
     # aggregate identical collective ops: (desc, bytes) -> count
     agg: dict = defaultdict(int)
     for kind, nb, n in c["ops"]:
         agg[(kind, nb)] += n
-    top = sorted(((kind, nb, n, nb * n) for (kind, nb), n in agg.items()),
-                 key=lambda t: -t[3])[:12]
+    top = sorted(
+        ((kind, nb, n, nb * n) for (kind, nb), n in agg.items()),
+        key=lambda t: -t[3],
+    )[:12]
     return {
         "mem_bytes": c["mem"],
-        "collectives": {**{k: int(v) for k, v in c["coll"].items()},
-                        "total": int(coll_total),
-                        "count": int(sum(c["coll_n"].values())),
-                        "per_kind_count": {k: int(v)
-                                           for k, v in c["coll_n"].items()},
-                        "top_ops": [
-                            {"op": k, "bytes": int(b), "times": int(n),
-                             "total": int(t)} for k, b, n, t in top]},
+        "collectives": {
+            **{k: int(v) for k, v in c["coll"].items()},
+            "total": int(coll_total),
+            "count": int(sum(c["coll_n"].values())),
+            "per_kind_count": {k: int(v) for k, v in c["coll_n"].items()},
+            "top_ops": [
+                {"op": k, "bytes": int(b), "times": int(n), "total": int(t)}
+                for k, b, n, t in top
+            ],
+        },
     }
 
 

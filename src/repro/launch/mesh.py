@@ -25,8 +25,8 @@ def make_host_mesh():
 
 
 # TPU v5e hardware constants (assignment brief)
-PEAK_FLOPS_BF16 = 197e12       # per chip
-HBM_BW = 819e9                 # bytes/s per chip
-ICI_BW = 50e9                  # bytes/s per link
-DCN_BW = 6.25e9                # bytes/s per chip, inter-pod (modeled)
-HBM_PER_CHIP = 16 * 1024**3    # v5e: 16 GiB
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+DCN_BW = 6.25e9  # bytes/s per chip, inter-pod (modeled)
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB

@@ -22,9 +22,10 @@ from ..parallel import sharding as shd
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     """Distribution knobs (hillclimb levers live here)."""
-    sharding_mode: str = "tp"           # tp (Megatron, baseline) | fsdp
+
+    sharding_mode: str = "tp"  # tp (Megatron, baseline) | fsdp
     seq_parallel: bool = False
-    decode_seqpar: bool = True          # flash-decode cache seq-sharding
+    decode_seqpar: bool = True  # flash-decode cache seq-sharding
     remat: bool = True
     q_chunk: int = 512
     kv_chunk: int = 1024
@@ -38,44 +39,59 @@ def _dtype(name: str):
     return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
 
 
-def make_ctx(cfg: ModelConfig, mesh: Mesh | None, phase: str,
-             dist: DistConfig) -> Ctx:
-    rules = shd.rules_for(cfg, phase, seq_parallel=dist.seq_parallel,
-                          sharding_mode=dist.sharding_mode)
-    return Ctx(rules=rules, dtype=_dtype(cfg.activation_dtype),
-               mesh=mesh, decode_seqpar=dist.decode_seqpar,
-               remat=dist.remat and cfg.remat,
-               q_chunk=dist.q_chunk, kv_chunk=dist.kv_chunk,
-               fsdp_gather=(dist.sharding_mode == "fsdp"
-                            and phase != "decode"),
-               moe_dedup=dist.moe_dedup, moe_dest_k=dist.moe_dest_k)
+def make_ctx(cfg: ModelConfig, mesh: Mesh | None, phase: str, dist: DistConfig) -> Ctx:
+    rules = shd.rules_for(
+        cfg, phase, seq_parallel=dist.seq_parallel, sharding_mode=dist.sharding_mode
+    )
+    return Ctx(
+        rules=rules,
+        dtype=_dtype(cfg.activation_dtype),
+        mesh=mesh,
+        decode_seqpar=dist.decode_seqpar,
+        remat=dist.remat and cfg.remat,
+        q_chunk=dist.q_chunk,
+        kv_chunk=dist.kv_chunk,
+        fsdp_gather=(dist.sharding_mode == "fsdp" and phase != "decode"),
+        moe_dedup=dist.moe_dedup,
+        moe_dest_k=dist.moe_dest_k,
+    )
 
 
 def batch_axes(batch_tree: Mapping[str, Any]) -> dict:
     """Logical axes for a batch dict by array rank."""
+
     def axes(v):
-        return {1: ("batch",), 2: ("batch", "seq"),
-                3: ("batch", "seq", "embed")}[v.ndim if hasattr(v, "ndim")
-                                              else len(v.shape)]
+        return {1: ("batch",), 2: ("batch", "seq"), 3: ("batch", "seq", "embed")}[
+            v.ndim if hasattr(v, "ndim") else len(v.shape)
+        ]
+
     return {k: axes(v) for k, v in batch_tree.items()}
 
 
 def shardings_for_batch(batch_tree, mesh, rules):
-    return {k: NamedSharding(mesh, shd.spec_for(a, rules, mesh,
-                                                batch_tree[k].shape))
-            for k, a in batch_axes(batch_tree).items()}
+    return {
+        k: NamedSharding(mesh, shd.spec_for(a, rules, mesh, batch_tree[k].shape))
+        for k, a in batch_axes(batch_tree).items()
+    }
 
 
 # ---------------------------------------------------------------------------
 # train
 # ---------------------------------------------------------------------------
 
-def make_train_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
-                    opt_cfg: adamw.AdamWConfig | None = None):
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh | None,
+    dist: DistConfig,
+    opt_cfg: adamw.AdamWConfig | None = None,
+):
     """Returns (train_step, param_specs, opt_specs, ctx)."""
     opt_cfg = opt_cfg or adamw.AdamWConfig(
-        lr=dist.lr, state_dtype=_dtype(cfg.optstate_dtype),
-        compress_int8=dist.compress_int8)
+        lr=dist.lr,
+        state_dtype=_dtype(cfg.optstate_dtype),
+        compress_int8=dist.compress_int8,
+    )
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     cfg = pad_for_tp(cfg, tp)
     ctx = make_ctx(cfg, mesh, "train", dist)
@@ -85,12 +101,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
     def train_step(params, opt_state, batch):
         def loss_fn(p):
             return T.lm_loss(p, batch, cfg, ctx)
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        lr_scale = adamw.cosine_schedule(opt_state["step"] + 1, warmup=100,
-                                         total=10000)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr_scale = adamw.cosine_schedule(opt_state["step"] + 1, warmup=100, total=10000)
         new_params, new_opt, om = adamw.apply_updates(
-            params, grads, opt_state, opt_cfg, lr_scale=lr_scale)
+            params, grads, opt_state, opt_cfg, lr_scale=lr_scale
+        )
         out = {"loss": loss, **metrics, **om}
         return new_params, new_opt, out
 
@@ -101,8 +117,13 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
 # prefill / decode
 # ---------------------------------------------------------------------------
 
-def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
-                      cache_len: int | None = None):
+
+def make_prefill_step(
+    cfg: ModelConfig,
+    mesh: Mesh | None,
+    dist: DistConfig,
+    cache_len: int | None = None,
+):
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     cfg = pad_for_tp(cfg, tp)
     ctx = make_ctx(cfg, mesh, "prefill", dist)
@@ -114,8 +135,13 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
     return prefill_step, param_specs, ctx
 
 
-def make_decode_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
-                     batch: int, cache_len: int):
+def make_decode_step(
+    cfg: ModelConfig,
+    mesh: Mesh | None,
+    dist: DistConfig,
+    batch: int,
+    cache_len: int,
+):
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     cfg = pad_for_tp(cfg, tp)
     ctx = make_ctx(cfg, mesh, "decode", dist)
@@ -131,6 +157,7 @@ def make_decode_step(cfg: ModelConfig, mesh: Mesh | None, dist: DistConfig,
 # ---------------------------------------------------------------------------
 # sharding trees
 # ---------------------------------------------------------------------------
+
 
 def param_shardings(param_specs, mesh, rules):
     return shd.tree_shardings(param_specs, mesh, rules)

@@ -22,26 +22,46 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, batches
 from repro.ft.elastic import Heartbeat, HeartbeatMonitor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import (DistConfig, make_train_step, param_shardings,
-                                shardings_for_batch, replicated)
+from repro.launch.steps import (
+    DistConfig,
+    make_train_step,
+    param_shardings,
+    shardings_for_batch,
+    replicated,
+)
 from repro.models.params import init_params, count_params
 
 
-def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
-          dist: DistConfig = DistConfig(), ckpt_dir: str | None = None,
-          ckpt_every: int = 50, log_every: int = 10, seed: int = 0,
-          fail_at: int | None = None):
+def train(
+    cfg,
+    mesh,
+    *,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    dist: DistConfig = DistConfig(),
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    log_every: int = 10,
+    seed: int = 0,
+    fail_at: int | None = None,
+):
     step_fn, p_specs, o_specs, ctx = make_train_step(cfg, mesh, dist)
     p_sh = param_shardings(p_specs, mesh, ctx.rules)
     o_sh = param_shardings(o_specs, mesh, ctx.rules)
 
-    dummy = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
-             "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    dummy = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32),
+    }
     b_sh = shardings_for_batch(dummy, mesh, ctx.rules)
 
-    jit_step = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh),
-                       out_shardings=(p_sh, o_sh, replicated(mesh)),
-                       donate_argnums=(0, 1))
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, replicated(mesh)),
+        donate_argnums=(0, 1),
+    )
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start = 0
@@ -58,11 +78,14 @@ def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
         params = jax.device_put(params, p_sh)
         opt_state = jax.device_put(opt_state, o_sh)
     n_params = count_params(p_specs)
-    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
-          f"{mesh.devices.size} device(s), batch {global_batch} x {seq_len}")
+    print(
+        f"[train] {cfg.name}: {n_params / 1e6:.1f}M params, "
+        f"{mesh.devices.size} device(s), batch {global_batch} x {seq_len}"
+    )
 
-    data_cfg = DataConfig(seq_len=seq_len, global_batch=global_batch,
-                          vocab=cfg.vocab, seed=seed)
+    data_cfg = DataConfig(
+        seq_len=seq_len, global_batch=global_batch, vocab=cfg.vocab, seed=seed
+    )
     mon = HeartbeatMonitor(["trainer"])
     losses = []
     t_last = time.time()
@@ -78,8 +101,10 @@ def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
             t_last = time.time()
             losses.append(loss)
             mon.report(Heartbeat("trainer", step, dt, time.time()))
-            print(f"[train] step {step+1:5d} loss {loss:.4f} "
-                  f"({dt:.0f} ms/step)", flush=True)
+            print(
+                f"[train] step {step + 1:5d} loss {loss:.4f} ({dt:.0f} ms/step)",
+                flush=True,
+            )
         if mgr is not None and (step + 1) % ckpt_every == 0:
             mgr.save(step + 1, {"params": params, "opt": opt_state})
     if mgr is not None:
@@ -90,8 +115,11 @@ def train(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, default="granite_3_2b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced same-family config (CPU-trainable)",
+    )
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -106,13 +134,18 @@ def main(argv=None):
     if args.smoke:
         cfg = cfg.smoke()
         cfg = dataclasses.replace(cfg, activation_dtype="float32")
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_host_mesh())
-    train(cfg, mesh, steps=args.steps, global_batch=args.batch,
-          seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-          ckpt_every=args.ckpt_every,
-          dist=DistConfig(seq_parallel=args.seq_parallel),
-          fail_at=args.fail_at)
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    train(
+        cfg,
+        mesh,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        dist=DistConfig(seq_parallel=args.seq_parallel),
+        fail_at=args.fail_at,
+    )
 
 
 if __name__ == "__main__":
