@@ -40,6 +40,8 @@ from .gate_serve import GATED_POLICY
 from .router_bench import QUICK as ROUTER_QUICK
 from .router_bench import SEED as ROUTER_SEED
 from .router_bench import run_point as router_point
+from .streaming_bench import QUICK as STREAMING_QUICK
+from .streaming_bench import run_ratio as streaming_point
 from .superstep_bench import QUICK as SUPERSTEP_QUICK
 from .superstep_bench import build_doc as superstep_doc
 from .superstep_bench import sweep as superstep_sweep
@@ -50,6 +52,9 @@ ROUTER_BASELINE = (
 )
 SUPERSTEP_BASELINE = (
     pathlib.Path(__file__).parent / "baselines" / "superstep_baseline.json"
+)
+STREAMING_BASELINE = (
+    pathlib.Path(__file__).parent / "baselines" / "streaming_baseline.json"
 )
 
 # what check_rows() in router_bench.py gates on, per swept churn
@@ -71,6 +76,20 @@ SUPERSTEP_OVERHEAD_FIELDS = (
     "unfused_us_per_kernel",
     "fused_us_per_kernel",
     "ratio",
+)
+
+# what check_rows() in streaming_bench.py gates on, per swept ratio (the sim
+# is deterministic, so the checked-in numbers ARE the gated numbers)
+STREAMING_ROW_FIELDS = (
+    "ratio",
+    "chunk_bytes",
+    "bulk_ms",
+    "streamed_ms",
+    "win",
+    "streamed",
+    "stalled_chunks",
+    "stream_busy_ms",
+    "conservation_err",
 )
 
 # the CI bench-smoke stream, verbatim (.github/workflows/ci.yml)
@@ -115,6 +134,26 @@ def refresh_router(path: pathlib.Path) -> dict:
             sizing, churns=list(ROUTER_QUICK["churns"]), seed=ROUTER_SEED,
             quick=True,
         ),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
+
+
+def refresh_streaming(path: pathlib.Path) -> dict:
+    rows = [
+        streaming_point(
+            r, STREAMING_QUICK["n_chains"], STREAMING_QUICK["length"]
+        )
+        for r in STREAMING_QUICK["ratios"]
+    ]
+    doc = {
+        "meta": {
+            "n_chains": STREAMING_QUICK["n_chains"],
+            "length": STREAMING_QUICK["length"],
+            "quick": True,
+        },
         "rows": rows,
     }
     with open(path, "w") as f:
@@ -278,6 +317,62 @@ def validate_superstep(path: pathlib.Path) -> list[str]:
     return failures
 
 
+def validate_streaming(path: pathlib.Path) -> list[str]:
+    """Streaming-baseline schema failures (empty = matches the quick sweep).
+
+    The streaming sweep is a pure discrete-event simulation with no RNG, so
+    the checked-in rows are exactly reproducible; still, the live acceptance
+    gate is ``streaming_bench --check`` and validation here is schema +
+    swept-ratio coverage, consistent with the other baselines.
+    """
+    failures: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read streaming baseline {path}: {e}"]
+
+    meta = doc.get("meta", {})
+    want_meta = {
+        "n_chains": STREAMING_QUICK["n_chains"],
+        "length": STREAMING_QUICK["length"],
+        "quick": True,
+    }
+    for key, want in want_meta.items():
+        got = meta.get(key)
+        if got != want:
+            failures.append(
+                f"streaming meta.{key} = {got!r} but the quick sweep runs "
+                f"with {want!r} (stale baseline? refresh with --refresh)"
+            )
+
+    rows = doc.get("rows", [])
+    ratios = []
+    for i, row in enumerate(rows):
+        for field in STREAMING_ROW_FIELDS:
+            if not isinstance(row.get(field), numbers.Number):
+                failures.append(
+                    f"streaming rows[{i}].{field} missing or non-numeric "
+                    f"({row.get(field)!r}) — streaming_bench.py gates on it"
+                )
+        if isinstance(row.get("streamed_ms"), numbers.Number) and isinstance(
+            row.get("bulk_ms"), numbers.Number
+        ):
+            if row["streamed_ms"] > row["bulk_ms"] + 1e-6:
+                failures.append(
+                    f"streaming rows[{i}] records a regression "
+                    f"({row['streamed_ms']:.1f} > {row['bulk_ms']:.1f} ms)"
+                )
+        if isinstance(row.get("ratio"), numbers.Number):
+            ratios.append(row["ratio"])
+    if ratios != list(STREAMING_QUICK["ratios"]):
+        failures.append(
+            f"streaming rows sweep ratios {ratios} != quick sweep "
+            f"{list(STREAMING_QUICK['ratios'])}"
+        )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--refresh", action="store_true", help="rebuild the baseline")
@@ -287,10 +382,12 @@ def main(argv=None) -> int:
     ap.add_argument("--path", type=str, default=str(BASELINE))
     ap.add_argument("--router-path", type=str, default=str(ROUTER_BASELINE))
     ap.add_argument("--superstep-path", type=str, default=str(SUPERSTEP_BASELINE))
+    ap.add_argument("--streaming-path", type=str, default=str(STREAMING_BASELINE))
     args = ap.parse_args(argv)
     path = pathlib.Path(args.path)
     router_path = pathlib.Path(args.router_path)
     superstep_path = pathlib.Path(args.superstep_path)
+    streaming_path = pathlib.Path(args.streaming_path)
     if not (args.refresh or args.validate):
         ap.error("pick --refresh and/or --validate")
 
@@ -315,12 +412,18 @@ def main(argv=None) -> int:
             f"{sdoc['overhead']['fused_us_per_kernel']:.1f} us/kernel "
             f"({sdoc['overhead']['ratio']:.1f}x)"
         )
+        tdoc = refresh_streaming(streaming_path)
+        twins = " ".join(
+            f"r{r['ratio']}={r['win']:.1%}" for r in tdoc["rows"]
+        )
+        print(f"[baseline] wrote {streaming_path}: streaming wins {twins}")
 
     if args.validate:
         failures = (
             validate(path)
             + validate_router(router_path)
             + validate_superstep(superstep_path)
+            + validate_streaming(streaming_path)
         )
         for msg in failures:
             print(f"[baseline] FAIL: {msg}")
@@ -329,7 +432,8 @@ def main(argv=None) -> int:
         print(
             f"[baseline] PASS: {path} matches gate_serve.py expectations; "
             f"{router_path} matches the router quick sweep; "
-            f"{superstep_path} matches the superstep quick sweep"
+            f"{superstep_path} matches the superstep quick sweep; "
+            f"{streaming_path} matches the streaming quick sweep"
         )
     return 0
 

@@ -1,0 +1,225 @@
+"""Streaming vs bulk-prefetch sweep: chunked channels on staged chains.
+
+The axis is the same transfer/compute ratio the overlap bench sweeps, on the
+same worst-case workload — parallel prefill/decode chains whose kernels
+alternate their cheap class, so EVERY hop crosses the inter-class link.  Bulk
+prefetch (``overlap=True``) hides a hop's transfer under the *previous*
+kernel's compute, but the copy is bookable only at the producer's finish: a
+deep chain still pays full transfer latency per hop whenever the consumer is
+the critical path.  Streaming (``streaming=True``) opens a
+:class:`~repro.core.comm.StreamChannel` per hop instead — chunks go on the
+wire *while the producer computes* and the consumer starts at the FIRST
+chunk's arrival, draining the residue under its own compute (bounded
+``stream_depth`` = backpressure).
+
+Chunk count matters: a hop only hides fully when there are enough chunks to
+amortize the exposed first-chunk time (n >= 1 + compute/transfer), so the
+bench sizes ``chunk_bytes`` for ~32 chunks per transfer at every ratio.
+
+Acceptance (``--check``):
+
+* streaming NEVER loses: at every ratio, streamed makespan <= bulk
+  overlapped makespan;
+* at transfer-heavy ratios (>= 0.5) streaming wins by at least 10%;
+* lane busy-ms conservation holds with channels active (per-lane sums equal
+  the engine's total) — chunked bookings must not leak wire time.
+
+Everything is deterministic (no RNG at all).  Usage::
+
+    PYTHONPATH=src python -m benchmarks.streaming_bench [--quick]
+        [--out BENCH_streaming.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.comm import Topology
+from repro.core.cost import Link
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import Policy
+from repro.core.simulate import Platform, Processor, Sim, simulate
+
+from .common import emit
+
+COMPUTE_MS = 4.0
+LINK_BW = 2e9  # bytes/s on the inter-class link
+N_CHUNKS = 32  # per-transfer chunk target (enough to hide every swept ratio)
+STREAM_DEPTH = 4
+WIN_RATIO = 0.5  # ratios at or above this must win >= WIN_MIN
+WIN_MIN = 0.10
+
+QUICK = {"ratios": (0.1, 0.5, 1.0), "n_chains": 6, "length": 5}
+FULL = {"ratios": (0.05, 0.1, 0.25, 0.5, 1.0, 2.0), "n_chains": 8, "length": 6}
+
+
+class PinnedPolicy(Policy):
+    """Fixed kernel -> class placement (the ablation isolates the transfer
+    mode: same placement, bulk prefetch vs chunked channels)."""
+
+    name = "pinned"
+
+    def __init__(self, assignment: dict[str, str]):
+        self.assignment = dict(assignment)
+
+    def on_ready(self, task: str, sim: Sim) -> str:
+        workers = sim.platform.workers_of(self.assignment[task])
+        w = min(workers, key=lambda p: (sim.est_proc_avail[p.name], p.name))
+        sim.est_proc_avail[w.name] = (
+            max(sim.est_proc_avail[w.name], sim.now) + sim.exec_ms(task, w.cls)
+        )
+        return w.name
+
+
+def hop_bytes(ratio: float) -> int:
+    return max(1, int(ratio * COMPUTE_MS / 1e3 * LINK_BW))
+
+
+def build_workload(n_chains: int, length: int, ratio: float):
+    """Staged prefill/decode chains, one class PAIR per chain: chain ``c``
+    ping-pongs between its own two workers (``a{c}`` <-> ``b{c}``), so every
+    hop is a cut edge ON THE CHAIN'S CRITICAL PATH — the consumer's worker is
+    idle while the transfer runs, which is exactly the regime where bulk
+    prefetch pays full per-hop latency and chunk-wise overlap does not.
+    (Shared-worker chains would hide the transfers under OTHER chains'
+    compute and measure worker saturation, not the transfer mode.)"""
+    nbytes = hop_bytes(ratio)
+    g = TaskGraph()
+    assignment: dict[str, str] = {}
+    for c in range(n_chains):
+        cls_a, cls_b = f"a{c}", f"b{c}"
+        prev = None
+        for i in range(length):
+            name = f"c{c}.k{i}"
+            cheap, dear = (cls_a, cls_b) if i % 2 == 0 else (cls_b, cls_a)
+            g.add(
+                name,
+                op="prefill" if i == 0 else "decode",
+                costs={cheap: COMPUTE_MS, dear: 10 * COMPUTE_MS},
+                out_bytes=nbytes,
+            )
+            assignment[name] = cheap
+            if prev is not None:
+                g.add_edge(prev, name, nbytes=nbytes)
+            prev = name
+    g.validate()
+    return g, assignment
+
+
+def make_platform(n_chains: int, lanes: int = 2) -> Platform:
+    link = Link("xclass", bw=LINK_BW, latency_ms=0.01)
+    procs = []
+    for c in range(n_chains):
+        procs.append(Processor(f"a{c}0", f"a{c}", 2 * c))
+        procs.append(Processor(f"b{c}0", f"b{c}", 2 * c + 1))
+    return Platform(
+        procs,
+        link=link,
+        host_node=0,
+        topology=Topology.dedicated(link, lanes=lanes),
+    )
+
+
+def run_ratio(ratio: float, n_chains: int, length: int) -> dict:
+    g, assignment = build_workload(n_chains, length, ratio)
+    plat = make_platform(n_chains)
+    chunk_bytes = max(1, -(-hop_bytes(ratio) // N_CHUNKS))
+    bulk = simulate(g, PinnedPolicy(assignment), plat, overlap=True)
+    streamed = simulate(
+        g,
+        PinnedPolicy(assignment),
+        plat,
+        streaming=True,
+        chunk_bytes=chunk_bytes,
+        stream_depth=STREAM_DEPTH,
+    )
+    lane_sum = sum(streamed.lane_busy_ms.values())
+    win = 1.0 - streamed.makespan_ms / bulk.makespan_ms
+    return {
+        "ratio": ratio,
+        "chunk_bytes": chunk_bytes,
+        "bulk_ms": bulk.makespan_ms,
+        "streamed_ms": streamed.makespan_ms,
+        "win": win,
+        "streamed": streamed.n_streamed,
+        "stalled_chunks": streamed.n_stalled_chunks,
+        "stream_busy_ms": streamed.stream_busy_ms,
+        "conservation_err": abs(lane_sum - streamed.transfer_busy_ms),
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        r, win = row["ratio"], row["win"]
+        if row["streamed_ms"] > row["bulk_ms"] + 1e-6:
+            failures.append(
+                f"ratio {r}: streaming REGRESSED "
+                f"({row['streamed_ms']:.1f} > {row['bulk_ms']:.1f} ms)"
+            )
+        if r >= WIN_RATIO - 1e-9 and win < WIN_MIN:
+            failures.append(
+                f"ratio {r}: streaming won only {win:.1%} (need >= {WIN_MIN:.0%})"
+            )
+        if row["conservation_err"] > 1e-6:
+            failures.append(
+                f"ratio {r}: lane conservation broke "
+                f"(err {row['conservation_err']:.2e} ms)"
+            )
+        if row["streamed"] <= 0:
+            failures.append(f"ratio {r}: no channels opened")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true", help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    cfg = QUICK if args.quick else FULL
+    n_chains, length = cfg["n_chains"], cfg["length"]
+
+    rows = [run_ratio(r, n_chains, length) for r in cfg["ratios"]]
+    print(f"{'ratio':>6}  {'bulk_ms':>10}  {'stream_ms':>10}  {'win':>6}  {'stalled':>7}")
+    for row in rows:
+        print(
+            f"{row['ratio']:>6.2f}  {row['bulk_ms']:>10.1f}  "
+            f"{row['streamed_ms']:>10.1f}  {row['win']:>6.1%}  "
+            f"{row['stalled_chunks']:>7}"
+        )
+        emit(
+            f"streaming.r{row['ratio']}.win",
+            f"{row['win']:.3f}",
+            f"bulk_ms={row['bulk_ms']:.1f};"
+            f"stream_ms={row['streamed_ms']:.1f};"
+            f"stalled={row['stalled_chunks']}",
+        )
+
+    if args.out:
+        doc = {
+            "meta": {"n_chains": n_chains, "length": length, "quick": args.quick},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[streaming] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[streaming] FAIL: {msg}")
+        if failures:
+            return 1
+        print(
+            "[streaming] PASS: streaming never loses; "
+            f">= {WIN_MIN:.0%} win at transfer-heavy ratios; conservation holds"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,20 @@ worker is still busy with the previous kernel, so the cut edges the
 graph-partition policy minimizes are exactly the transfers that can hide
 under compute.
 
+Bulk fetches move a block in ONE booking, so a deep chain of cut edges pays
+full transfer latency on every hop even with prefetch.  A
+:class:`StreamChannel` (:meth:`CommEngine.open_stream`) instead splits the
+copy into ``chunk_bytes`` chunks that overlap chunk-wise with the producer's
+compute (chunks become available as the producer runs, not only at its
+finish) and with the consumer's start (the consumer may begin once chunk 0
+lands, charging residual arrivals against its own compute).  Channel depth
+bounds the in-flight window: with ``depth`` chunks outstanding the producer
+stalls (``n_stalled_chunks``) until the consumer drains one — classic
+pipeline backpressure.  Chunks book per-tier lane segments exactly like bulk
+fetches (same contention, same conservation invariants) and their durations
+are a proportional split of the bulk booking's bottleneck duration, so a
+channel never holds the wire longer than the bulk copy it replaces.
+
 Real serving fleets are not flat either: nodes sit in racks, racks in pods,
 and cross-rack / cross-pod traffic funnels through *shared* uplinks where
 contention — not point-to-point bandwidth — decides what a cut costs.
@@ -332,6 +346,102 @@ class HierTopology(Topology):
         return max(link.transfer_ms(nbytes) for _, link, _ in self.route(src, dst))
 
 
+class StreamChannel:
+    """One chunked ``src`` -> ``dst`` transfer pipelined against its producer
+    and consumer.
+
+    Two-phase protocol (the consumer's start and compute time are only known
+    when it is dispatched):
+
+    1. :meth:`CommEngine.open_stream` picks ONE lane per crossed tier (the
+       channel is a single connection: its chunks serialize on those lanes,
+       other traffic interleaves normally) and books chunk 0.  Chunk ``i``
+       becomes available at the producer pro-rata: a producer computing over
+       ``[src_start, src_ready]`` emits chunk ``i`` at
+       ``src_start + (i+1)/n * (src_ready - src_start)`` — so chunk 0 may be
+       on the wire long before the producer finishes, which is exactly the
+       overlap a bulk fetch (bookable only after ``src_ready``) can never
+       get.  ``first_ready`` is chunk 0's arrival: the earliest the consumer
+       may start.
+    2. :meth:`drain` books chunks ``1..n-1`` against the consumer's compute
+       window.  The consumer drains uniformly (one chunk per
+       ``compute_ms / n``); with ``depth`` chunks in flight or undrained the
+       next chunk stalls until the consumer frees a slot
+       (``n_stalled_chunks``).  Returns ``(finish, arrival_last)``: when the
+       consumer completes (all chunks arrived AND consumed) and when the
+       last chunk landed (the block is valid at ``dst`` from then on).
+
+    Chunk durations are a proportional split of the bulk booking's
+    bottleneck duration (latency amortized pro-rata), so the channel's total
+    wire time equals the bulk fetch's exactly — streaming can move a kernel's
+    start earlier, never hold a lane longer.
+    """
+
+    def __init__(
+        self,
+        engine: "CommEngine",
+        block: str,
+        src: int,
+        dst: int,
+        nbytes: int,
+        *,
+        depth: int,
+        sizes: list[int],
+        durs: list[float],
+        readies: list[float],
+        picks: list,
+        bottleneck: int,
+        requested: float,
+    ):
+        self.engine = engine
+        self.block = block
+        self.src = src
+        self.dst = dst
+        self.nbytes = nbytes
+        self.depth = depth  # 0 = unbounded
+        self.sizes = sizes
+        self.durs = durs
+        self.readies = readies
+        self.picks = picks
+        self.bottleneck = bottleneck
+        self.requested = requested
+        self.n_chunks = len(sizes)
+        self.n_stalled = 0
+        self.stall_ms = 0.0
+        # phase 1: chunk 0 goes on the wire at open
+        self.first_ready = engine._book_chunk(self, 0, self.readies[0])
+        self.finish: float | None = None
+        self.arrival_last: float | None = None
+
+    def drain(self, consume_start: float, compute_ms: float) -> tuple[float, float]:
+        """Book chunks ``1..n-1`` against the consumer computing over
+        ``[consume_start, consume_start + compute_ms]``; returns
+        ``(finish, arrival_last)`` (see class docstring)."""
+        n = self.n_chunks
+        per_chunk = compute_ms / n
+        consumed = [0.0] * n
+        consumed[0] = max(consume_start, self.first_ready) + per_chunk
+        arrival = self.first_ready
+        for i in range(1, n):
+            floor = max(
+                self.readies[i],
+                max(frees[lane_i] for _, frees, lane_i in self.picks),
+            )
+            if self.depth and i >= self.depth:
+                gate = consumed[i - self.depth]  # backpressure: window full
+                if gate > floor + 1e-9:
+                    self.n_stalled += 1
+                    self.stall_ms += gate - floor
+                    self.engine.n_stalled_chunks += 1
+                    self.engine.stall_ms += gate - floor
+                    floor = gate
+            arrival = self.engine._book_chunk(self, i, floor)
+            consumed[i] = max(consumed[i - 1], arrival) + per_chunk
+        self.finish = max(consumed[n - 1], consume_start + compute_ms)
+        self.arrival_last = arrival
+        return self.finish, self.arrival_last
+
+
 class CommEngine:
     """Event-driven transfer scheduler over a :class:`Topology`'s lanes.
 
@@ -352,7 +462,17 @@ class CommEngine:
     block at full priority.  Demand fetches and spills always book.
     """
 
-    def __init__(self, topo: Topology, *, throttle: bool | None = None):
+    def __init__(
+        self,
+        topo: Topology,
+        *,
+        throttle: bool | None = None,
+        adaptive_depth: bool = False,
+        base_depth: int = 1,
+        min_depth: int = 1,
+        max_depth: int = 4,
+        idle_window_ms: float = 5.0,
+    ):
         self.topo = topo
         self.throttle = topo.hierarchical if throttle is None else throttle
         self._lane_free: dict[str, list[float]] = {}
@@ -368,6 +488,22 @@ class CommEngine:
         self.n_preempted = 0
         self.kind_counts: dict[str, int] = {}
         self.kind_bytes: dict[str, int] = {}
+        # streaming channels (open_stream)
+        self.n_streamed = 0
+        self.n_stalled_chunks = 0
+        self.stall_ms = 0.0
+        self.stream_busy_ms = 0.0
+        # adaptive per-tier prefetch depth: tiers idle >= idle_window_ms earn
+        # a deeper speculative window (up to max_depth), tiers that throttle
+        # a prefetch fall back toward min_depth
+        self.adaptive_depth = adaptive_depth
+        self.base_depth = max(1, base_depth)
+        self.min_depth = max(1, min_depth)
+        self.max_depth = max(self.min_depth, max_depth)
+        self.idle_window_ms = idle_window_ms
+        self.n_depth_adjust = 0
+        self._tier_depth: dict[str, int] = {}
+        self._tier_raised_at: dict[str, float] = {}
 
     @property
     def n_throttled(self) -> int:
@@ -417,6 +553,16 @@ class CommEngine:
         start = max([want] + [frees[i] for _, frees, i in picks])
         if kind == "prefetch" and self.throttle and start > want + 1e-9:
             self._throttled.add((block, dst))
+            if self.adaptive_depth:
+                # contention observed: shrink the speculative window of every
+                # tier whose lanes actually blocked the prefetch
+                for (key, _link, _lanes), (_k, frees, lane_i) in zip(segs, picks):
+                    if frees[lane_i] <= want + 1e-9:
+                        continue
+                    d = self._tier_depth.get(key, self.base_depth)
+                    if d > self.min_depth:
+                        self._tier_depth[key] = d - 1
+                        self.n_depth_adjust += 1
             return None
         dur = max(link.transfer_ms(nbytes) for _, link, _ in segs)
         finish = start + dur
@@ -449,6 +595,139 @@ class CommEngine:
         self.kind_counts[kind] = self.kind_counts.get(kind, 0) + 1
         self.kind_bytes[kind] = self.kind_bytes.get(kind, 0) + nbytes
         return finish
+
+    def open_stream(
+        self,
+        block: str,
+        src: int,
+        dst: int,
+        nbytes: int,
+        *,
+        now: float,
+        src_start: float | None = None,
+        src_ready: float = 0.0,
+        chunk_bytes: int,
+        depth: int = 2,
+    ) -> StreamChannel | None:
+        """Open a chunked channel for ``block`` (see :class:`StreamChannel`).
+
+        Picks one lane per crossed tier (earliest-free, same rule as
+        :meth:`fetch`) and books chunk 0; the consumer may start at the
+        returned channel's ``first_ready`` and must :meth:`~StreamChannel.drain`
+        it once its compute window is known.  ``src_start``/``src_ready``
+        bound the producer's compute: chunks become available pro-rata over
+        that window (``src_start=None`` = the block already exists in full at
+        ``src_ready``).  ``depth=0`` is an unbounded channel (no
+        backpressure).  Same-node streams need no wire: returns ``None``.
+
+        Channels count ONCE in ``n_transfers``/``bytes_transferred`` (they
+        replace one bulk fetch) but log every chunk as a ``kind="stream"``
+        :class:`Transfer`, so per-lane busy accounting — and the conservation
+        invariant — see the real chunk intervals."""
+        if src == dst:
+            return None
+        if chunk_bytes < 1:
+            raise ValueError("chunk_bytes must be positive")
+        segs = self.topo.route(src, dst)
+        direction = ">" if src <= dst else "<"
+        picks: list[tuple[str, list[float], int]] = []
+        for key, link, lanes in segs:
+            if link.duplex:
+                key = f"{key}{direction}"
+            frees = self._lane_free.setdefault(key, [0.0] * lanes)
+            lane_i = min(range(lanes), key=lambda i: (frees[i], i))
+            picks.append((key, frees, lane_i))
+        n = max(1, -(-nbytes // chunk_bytes))
+        sizes = [chunk_bytes] * (n - 1) + [nbytes - chunk_bytes * (n - 1)]
+        # proportional split of the bulk bottleneck duration: total wire time
+        # is EXACTLY what one bulk fetch would book
+        full_dur = max(link.transfer_ms(nbytes) for _, link, _ in segs)
+        durs = [full_dur * s / nbytes for s in sizes]
+        if src_start is None or src_ready <= src_start:
+            readies = [src_ready] * n
+        else:
+            span = src_ready - src_start
+            readies = [src_start + (i + 1) / n * span for i in range(n)]
+        bottleneck = max(
+            range(len(segs)), key=lambda i: segs[i][1].transfer_ms(nbytes)
+        )
+        ch = StreamChannel(
+            self,
+            block,
+            src,
+            dst,
+            nbytes,
+            depth=max(0, depth),
+            sizes=sizes,
+            durs=durs,
+            readies=readies,
+            picks=picks,
+            bottleneck=bottleneck,
+            requested=max(now, src_ready),
+        )
+        self.n_transfers += 1
+        self.n_streamed += 1
+        self.bytes_transferred += nbytes
+        self.kind_counts["stream"] = self.kind_counts.get("stream", 0) + 1
+        self.kind_bytes["stream"] = self.kind_bytes.get("stream", 0) + nbytes
+        return ch
+
+    def _book_chunk(self, ch: StreamChannel, i: int, floor: float) -> float:
+        """Book channel chunk ``i`` no earlier than ``floor`` on the
+        channel's picked lanes; returns its arrival time."""
+        start = max(floor, max(frees[lane_i] for _, frees, lane_i in ch.picks))
+        finish = start + ch.durs[i]
+        lanes_used = []
+        for key, frees, lane_i in ch.picks:
+            frees[lane_i] = finish
+            lanes_used.append(f"{key}[{lane_i}]")
+        self.transfers.append(
+            Transfer(
+                ch.block,
+                ch.src,
+                ch.dst,
+                ch.sizes[i],
+                start,
+                finish,
+                lanes_used[ch.bottleneck],
+                "stream",
+                lanes=tuple(lanes_used),
+                requested=ch.requested,
+            )
+        )
+        self.busy_ms += ch.durs[i] * len(ch.picks)
+        self.stream_busy_ms += ch.durs[i] * len(ch.picks)
+        return finish
+
+    def prefetch_depth_for(self, src: int, dst: int, now: float) -> int:
+        """How many ready-queue entries ahead a prefetch toward ``dst`` may
+        look (min over the route's per-tier depths).  With
+        ``adaptive_depth``, querying is also when tiers adapt UP: a tier
+        whose lanes have all been idle for ``idle_window_ms`` earns one more
+        depth step (to ``max_depth``); throttled prefetches shrink it again
+        (see :meth:`fetch`).  Without ``adaptive_depth``: ``base_depth``."""
+        if not self.adaptive_depth:
+            return self.base_depth
+        depth = self.max_depth
+        for key, _link, _lanes in self.topo.route(src, dst):
+            d = self._tier_depth.get(key, self.base_depth)
+            idle_since = max(self._tier_tail(key), self._tier_raised_at.get(key, 0.0))
+            if d < self.max_depth and now - idle_since >= self.idle_window_ms:
+                d += 1
+                self._tier_depth[key] = d
+                self._tier_raised_at[key] = now
+                self.n_depth_adjust += 1
+            depth = min(depth, d)
+        return depth
+
+    def _tier_tail(self, key: str) -> float:
+        """Latest booked lane time on a tier's lane groups (both directions
+        of a duplex link)."""
+        tail = 0.0
+        for k, frees in self._lane_free.items():
+            if k == key or (k[:-1] == key and k[-1] in "<>"):
+                tail = max(tail, max(frees))
+        return tail
 
     def preempt_dst(self, dst: int, now: float) -> list[Transfer]:
         """Cancel every copy still in flight (or queued) toward memory node
@@ -575,6 +854,7 @@ def link_scale_for(
 __all__ = [
     "CommEngine",
     "HierTopology",
+    "StreamChannel",
     "Topology",
     "Transfer",
     "class_nodes_of",

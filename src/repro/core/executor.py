@@ -60,6 +60,16 @@ bit-identical — it is the fallback when exact per-kernel event interleaving
 matters (platform churn lands *between* kernels, not between group-steps)
 and the A/B baseline for the parity suite.
 
+**Streaming pulls** (``streaming=True``, comm attached): demand pulls open
+:class:`~repro.core.comm.StreamChannel` s instead of bulk fetches — the
+consumer's virtual start gates on the FIRST chunk's arrival and the residual
+chunks drain against its compute window (bounded ``stream_depth`` in-flight
+chunks = backpressure), while the real ``device_put`` happens chunk-wise too:
+the donor's leading axis is split and copied as depth-bounded async
+dispatches that reassemble bit-identically on the destination.  Bulk
+speculative prefetch is disabled under streaming (channels already overlap
+chunk-wise); ``streaming=False`` keeps the bulk path bit-identical.
+
 On this 1-CPU container all groups alias one device (transfers are
 no-op-counted but still exercised; buffer donation is a no-op XLA ignores);
 on a real slice, groups are disjoint device sets.
@@ -99,6 +109,10 @@ class ExecResult:
     fused_steps: int = 0  # compiled group-steps dispatched (fused=True)
     cache_hits: int = 0  # super-step cache hits (this session)
     cache_misses: int = 0  # super-step compilations (this session)
+    n_streamed: int = 0  # demand pulls executed as chunked channels
+    n_stalled_chunks: int = 0  # chunks delayed by channel backpressure
+    stream_busy_ms: float = 0.0  # lane time booked by channel chunks
+    n_depth_adjust: int = 0  # adaptive prefetch-depth raises/lowers
 
 
 @dataclasses.dataclass
@@ -203,6 +217,9 @@ class ExecSession:
         fused: bool = False,
         cache: SuperStepCache | None = None,
         revision: int = 0,
+        streaming: bool = False,
+        chunk_bytes: int = 1 << 18,
+        stream_depth: int = 2,
     ):
         g.validate()
         self.ex = executor
@@ -229,6 +246,15 @@ class ExecSession:
         if comm is not None and not self.group_nodes:
             raise ValueError("a comm model needs group_nodes (group -> node)")
         self.prefetch_depth = prefetch_depth if comm is not None else 0
+        # streaming: demand pulls open chunked channels instead of bulk
+        # fetches — the consumer's virtual start gates on the FIRST chunk and
+        # residual arrivals drain against its compute (see comm.StreamChannel);
+        # the real device_put happens chunk-wise too, depth-bounded
+        self.streaming = streaming and comm is not None
+        self.chunk_bytes = chunk_bytes
+        self.stream_depth = stream_depth
+        self._pending_channels: list[tuple[str, str, object]] = []
+        self._block_window: dict[str, tuple[float, float]] = {}
         self._inputs = dict(inputs or {})
         self.valid: dict[str, dict[str, jax.Array]] = {}  # block -> group -> arr
         # virtual timeline (comm model): when a block's copy lands per group,
@@ -343,6 +369,12 @@ class ExecSession:
         for block, grp in list(self.prefetched):
             if grp == group:
                 self.prefetched.discard((block, grp))
+        if self._pending_channels:
+            # undrained channels toward the dead group die with it (their
+            # booked chunk-0 segments are released by preempt_dst above)
+            self._pending_channels = [
+                c for c in self._pending_channels if c[1] != group
+            ]
         lost: list[str] = []
         for block, ent in list(self.valid.items()):
             if ent.pop(group, None) is not None and not ent:
@@ -392,6 +424,33 @@ class ExecSession:
             donor_grp = next(iter(ent))
         donor = ent[donor_grp]
         nb = nbytes or donor.size * donor.dtype.itemsize
+        if self.streaming and kind == "demand":
+            win = self._block_window.get(key)
+            src_ready = self.vt_block.get((key, donor_grp), 0.0)
+            # pro-rata chunk readiness only when the donor copy IS the
+            # producer's own output (its compute window ends at src_ready)
+            src_start = (
+                win[0] if win is not None and abs(win[1] - src_ready) <= 1e-9 else None
+            )
+            ch = self.comm.open_stream(
+                key,
+                self._node_of(donor_grp),
+                self._node_of(grp),
+                nb,
+                now=self.vnow,
+                src_start=src_start,
+                src_ready=src_ready,
+                chunk_bytes=self.chunk_bytes,
+                depth=self.stream_depth,
+            )
+            if ch is not None:
+                # provisional: chunk-0 arrival gates the consumer's start;
+                # drain() (post-dispatch) rewrites it to the last arrival
+                self.vt_block[(key, grp)] = ch.first_ready
+                self._pending_channels.append((key, grp, ch))
+                ent[grp] = self._stream_put(donor, dev, ch.n_chunks)
+                return nb
+            # same node: no wire — fall through to the free bulk path
         if self.comm is not None:
             te = self.comm.fetch(
                 key,
@@ -409,6 +468,37 @@ class ExecSession:
                 self.prefetched.add((key, grp))
         ent[grp] = jax.device_put(donor, dev)
         return nb
+
+    def _stream_put(self, donor, dev, n_chunks: int):
+        """Chunk-wise ``device_put``: the donor's leading axis is split into
+        up to ``n_chunks`` slices copied as separate async dispatches, with at
+        most ``stream_depth`` copies in flight (the real-transfer analogue of
+        the channel's bounded depth); the slices reassemble bit-identically on
+        the destination device."""
+        if n_chunks <= 1 or donor.ndim == 0 or donor.shape[0] < 2:
+            return jax.device_put(donor, dev)
+        rows = donor.shape[0]
+        step = -(-rows // min(n_chunks, rows))
+        parts = []
+        for i in range(0, rows, step):
+            parts.append(jax.device_put(donor[i : i + step], dev))
+            if self.stream_depth and len(parts) > self.stream_depth:
+                parts[-self.stream_depth - 1].block_until_ready()
+        import jax.numpy as jnp
+
+        with jax.default_device(dev):
+            return jnp.concatenate(parts, axis=0)
+
+    def _drain_channels(self, vstart: float, ms: float, vfinish: float) -> float:
+        """Drain every channel opened for the kernel just dispatched against
+        its compute window; returns the extended virtual finish (a consumer
+        cannot retire before its last chunk arrives AND is consumed)."""
+        for key, grp, ch in self._pending_channels:
+            ch_finish, arrival_last = ch.drain(vstart, ms)
+            vfinish = max(vfinish, ch_finish)
+            self.vt_block[(key, grp)] = arrival_last
+        self._pending_channels.clear()
+        return vfinish
 
     def _gather(self, name: str, grp: str, dev) -> tuple[list, int, int, float]:
         """Pull input blocks for ``name`` onto ``grp``.
@@ -435,6 +525,8 @@ class ExecSession:
         comm lanes under the next kernels' compute."""
         if self.comm is None or self.prefetch_depth <= 0:
             return
+        if self.streaming:
+            return  # channels already overlap chunk-wise; no bulk speculation
         for n in self._ready_next(self.prefetch_depth):
             grp = self.assignment.get(n, self.host_group)
             dev = self.ex.groups[grp]
@@ -585,10 +677,13 @@ class ExecSession:
         keep: list[int] = []
         out_slot: dict[str, int] = {}
         total_nt = total_nb = 0
+        member_chans: list[list] = []  # channels attributed to each member
+        pend = self._pending_channels
         for i, n in enumerate(members):
             srcs: list[tuple[str, int]] = []
             rv = 0.0
             nt = nb = 0
+            nch0 = len(pend)
             for item in entries[i]:
                 if type(item) is int:
                     srcs.append(("mem", item))
@@ -620,6 +715,8 @@ class ExecSession:
             if not succs or any(s not in done and s not in member_set for s in succs):
                 out_slot[n] = len(keep)
                 keep.append(i)
+            member_chans.append(pend[nch0:])
+        pend.clear()
         self.n_transfers += total_nt
         self.nbytes += total_nb
 
@@ -706,9 +803,14 @@ class ExecSession:
                     self.earliest.get(n, 0.0),
                 )
                 vfinish = vstart + kms
+                for key, cgrp, ch in member_chans[i]:
+                    ch_finish, arrival_last = ch.drain(vstart, kms)
+                    vfinish = max(vfinish, ch_finish)
+                    vt_block[(key, cgrp)] = arrival_last
                 self.group_free[grp] = vfinish
                 self.vnow = vfinish
                 self.vmax = max(self.vmax, vfinish)
+                self._block_window[n] = (vstart, vfinish)
             slot = out_slot.get(n)
             if slot is not None:
                 out = outs[slot]
@@ -769,10 +871,13 @@ class ExecSession:
                 self.group_free.get(grp, 0.0), ready_vt, self.earliest.get(name, 0.0)
             )
             vfinish = vstart + ms
+            if self._pending_channels:
+                vfinish = self._drain_channels(vstart, ms, vfinish)
             self.group_free[grp] = vfinish
             self.vnow = vfinish
             self.vmax = max(self.vmax, vfinish)
             self.vt_block[(name, grp)] = vfinish
+            self._block_window[name] = (vstart, vfinish)
         self.valid[name] = {grp: out}
         self.blocks[name] = out
         self.per_group[grp] = self.per_group.get(grp, 0) + 1
@@ -814,6 +919,10 @@ class ExecSession:
             fused_steps=self.fused_steps,
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
+            n_streamed=self.comm.n_streamed if self.comm else 0,
+            n_stalled_chunks=self.comm.n_stalled_chunks if self.comm else 0,
+            stream_busy_ms=self.comm.stream_busy_ms if self.comm else 0.0,
+            n_depth_adjust=self.comm.n_depth_adjust if self.comm else 0,
         )
 
 
@@ -847,6 +956,9 @@ class JaxExecutor:
         fused: bool = False,
         cache: SuperStepCache | None = None,
         revision: int = 0,
+        streaming: bool = False,
+        chunk_bytes: int = 1 << 18,
+        stream_depth: int = 2,
     ) -> ExecSession:
         return ExecSession(
             self,
@@ -862,6 +974,9 @@ class JaxExecutor:
             fused=fused,
             cache=cache,
             revision=revision,
+            streaming=streaming,
+            chunk_bytes=chunk_bytes,
+            stream_depth=stream_depth,
         )
 
     def run(

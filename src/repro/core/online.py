@@ -45,7 +45,7 @@ from .graph import Kernel, TaskGraph
 from .partition import (UGraph, _fm_refine, _repair_capacity, node_weight,
                         partition_indices, weight_graph_of)
 from .schedulers import GpPolicy
-from .simulate import Platform, Processor, Sim
+from .simulate import DEFAULT_CHUNK_BYTES, Platform, Processor, Sim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +106,8 @@ class OnlinePartitioner:
                  capacities: Mapping[str, float] | None = None,
                  topology: Topology | None = None,
                  class_nodes: Mapping[str, int] | None = None,
-                 reload_copies: bool = False):
+                 reload_copies: bool = False,
+                 objective: str = "cut"):
         self.targets = _normalize(targets)
         self.epsilon = epsilon
         self.seed = seed
@@ -120,6 +121,10 @@ class OnlinePartitioner:
         self.topology = topology
         self.class_nodes = dict(class_nodes or {})
         self.reload_copies = reload_copies
+        # "interval" = stage-balance refinement for streaming execution (the
+        # slowest pipeline stage, compute + non-overlapped cut cost, is what
+        # FM shaves); "cut" = classic total-cut objective
+        self.objective = objective
         self.g = TaskGraph()
         self.assignment: dict[str, str] = {}
         self.history: list[RefineRecord] = []
@@ -513,7 +518,8 @@ class OnlinePartitioner:
             part = _repair_capacity(ug, part, caps, locked=mask)
         part = _fm_refine(ug, part, [self.targets.get(c, 0.0) for c in classes],
                           self.epsilon, max_passes=2, locked=mask,
-                          mem_caps=caps, link_scale=self._link_scale(classes))
+                          mem_caps=caps, link_scale=self._link_scale(classes),
+                          objective=self.objective)
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         self.assignment.update(self.pin)
         self._recount_mem()
@@ -533,7 +539,8 @@ class OnlinePartitioner:
         scale = self._link_scale(classes)
         part = partition_indices(ug, [self.targets[c] for c in classes],
                                  epsilon=self.epsilon, seed=self.seed,
-                                 capacities=caps, link_scale=scale)
+                                 capacities=caps, link_scale=scale,
+                                 objective=self.objective)
         self.assignment = {n: classes[part[i]] for i, n in enumerate(names)}
         if self.pin:
             self.assignment.update(self.pin)
@@ -542,7 +549,8 @@ class OnlinePartitioner:
             mask = [n in self.pin for n in names]
             fixed = _fm_refine(ug, fixed, [self.targets[c] for c in classes],
                                self.epsilon, max_passes=2, locked=mask,
-                               mem_caps=caps, link_scale=scale)
+                               mem_caps=caps, link_scale=scale,
+                               objective=self.objective)
             self.assignment = {n: classes[fixed[i]] for i, n in enumerate(names)}
             self.assignment.update(self.pin)
         self._recount_mem()
@@ -580,12 +588,20 @@ class IncrementalGpPolicy(GpPolicy):
                  cut_trigger: float = 1.5, min_overlap: float = 0.5,
                  decision_ms: float = 0.0,
                  capacities: Mapping[str, float] | None = None,
-                 mem_aware: bool = True, reload_aware: bool = True):
+                 mem_aware: bool = True, reload_aware: bool = True,
+                 streaming: bool = False,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
         super().__init__(weight_source=weight_source, epsilon=epsilon,
                          seed=seed, targets=targets,
                          scale_by_workers=scale_by_workers,
                          capacities=capacities, mem_aware=mem_aware)
         self.reload_aware = reload_aware
+        # streaming execution: price a cut edge at the NON-OVERLAPPED chunk
+        # cost (residual chunks hide under the consumer's compute; only the
+        # first chunk's transfer is exposed) and refine for the pipeline
+        # interval instead of total cut
+        self.streaming = streaming
+        self.chunk_bytes = chunk_bytes
         self.decision_ms = decision_ms
         self.imbalance_trigger = imbalance_trigger
         self.cut_trigger = cut_trigger
@@ -721,15 +737,25 @@ class IncrementalGpPolicy(GpPolicy):
         if p is not None and g.num_nodes():
             overlap = len(p.g.nodes.keys() & g.nodes.keys()) / g.num_nodes()
         caps = self.capacities_for(platform)
+        if self.streaming:
+            # only the first chunk's wire time is exposed on a streamed edge;
+            # residual chunks hide under the consumer's compute
+            cb = self.chunk_bytes
+            edge_ms = lambda nb: topo.worst_ms(min(nb, cb))  # noqa: E731
+            objective = "interval"
+        else:
+            edge_ms = lambda nb: topo.worst_ms(nb)  # noqa: E731
+            objective = "cut"
         if p is None or overlap < self.min_overlap:
             p = OnlinePartitioner(
                 targets, epsilon=self.epsilon, seed=self.seed,
                 weight_source=self.weight_source,
-                edge_ms=lambda nb: topo.worst_ms(nb),
+                edge_ms=edge_ms,
                 imbalance_trigger=self.imbalance_trigger,
                 cut_trigger=self.cut_trigger, pin=pin,
                 capacities=caps, topology=topo, class_nodes=class_nodes,
-                reload_copies=self.reload_aware and bool(caps))
+                reload_copies=self.reload_aware and bool(caps),
+                objective=objective)
             p.reset(g)
             self.partitioner = p
             self.stats["prepare_full"] += 1
@@ -740,6 +766,8 @@ class IncrementalGpPolicy(GpPolicy):
             p.topology = topo
             p.class_nodes = dict(class_nodes)
             p.reload_copies = self.reload_aware and bool(caps)
+            p.edge_ms = edge_ms
+            p.objective = objective
             p.ingest(g, targets=targets)
             self.stats["prepare_warm"] += 1
             self.stats["carried"] += carried

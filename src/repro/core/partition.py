@@ -293,6 +293,7 @@ def _fm_refine(
     locked: Sequence[bool] | None = None,
     mem_caps: Sequence[float] | None = None,
     link_scale: Sequence[Sequence[float]] | None = None,
+    objective: str = "cut",
 ) -> list[int]:
     """Boundary FM with best-prefix rollback, k-way (single-move granularity).
 
@@ -315,6 +316,16 @@ def _fm_refine(
     ``locked[u]`` pins node u to its current partition (online refinement:
     already-executed or pinned tasks still contribute weight and edge gain but
     may not move).
+
+    ``objective="interval"`` switches the gain from total cut cost to the
+    *pipeline interval*: each part's load is its compute weight PLUS every
+    incident cut edge's (link-scaled) weight — the time a pipeline stage
+    needs per wave when cut traffic does NOT fully hide under its compute —
+    and a move's gain is the reduction of the max over parts.  That is the
+    stage-balance objective streaming execution wants: the slowest stage
+    bounds throughput, so FM should shave the bottleneck stage rather than
+    shave total cut bytes.  ``"cut"`` (default) is the classic objective,
+    bit-identical to the historical behaviour.
     """
     k = len(targets)
     total = g.total_w()
@@ -349,6 +360,54 @@ def _fm_refine(
                 new += w * link_scale[to][r]
         return old - new
 
+    interval = objective == "interval"
+
+    def scale(p: int, q: int) -> float:
+        return 1.0 if link_scale is None else link_scale[p][q]
+
+    def interval_loads() -> list[float]:
+        """Per-part pipeline interval: compute weight + incident cut cost
+        (each cut edge charges BOTH endpoints' stages — both sides hold the
+        wire for it)."""
+        loads = list(pw)
+        for u in range(g.n):
+            pu = part[u]
+            for v, w in g.adj[u].items():
+                pv = part[v]
+                if pv != pu:
+                    loads[pu] += w * scale(pu, pv)
+        return loads
+
+    iload = interval_loads() if interval else None
+
+    def interval_gain(
+        u: int, ext: dict[int, float], internal: float, pu: int, to: int
+    ) -> tuple[float, dict[int, float]]:
+        """(bottleneck reduction, changed per-part loads) for moving ``u``.
+        O(k + deg): only pu, to, and u's external neighbor parts change."""
+        xcut = internal * scale(to, pu)  # u's old internal edges, now cut
+        new = {
+            pu: iload[pu]
+            - g.nw[u]
+            - sum(w * scale(pu, r) for r, w in ext.items())
+            + xcut
+        }
+        reroute = 0.0  # u's edges to third parts now charge `to`, not pu
+        for r, w in ext.items():
+            if r != to:
+                new[r] = iload[r] + w * (scale(to, r) - scale(pu, r))
+                reroute += w * scale(to, r)
+        new[to] = (
+            iload[to]
+            + g.nw[u]
+            - ext.get(to, 0.0) * scale(pu, to)
+            + xcut
+            + reroute
+        )
+        before = max(iload)
+        after = max(new.get(p, iload[p]) for p in range(k))
+        return before - after, new
+
     for _ in range(max_passes):
         moved = list(locked) if locked is not None else [False] * g.n
         moves: list[tuple[int, int, int]] = []  # (node, from, to)
@@ -373,7 +432,10 @@ def _fm_refine(
                     # don't empty a partition that has a nonzero target
                     if targets[pu] > 0 and pw[pu] - g.nw[u] < 0:
                         continue
-                    gain = move_gain(ext, internal, pu, to)
+                    if interval:
+                        gain, _ = interval_gain(u, ext, internal, pu, to)
+                    else:
+                        gain = move_gain(ext, internal, pu, to)
                     # tie-break toward balance deficit
                     deficit = targets[to] * total - pw[to]
                     cand = (gain, deficit, -u)
@@ -383,6 +445,11 @@ def _fm_refine(
                 break
             (gain, _, _), u, to = best
             frm = part[u]
+            if interval:  # apply the changed stage loads before part mutates
+                ext, internal = ext_int(u)
+                _, changed = interval_gain(u, ext, internal, frm, to)
+                for p, val in changed.items():
+                    iload[p] = val
             part[u] = to
             pw[frm] -= g.nw[u]
             pw[to] += g.nw[u]
@@ -411,6 +478,8 @@ def _fm_refine(
             if caps_on:
                 pm[to] -= g.mem(u)
                 pm[frm] += g.mem(u)
+        if interval and best_i < len(moves) - 1:
+            iload = interval_loads()  # incremental loads predate the rollback
         if best_i == -1 or not improved_in_pass:
             break
     return part
@@ -504,6 +573,7 @@ def partition_indices(
     seed: int = 1,
     capacities: Sequence[float] | None = None,
     link_scale: Sequence[Sequence[float]] | None = None,
+    objective: str = "cut",
 ) -> list[int]:
     """k-way partition of an index graph into parts with target weight
     fractions ``targets`` (sum to 1) and optional absolute memory budgets
@@ -517,7 +587,13 @@ def partition_indices(
     nodes, diagonal 0) makes the refinement passes topology-aware: a cut
     edge across a fast link costs less than one across a slow link.  With
     two parts the scale is a constant factor, so it only changes results
-    for k >= 3 (distinct link tiers)."""
+    for k >= 3 (distinct link tiers).
+
+    ``objective="interval"`` refines for the streaming pipeline interval
+    (max over parts of compute + incident cut cost) instead of total cut —
+    the coarse multilevel bisections stay cut-based (interval is a
+    refinement objective; cut is the right coarse proxy), the FM polish
+    passes optimize the bottleneck stage."""
     k = len(targets)
     tsum = sum(targets)
     if not math.isclose(tsum, 1.0, rel_tol=1e-6):
@@ -539,7 +615,13 @@ def partition_indices(
         part = _bisect_multilevel(g, targets[0], epsilon, seed, caps=capacities)
         part = _repair_capacity(g, part, capacities)
         return _fm_refine(
-            g, part, targets, epsilon, mem_caps=capacities, link_scale=link_scale
+            g,
+            part,
+            targets,
+            epsilon,
+            mem_caps=capacities,
+            link_scale=link_scale,
+            objective=objective,
         )
 
     # recursive bisection: split the class list into two halves with closest
@@ -585,13 +667,20 @@ def partition_indices(
             seed=seed + 17,
             capacities=sub_caps,
             link_scale=sub_scale,
+            objective=objective,
         )
         for u in idx:
             out[u] = group[sub_part[remap[u]]]
     # final k-way polish; repair first so FM starts feasible
     out = _repair_capacity(g, out, capacities)
     return _fm_refine(
-        g, out, targets, epsilon, mem_caps=capacities, link_scale=link_scale
+        g,
+        out,
+        targets,
+        epsilon,
+        mem_caps=capacities,
+        link_scale=link_scale,
+        objective=objective,
     )
 
 
@@ -663,6 +752,7 @@ def partition_taskgraph(
     pin: Mapping[str, str] | None = None,
     capacities: Mapping[str, float] | None = None,
     link_scale: Sequence[Sequence[float]] | None = None,
+    objective: str = "cut",
 ) -> dict[str, str]:
     """Partition a TaskGraph into processor classes with target work fractions
     (the paper's full gp pipeline minus the runtime).
@@ -688,6 +778,7 @@ def partition_taskgraph(
         seed=seed,
         capacities=caps,
         link_scale=link_scale,
+        objective=objective,
     )
     out = {names[i]: classes[part[i]] for i in range(len(names))}
     if pin:

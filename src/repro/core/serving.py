@@ -99,6 +99,9 @@ class StepReport:
     fused_steps: int = 0            # compiled group-steps dispatched (fused)
     cache_hits: int = 0             # super-step compilation-cache hits
     cache_misses: int = 0           # super-step compilations this interval
+    n_streamed: int = 0             # demand pulls executed as chunked channels
+    n_stalled_chunks: int = 0       # chunks delayed by channel backpressure
+    stream_busy_ms: float = 0.0     # lane time booked by channel chunks
 
 
 @dataclasses.dataclass
@@ -162,6 +165,9 @@ class ServeReport:
             "fused_steps": int(self.total("fused_steps")),
             "cache_hits": int(self.total("cache_hits")),
             "cache_misses": int(self.total("cache_misses")),
+            "streamed": int(self.total("n_streamed")),
+            "stalled_chunks": int(self.total("n_stalled_chunks")),
+            "stream_busy_ms": self.total("stream_busy_ms"),
         }
 
 
@@ -226,7 +232,9 @@ class ServingExecutor:
                  monitor: HeartbeatMonitor | None = None,
                  cost_model: MeasuredCostModel | None = None,
                  link: Link | None = None, fused: bool = False,
-                 superstep_cache: SuperStepCache | None = None):
+                 superstep_cache: SuperStepCache | None = None,
+                 streaming: bool = False, chunk_bytes: int = 1 << 18,
+                 stream_depth: int = 2):
         missing = [c for c in platform.classes if c not in groups]
         if missing:
             raise KeyError(f"platform classes without a device group: {missing}")
@@ -247,6 +255,12 @@ class ServingExecutor:
         self.fused = fused
         self.superstep_cache = (superstep_cache if superstep_cache is not None
                                 else (SuperStepCache() if fused else None))
+        # streaming pulls: cross-group demand transfers open chunked
+        # channels (comm.StreamChannel) instead of bulk fetches — opt-in,
+        # streaming=False keeps the bulk path bit-identical
+        self.streaming = streaming
+        self.chunk_bytes = chunk_bytes
+        self.stream_depth = stream_depth
 
     def reset_measurements(self) -> None:
         """Fresh measurement state (monitor EWMAs + cost history).  Called at
@@ -387,7 +401,9 @@ class ServingExecutor:
             time_kernels=True, gated=gated, comm=comm,
             group_nodes=group_nodes, fused=self.fused,
             cache=self.superstep_cache,
-            revision=int(getattr(policy, "revision", 0)))
+            revision=int(getattr(policy, "revision", 0)),
+            streaming=self.streaming, chunk_bytes=self.chunk_bytes,
+            stream_depth=self.stream_depth)
 
         clock = 0.0
         decision_ms = 0.0
@@ -527,6 +543,9 @@ class ServingExecutor:
             fused_steps=session.fused_steps,
             cache_hits=session.cache_hits,
             cache_misses=session.cache_misses,
+            n_streamed=comm.n_streamed,
+            n_stalled_chunks=comm.n_stalled_chunks,
+            stream_busy_ms=comm.stream_busy_ms,
         )
 
     # -- whole stream ----------------------------------------------------------
@@ -636,5 +655,8 @@ def merge_serve_reports(reports: Sequence[ServeReport],
             fused_steps=int(tot("fused_steps")),
             cache_hits=int(tot("cache_hits")),
             cache_misses=int(tot("cache_misses")),
+            n_streamed=int(tot("n_streamed")),
+            n_stalled_chunks=int(tot("n_stalled_chunks")),
+            stream_busy_ms=tot("stream_busy_ms"),
         ))
     return merged

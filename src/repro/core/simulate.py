@@ -25,6 +25,17 @@ x16 link with one copy engine):
   uplinks, and prefetches are contention-throttled (``throttle``, auto-on
   for hierarchies) so they never queue a demand fetch behind them on a hot
   tier;
+* **streaming channels**: with ``streaming=True`` a cross-node input is not
+  bulk-fetched before the kernel runs but opened as a
+  :class:`~repro.core.comm.StreamChannel` — the copy splits into
+  ``chunk_bytes`` chunks that go on the wire while the *producer* is still
+  computing, the consumer starts once chunk 0 lands, and residual chunk
+  arrivals are charged against the consumer's own compute; channel ``depth``
+  bounds the in-flight window (backpressure, ``n_stalled_chunks``).  Deep
+  cut-edge chains become pipeline stages (throughput-bound) instead of
+  hop-serialized fetch+compute (latency-bound).  Bulk prefetch is subsumed:
+  chunk 0 of a channel is never later than a prefetch booked at the
+  producer's finish;
 * transfer counting / byte accounting (the paper's second metric);
 * scheduling-decision overhead (paper §IV.D: dmda pays per-task decision
   time, gp decides once offline);
@@ -205,6 +216,13 @@ class SimResult:
     # copies cancelled in flight because their destination memory node died
     # with its last worker (lanes released at the preemption time)
     n_preempted: int = 0
+    # streaming-channel accounting: channels opened, chunks the backpressure
+    # window stalled, and total chunk wire time (part of transfer_busy_ms)
+    n_streamed: int = 0
+    n_stalled_chunks: int = 0
+    stream_busy_ms: float = 0.0
+    # per-tier prefetch-depth adjustments (CommEngine.adaptive_depth)
+    n_depth_adjust: int = 0
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -212,16 +230,38 @@ class SimResult:
         return {k: v / self.makespan_ms for k, v in self.proc_busy_ms.items()}
 
 
+DEFAULT_CHUNK_BYTES = 1 << 18
+
+
 class Sim:
     """Mutable simulation state handed to policies."""
 
-    def __init__(self, g: TaskGraph, platform: Platform, throttle: bool | None = None):
+    def __init__(
+        self,
+        g: TaskGraph,
+        platform: Platform,
+        throttle: bool | None = None,
+        *,
+        streaming: bool = False,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        stream_depth: int = 2,
+        adaptive_depth: bool = False,
+        prefetch_depth: int = 2,
+    ):
         self.g = g
         # own copy of the proc list: dynamic events mutate it, and the caller's
         # Platform must stay reusable across runs (the arena shares one)
         self.platform = platform.copy()
         self.topo = self.platform.topo
-        self.comm = CommEngine(self.topo, throttle=throttle)
+        self.streaming = streaming
+        self.chunk_bytes = chunk_bytes
+        self.stream_depth = stream_depth
+        self.comm = CommEngine(
+            self.topo,
+            throttle=throttle,
+            adaptive_depth=adaptive_depth,
+            base_depth=prefetch_depth,
+        )
         self.now = 0.0
         # live KV residency per class: insertion-ordered block -> bytes (the
         # order is the FIFO spill victim order); mem_load is the running sum
@@ -255,6 +295,12 @@ class Sim:
             e = self.g.edge(p, task)
             ent = self._block_entry(p, task)
             if ent is not None and node in ent:
+                # chunks already in flight on a channel mark validity at the
+                # LAST chunk's arrival: the remaining ETA is that arrival gap,
+                # not a re-priced full transfer (which would double-count the
+                # pending bytes) and not zero (the block is not here yet)
+                if self.streaming:
+                    ms += max(0.0, ent[node] - self.now)
                 continue
             if ent:
                 src = min(ent.items(), key=lambda kv: (kv[1], kv[0]))[0]
@@ -292,6 +338,10 @@ def simulate(
     overlap: bool = True,
     prefetch_depth: int = 2,
     throttle: bool | None = None,
+    streaming: bool = False,
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    stream_depth: int = 2,
+    adaptive_depth: bool = False,
 ) -> SimResult:
     """Run ``policy`` over task graph ``g`` on ``platform``.
 
@@ -317,9 +367,31 @@ def simulate(
     retries at the next event (or the consumer demands the block at full
     priority).  ``None`` (default) enables it exactly on hierarchical
     topologies, keeping every flat-topology result bit-for-bit unchanged.
+
+    ``streaming``: open cross-node inputs as chunked
+    :class:`~repro.core.comm.StreamChannel`\\ s instead of bulk fetches — the
+    consumer starts at chunk 0's arrival and residual chunks overlap its
+    compute, bounded by ``stream_depth`` in-flight chunks (backpressure).
+    Bulk prefetch is disabled in this mode (chunk 0, backdated over the
+    producer's compute window, is never later than a prefetch).
+    ``streaming=False`` (default) is bit-for-bit the bulk model.
+
+    ``adaptive_depth``: per-tier prefetch lookahead — tiers idle past the
+    engine's window earn a deeper speculative queue scan (up to its
+    ``max_depth``), throttled tiers fall back toward 1; ``prefetch_depth``
+    seeds the base.  Off (default) keeps the static depth bit-for-bit.
     """
     g.validate()
-    sim = Sim(g, platform, throttle=throttle)
+    sim = Sim(
+        g,
+        platform,
+        throttle=throttle,
+        streaming=streaming,
+        chunk_bytes=chunk_bytes,
+        stream_depth=stream_depth,
+        adaptive_depth=adaptive_depth,
+        prefetch_depth=prefetch_depth,
+    )
     platform = sim.platform  # the mutable copy; dynamic events edit this one
     comm = sim.comm
     offline_ms = policy.prepare(g, platform)
@@ -497,10 +569,45 @@ def simulate(
                 mem_add(dst_cls, block, g.nodes[block].mem_bytes, t)
         return te
 
+    # producer compute windows: task -> (start, finish), so a channel opened
+    # for a task's output can backdate chunk availability over the window
+    task_window: dict[str, tuple[float, float]] = {}
+
+    def stream_block(block: str, nbytes: int, dst_node: int, dst_cls: str, t: float):
+        """Open a chunked channel for ``block`` toward ``dst_node`` from its
+        cheapest valid source (streaming counterpart of :func:`fetch_block`;
+        validity is marked by the caller once the channel drains)."""
+        ent = sim.valid.get(block) or {}
+        src_node, src_t = min(ent.items(), key=lambda kv: (kv[1], kv[0]))
+        win = task_window.get(block)
+        # pro-rata chunk availability only when the source copy IS the
+        # producer's own output (valid exactly at its compute finish); a
+        # relayed/old copy exists in full at its validity time
+        src_start = win[0] if win is not None and abs(win[1] - src_t) <= 1e-9 else None
+        ch = comm.open_stream(
+            block,
+            src_node,
+            dst_node,
+            nbytes,
+            now=t,
+            src_start=src_start,
+            src_ready=src_t,
+            chunk_bytes=sim.chunk_bytes,
+            depth=sim.stream_depth,
+        )
+        if block in spilled_live:
+            spilled_live.discard(block)
+            r = req_of.get(block)
+            if (r is None or req_left.get(r, 0) > 0) and block in g.nodes:
+                metrics["reloads"] += 1
+                mem_add(dst_cls, block, g.nodes[block].mem_bytes, t)
+        return ch
+
     def start_task(proc: Processor, task: str, t: float):
         """Book transfers for missing inputs, then run. Returns finish time."""
         arrival = t
         mem_add(proc.cls, task, g.nodes[task].mem_bytes, t)
+        channels = []
         for pred in g.predecessors(task):
             e = g.edge(pred, task)
             # each entry kernel's host input is its OWN block (paper §III.B:
@@ -510,17 +617,35 @@ def simulate(
                 sim.valid[block] = {platform.host_node: 0.0}
             va = block_valid_at(block, proc.node)
             if va is None:
-                va = fetch_block(block, e.nbytes, proc.node, proc.cls, t, "demand")
+                if sim.streaming:
+                    ch = stream_block(block, e.nbytes, proc.node, proc.cls, t)
+                    if ch is not None:
+                        channels.append(ch)
+                        va = ch.first_ready  # start gate: chunk 0, not all
+                    else:
+                        va = t
+                else:
+                    va = fetch_block(
+                        block, e.nbytes, proc.node, proc.cls, t, "demand"
+                    )
             arrival = max(arrival, va)
         start = max(arrival, sim.proc_free[proc.name], t)
         dur = g.nodes[task].cost_on(proc.cls)
         finish = start + dur
+        for ch in channels:
+            # residual chunks arrive against the compute window; the kernel
+            # completes when compute AND every channel have drained, and the
+            # block is valid here once its last chunk lands
+            ch_finish, arrival_last = ch.drain(start, dur)
+            finish = max(finish, ch_finish)
+            sim.valid.setdefault(ch.block, {})[proc.node] = arrival_last
         sim.proc_free[proc.name] = finish
         busy[proc.name] += dur
         per_class[proc.cls] = per_class.get(proc.cls, 0) + 1
         did_counter[0] += 1
         running[proc.name] = (task, start, finish, len(trace), did_counter[0])
         trace.append((task, proc.name, start, finish))
+        task_window[task] = (start, finish)
         push(finish, "finish", (task, proc.name, did_counter[0]))
 
     last_dispatch = {p.name: -1.0 for p in platform.procs}
@@ -559,14 +684,19 @@ def simulate(
         ``prefetch_depth`` tasks of every worker's queue — those dispatch
         decisions are already committed, so their cut-edge transfers can
         proceed under whatever the worker is currently computing."""
-        if not overlap:
+        if not overlap or sim.streaming:
+            # streaming subsumes prefetch: a channel's chunk 0, backdated
+            # over the producer's compute window, is never later than a
+            # prefetch bookable only after the producer finishes
             return
+        adaptive = comm.adaptive_depth
+        lookahead = comm.max_depth if adaptive else prefetch_depth
         for p in platform.procs:
             q = sim.proc_queue[p.name]
             if not q:
                 continue
             for i, task in enumerate(q):
-                if i >= prefetch_depth:
+                if i >= lookahead:
                     break
                 if g.nodes[task].op == "source":
                     continue
@@ -579,6 +709,14 @@ def simulate(
                     ent = sim.valid.get(block)
                     if ent is None or p.node in ent:
                         continue  # producer unfinished, or already valid/booked
+                    if adaptive:
+                        # per-tier depth: the route decides how deep into the
+                        # queue this worker may speculate right now
+                        src_node = min(
+                            ent.items(), key=lambda kv: (kv[1], kv[0])
+                        )[0]
+                        if i >= comm.prefetch_depth_for(src_node, p.node, t):
+                            continue
                     fetch_block(block, e.nbytes, p.node, p.cls, t, "prefetch")
 
     def ready_or_defer(task: str, t: float):
@@ -737,4 +875,8 @@ def simulate(
         n_throttled=comm.n_throttled,
         demand_latency_ms=comm.demand_latency_ms(),
         n_preempted=comm.n_preempted,
+        n_streamed=comm.n_streamed,
+        n_stalled_chunks=comm.n_stalled_chunks,
+        stream_busy_ms=comm.stream_busy_ms,
+        n_depth_adjust=comm.n_depth_adjust,
     )

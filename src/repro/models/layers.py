@@ -61,8 +61,10 @@ class Ctx:
         if not self.fsdp_gather:
             return p
         import jax as _jax
-        return _jax.tree.map(lambda a: shd.constraint(
-            a, (None,) * a.ndim, self.rules), p)
+
+        return _jax.tree.map(
+            lambda a: shd.constraint(a, (None,) * a.ndim, self.rules), p
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -81,8 +83,10 @@ def rmsnorm(p, x, eps: float = 1e-5):
 
 
 def layernorm_params(d: int) -> dict:
-    return {"scale": P((d,), (None,), init="ones"),
-            "bias": P((d,), (None,), init="zeros")}
+    return {
+        "scale": P((d,), (None,), init="ones"),
+        "bias": P((d,), (None,), init="zeros"),
+    }
 
 
 def layernorm(p, x, eps: float = 1e-5):
@@ -90,8 +94,9 @@ def layernorm(p, x, eps: float = 1e-5):
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
     y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    return (y * p["scale"].astype(jnp.float32)
-            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -152,17 +157,29 @@ NEG_INF = -1e30
 # VMEM).  The roofline memory model (launch/flops.py) recognizes the prefix
 # and accounts only the region's inputs+outputs as HBM traffic.
 
-@functools.partial(jax.jit, static_argnames=("causal", "scale", "Cq", "Ck",
-                                             "logit_cap", "kv_len"))
-def fusedkernel_flash_fwd(q, k, v, q_offset, *, causal, scale, Cq, Ck,
-                          logit_cap, kv_len=None):
-    return _flash_fwd_inner(q, k, v, causal=causal, q_offset=q_offset,
-                            scale=scale, Cq=Cq, Ck=Ck, logit_cap=logit_cap,
-                            kv_len=kv_len)
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "Cq", "Ck", "logit_cap", "kv_len")
+)
+def fusedkernel_flash_fwd(
+    q, k, v, q_offset, *, causal, scale, Cq, Ck, logit_cap, kv_len=None
+):
+    return _flash_fwd_inner(
+        q,
+        k,
+        v,
+        causal=causal,
+        q_offset=q_offset,
+        scale=scale,
+        Cq=Cq,
+        Ck=Ck,
+        logit_cap=logit_cap,
+        kv_len=kv_len,
+    )
 
 
-def _flash_fwd_inner(q, k, v, *, causal, q_offset, scale, Cq, Ck,
-                     logit_cap, kv_len=None):
+def _flash_fwd_inner(
+    q, k, v, *, causal, q_offset, scale, Cq, Ck, logit_cap, kv_len=None
+):
     """Forward pass; also returns the log-sum-exp rows for the backward.
     q: (B, Sq, K, G, hd); k/v: (B, Sk, K, hd)."""
     B, Sq, K, G, hd = q.shape
@@ -178,8 +195,9 @@ def _flash_fwd_inner(q, k, v, *, causal, q_offset, scale, Cq, Ck,
         def kv_block(state, ki_and_kv):
             m, l, acc = state
             ki, kblk, vblk = ki_and_kv
-            s = jnp.einsum("bqkgh,bckh->bkgqc", qblk, kblk,
-                           preferred_element_type=jnp.float32) * scale
+            s = jnp.einsum(
+                "bqkgh,bckh->bkgqc", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
             if logit_cap > 0.0:
                 s = logit_cap * jnp.tanh(s / logit_cap)
             kpos = ki * Ck + jnp.arange(Ck)
@@ -190,15 +208,17 @@ def _flash_fwd_inner(q, k, v, *, causal, q_offset, scale, Cq, Ck,
                     mask = mask & (kpos < kv_len)[None, :]
                 s = jnp.where(mask[None, None, None], s, NEG_INF)
             elif kv_len is not None:
-                s = jnp.where((kpos < kv_len)[None, None, None, None], s,
-                              NEG_INF)
+                s = jnp.where((kpos < kv_len)[None, None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             pexp = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
             l_new = l * corr + pexp.sum(axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
-                "bkgqc,bckh->bkgqh", pexp.astype(vblk.dtype), vblk,
-                preferred_element_type=jnp.float32)
+                "bkgqc,bckh->bkgqh",
+                pexp.astype(vblk.dtype),
+                vblk,
+                preferred_element_type=jnp.float32,
+            )
             return (m_new, l_new, acc_new), None
 
         m0 = jnp.full((B, K, G, Cq), NEG_INF, jnp.float32)
@@ -218,34 +238,55 @@ def _flash_fwd_inner(q, k, v, *, causal, q_offset, scale, Cq, Ck,
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _flash_attend_core(q, k, v, causal, q_offset, scale, Cq, Ck, logit_cap,
-                       kv_len=None):
-    out, _ = fusedkernel_flash_fwd(q, k, v, q_offset, causal=causal,
-                                   scale=scale, Cq=Cq, Ck=Ck,
-                                   logit_cap=logit_cap, kv_len=kv_len)
+def _flash_attend_core(
+    q, k, v, causal, q_offset, scale, Cq, Ck, logit_cap, kv_len=None
+):
+    out, _ = fusedkernel_flash_fwd(
+        q,
+        k,
+        v,
+        q_offset,
+        causal=causal,
+        scale=scale,
+        Cq=Cq,
+        Ck=Ck,
+        logit_cap=logit_cap,
+        kv_len=kv_len,
+    )
     return out
 
 
-def _flash_fwd(q, k, v, causal, q_offset, scale, Cq, Ck, logit_cap,
-               kv_len=None):
-    out, lse = fusedkernel_flash_fwd(q, k, v, q_offset, causal=causal,
-                                     scale=scale, Cq=Cq, Ck=Ck,
-                                     logit_cap=logit_cap, kv_len=kv_len)
+def _flash_fwd(q, k, v, causal, q_offset, scale, Cq, Ck, logit_cap, kv_len=None):
+    out, lse = fusedkernel_flash_fwd(
+        q,
+        k,
+        v,
+        q_offset,
+        causal=causal,
+        scale=scale,
+        Cq=Cq,
+        Ck=Ck,
+        logit_cap=logit_cap,
+        kv_len=kv_len,
+    )
     return out, (q, k, v, out, lse)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "scale", "Cq", "Ck",
-                                             "logit_cap", "kv_len"))
-def fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset, *, causal, scale,
-                          Cq, Ck, logit_cap, kv_len=None):
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "Cq", "Ck", "logit_cap", "kv_len")
+)
+def fusedkernel_flash_bwd(
+    q, k, v, out, lse, do, q_offset, *, causal, scale, Cq, Ck, logit_cap, kv_len=None
+):
     """FlashAttention-2-style backward in two linear-memory passes: P is
     recomputed per block from the saved LSE; dq accumulates in the q-pass,
     dk/dv in the kv-pass.  Residuals stay O(B·S·H·hd), never O(S^2)."""
     B, Sq, K, G, hd = q.shape
     Sk = k.shape[1]
     nq, nk = Sq // Cq, Sk // Ck
-    delta = jnp.einsum("bqkgh,bqkgh->bkgq", do.astype(jnp.float32),
-                       out.astype(jnp.float32))        # rowsum(dO*O)
+    delta = jnp.einsum(
+        "bqkgh,bqkgh->bkgq", do.astype(jnp.float32), out.astype(jnp.float32)
+    )  # rowsum(dO*O)
     qc = jnp.moveaxis(q.reshape(B, nq, Cq, K, G, hd), 1, 0)
     doc = jnp.moveaxis(do.reshape(B, nq, Cq, K, G, hd), 1, 0)
     lsec = jnp.moveaxis(lse.reshape(B, K, G, nq, Cq), 3, 0)
@@ -254,8 +295,9 @@ def fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset, *, causal, scale,
     vc = jnp.moveaxis(v.reshape(B, nk, Ck, K, hd), 1, 0)
 
     def _scores(qi, qblk, ki, kblk, lseblk):
-        s = jnp.einsum("bqkgh,bckh->bkgqc", qblk, kblk,
-                       preferred_element_type=jnp.float32) * scale
+        s = jnp.einsum(
+            "bqkgh,bckh->bkgqc", qblk, kblk, preferred_element_type=jnp.float32
+        ) * scale
         if logit_cap > 0.0:
             s = logit_cap * jnp.tanh(s / logit_cap)
         kpos = ki * Ck + jnp.arange(Ck)
@@ -276,19 +318,23 @@ def fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset, *, causal, scale,
         def inner(dq, ks):
             ki, kblk, vblk = ks
             p = _scores(qi, qblk, ki, kblk, lseblk)
-            dp = jnp.einsum("bqkgh,bckh->bkgqc", doblk, vblk,
-                            preferred_element_type=jnp.float32)
+            dp = jnp.einsum(
+                "bqkgh,bckh->bkgqc", doblk, vblk, preferred_element_type=jnp.float32
+            )
             ds = p * (dp - dltblk[..., None]) * scale
-            dq = dq + jnp.einsum("bkgqc,bckh->bqkgh", ds.astype(kblk.dtype),
-                                 kblk, preferred_element_type=jnp.float32)
+            dq = dq + jnp.einsum(
+                "bkgqc,bckh->bqkgh",
+                ds.astype(kblk.dtype),
+                kblk,
+                preferred_element_type=jnp.float32,
+            )
             return dq, None
 
         dq0 = jnp.zeros((B, Cq, K, G, hd), jnp.float32)
         dq, _ = jax.lax.scan(inner, dq0, (jnp.arange(nk), kc, vc))
         return None, dq
 
-    _, dq_blocks = jax.lax.scan(q_pass, None,
-                                (jnp.arange(nq), qc, doc, lsec, dltc))
+    _, dq_blocks = jax.lax.scan(q_pass, None, (jnp.arange(nq), qc, doc, lsec, dltc))
     dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(B, Sq, K, G, hd).astype(q.dtype)
 
     # pass 2: dk/dv, scanning kv blocks (inner accumulate over q blocks)
@@ -299,19 +345,29 @@ def fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset, *, causal, scale,
             dk, dv = carry
             qi, qblk, doblk, lseblk, dltblk = qs
             p = _scores(qi, qblk, ki, kblk, lseblk)
-            dp = jnp.einsum("bqkgh,bckh->bkgqc", doblk, vblk,
-                            preferred_element_type=jnp.float32)
+            dp = jnp.einsum(
+                "bqkgh,bckh->bkgqc", doblk, vblk, preferred_element_type=jnp.float32
+            )
             ds = p * (dp - dltblk[..., None]) * scale
-            dk = dk + jnp.einsum("bkgqc,bqkgh->bckh", ds.astype(qblk.dtype),
-                                 qblk, preferred_element_type=jnp.float32)
-            dv = dv + jnp.einsum("bkgqc,bqkgh->bckh", p.astype(doblk.dtype),
-                                 doblk, preferred_element_type=jnp.float32)
+            dk = dk + jnp.einsum(
+                "bkgqc,bqkgh->bckh",
+                ds.astype(qblk.dtype),
+                qblk,
+                preferred_element_type=jnp.float32,
+            )
+            dv = dv + jnp.einsum(
+                "bkgqc,bqkgh->bckh",
+                p.astype(doblk.dtype),
+                doblk,
+                preferred_element_type=jnp.float32,
+            )
             return (dk, dv), None
 
         dk0 = jnp.zeros((B, Ck, K, hd), jnp.float32)
         dv0 = jnp.zeros((B, Ck, K, hd), jnp.float32)
-        (dk, dv), _ = jax.lax.scan(inner, (dk0, dv0),
-                                   (jnp.arange(nq), qc, doc, lsec, dltc))
+        (dk, dv), _ = jax.lax.scan(
+            inner, (dk0, dv0), (jnp.arange(nq), qc, doc, lsec, dltc)
+        )
         return None, (dk, dv)
 
     _, (dkc2, dvc2) = jax.lax.scan(kv_pass, None, (jnp.arange(nk), kc, vc))
@@ -322,16 +378,27 @@ def fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset, *, causal, scale,
 
 def _flash_bwd(causal, q_offset, scale, Cq, Ck, logit_cap, kv_len, res, do):
     q, k, v, out, lse = res
-    return fusedkernel_flash_bwd(q, k, v, out, lse, do, q_offset,
-                                 causal=causal, scale=scale, Cq=Cq, Ck=Ck,
-                                 logit_cap=logit_cap, kv_len=kv_len)
+    return fusedkernel_flash_bwd(
+        q,
+        k,
+        v,
+        out,
+        lse,
+        do,
+        q_offset,
+        causal=causal,
+        scale=scale,
+        Cq=Cq,
+        Ck=Ck,
+        logit_cap=logit_cap,
+        kv_len=kv_len,
+    )
 
 
 _flash_attend_core.defvjp(_flash_fwd, _flash_bwd)
 
 
-def _flash_attend(q, k, v, *, causal: bool, q_offset, ctx: Ctx,
-                  logit_cap: float = 0.0):
+def _flash_attend(q, k, v, *, causal: bool, q_offset, ctx: Ctx, logit_cap: float = 0.0):
     """Blockwise attention with online softmax and an FA2 custom backward.
 
     q: (B, Sq, K, G, hd) grouped query heads; k, v: (B, Sk, K, hd).
@@ -351,13 +418,13 @@ def _flash_attend(q, k, v, *, causal: bool, q_offset, ctx: Ctx,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-    out = _flash_attend_core(q, k, v, causal, q_offset, scale, Cq, Ck,
-                             logit_cap, kv_len)
+    out = _flash_attend_core(
+        q, k, v, causal, q_offset, scale, Cq, Ck, logit_cap, kv_len
+    )
     return out[:, :Sq] if pad_q else out
 
 
-def attention(q, k, v, *, causal: bool, ctx: Ctx, q_offset=0,
-              logit_cap: float = 0.0):
+def attention(q, k, v, *, causal: bool, ctx: Ctx, q_offset=0, logit_cap: float = 0.0):
     """q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H = K * G."""
     B, Sq, H, hd = q.shape
     K = k.shape[2]
@@ -366,20 +433,23 @@ def attention(q, k, v, *, causal: bool, ctx: Ctx, q_offset=0,
     if Sq <= ctx.q_chunk and k.shape[1] <= 4 * ctx.kv_chunk:
         # small path: single einsum (cheaper to compile; smoke tests, short
         # cross-attention) — the flash path bounds score memory otherwise
-        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k,
-                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        s = jnp.einsum(
+            "bqkgh,bckh->bkgqc", qg, k, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
         if logit_cap > 0.0:
             s = logit_cap * jnp.tanh(s / logit_cap)
         if causal:
             qpos = q_offset + jnp.arange(Sq)
             kpos = jnp.arange(k.shape[1])
-            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
-                          s, NEG_INF)
+            s = jnp.where(
+                (qpos[:, None] >= kpos[None, :])[None, None, None], s, NEG_INF
+            )
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         out = jnp.einsum("bkgqc,bckh->bqkgh", p, v)
         return out.reshape(B, Sq, H, hd).astype(q.dtype)
-    out = _flash_attend(qg, k, v, causal=causal, q_offset=q_offset, ctx=ctx,
-                        logit_cap=logit_cap)
+    out = _flash_attend(
+        qg, k, v, causal=causal, q_offset=q_offset, ctx=ctx, logit_cap=logit_cap
+    )
     return out.reshape(B, Sq, H, hd)
 
 
@@ -430,8 +500,7 @@ def attn_block(p, x, cfg, ctx: Ctx, *, positions, kv=None, causal=True):
     q = ctx.cs(q, "batch", "seq", "heads", "head_dim")
     k = ctx.cs(k, "batch", "seq", "kv_heads", "head_dim")
     v = ctx.cs(v, "batch", "seq", "kv_heads", "head_dim")
-    o = attention(q, k, v, causal=causal, ctx=ctx,
-                  logit_cap=cfg.attn_logit_softcap)
+    o = attention(q, k, v, causal=causal, ctx=ctx, logit_cap=cfg.attn_logit_softcap)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
     return ctx.cs(out, "batch", "seq", "embed"), (k, v)
 
@@ -446,13 +515,16 @@ def decode_attn_dense(q, ck, cv, k_new, v_new, pos, *, logit_cap=0.0):
     B, S, K, hd = ck.shape
     H = q.shape[1]
     G = H // K
-    ck = jax.lax.dynamic_update_slice(ck, k_new[:, None].astype(ck.dtype),
-                                      (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cv, v_new[:, None].astype(cv.dtype),
-                                      (0, pos, 0, 0))
+    ck = jax.lax.dynamic_update_slice(
+        ck, k_new[:, None].astype(ck.dtype), (0, pos, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cv, v_new[:, None].astype(cv.dtype), (0, pos, 0, 0)
+    )
     qg = q.reshape(B, K, G, hd)
-    s = jnp.einsum("bkgh,bskh->bkgs", qg, ck,
-                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, ck, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
     if logit_cap > 0.0:
         s = logit_cap * jnp.tanh(s / logit_cap)
     valid = jnp.arange(S) <= pos
@@ -462,8 +534,7 @@ def decode_attn_dense(q, ck, cv, k_new, v_new, pos, *, logit_cap=0.0):
     return o.reshape(B, H, hd).astype(q.dtype), (ck, cv)
 
 
-def decode_attn_seqpar(q, ck, cv, k_new, v_new, pos, *, ctx: Ctx,
-                       logit_cap=0.0):
+def decode_attn_seqpar(q, ck, cv, k_new, v_new, pos, *, ctx: Ctx, logit_cap=0.0):
     """Flash-decode: cache seq axis sharded over "model"; partial softmax per
     shard + psum combine.  The TPU-native adaptation of the paper's
     data-locality principle: compute moves to the cache shard, only the
@@ -495,14 +566,17 @@ def decode_attn_seqpar(q, ck, cv, k_new, v_new, pos, *, ctx: Ctx,
         in_range = jnp.logical_and(lpos >= 0, lpos < S_loc)
         li = jnp.clip(lpos, 0, S_loc - 1)
         ck_upd = jax.lax.dynamic_update_slice(
-            ck, k_new[:, None].astype(ck.dtype), (0, li, 0, 0))
+            ck, k_new[:, None].astype(ck.dtype), (0, li, 0, 0)
+        )
         cv_upd = jax.lax.dynamic_update_slice(
-            cv, v_new[:, None].astype(cv.dtype), (0, li, 0, 0))
+            cv, v_new[:, None].astype(cv.dtype), (0, li, 0, 0)
+        )
         ck = jnp.where(in_range, ck_upd, ck)
         cv = jnp.where(in_range, cv_upd, cv)
         qg = q.reshape(-1, K, G, hd)
-        s = jnp.einsum("bkgh,bskh->bkgs", qg, ck,
-                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        s = jnp.einsum(
+            "bkgh,bskh->bkgs", qg, ck, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
         if logit_cap > 0.0:
             s = logit_cap * jnp.tanh(s / logit_cap)
         valid = (off + jnp.arange(S_loc)) <= pos
@@ -511,20 +585,33 @@ def decode_attn_seqpar(q, ck, cv, k_new, v_new, pos, *, ctx: Ctx,
         m_g = jax.lax.pmax(m_l, "model")
         pexp = jnp.exp(s - m_g[..., None])
         l_l = pexp.sum(axis=-1)
-        o_l = jnp.einsum("bkgs,bskh->bkgh", pexp.astype(cv.dtype), cv,
-                         preferred_element_type=jnp.float32)
+        o_l = jnp.einsum(
+            "bkgs,bskh->bkgh",
+            pexp.astype(cv.dtype),
+            cv,
+            preferred_element_type=jnp.float32,
+        )
         l_g = jax.lax.psum(l_l, "model")
         o_g = jax.lax.psum(o_l, "model")
         o = o_g / jnp.maximum(l_g, 1e-30)[..., None]
         return o.reshape(-1, H, hd).astype(q.dtype), ck, cv
 
     from ..compat import shard_map
+
     f = shard_map(
-        local, mesh=mesh,
-        in_specs=(PS(bspec), PS(bspec, "model"), PS(bspec, "model"),
-                  PS(bspec), PS(bspec), PS()),
+        local,
+        mesh=mesh,
+        in_specs=(
+            PS(bspec),
+            PS(bspec, "model"),
+            PS(bspec, "model"),
+            PS(bspec),
+            PS(bspec),
+            PS(),
+        ),
         out_specs=(PS(bspec), PS(bspec, "model"), PS(bspec, "model")),
-        check_vma=False)
+        check_vma=False,
+    )
     o, ck, cv = f(q, ck, cv, k_new, v_new, pos)
     return o, (ck, cv)
 
@@ -538,12 +625,25 @@ def attn_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     q = apply_rope(q, posv, cfg.rope_theta)[:, 0]
     k = apply_rope(k, posv, cfg.rope_theta)[:, 0]
     v = v[:, 0]
-    if ctx.decode_seqpar and ctx.mesh is not None and ctx.mesh.shape.get("model", 1) > 1:
-        o, (ck, cv) = decode_attn_seqpar(q, cache["k"], cache["v"], k, v, pos,
-                                         ctx=ctx, logit_cap=cfg.attn_logit_softcap)
+    if (
+        ctx.decode_seqpar
+        and ctx.mesh is not None
+        and ctx.mesh.shape.get("model", 1) > 1
+    ):
+        o, (ck, cv) = decode_attn_seqpar(
+            q,
+            cache["k"],
+            cache["v"],
+            k,
+            v,
+            pos,
+            ctx=ctx,
+            logit_cap=cfg.attn_logit_softcap,
+        )
     else:
-        o, (ck, cv) = decode_attn_dense(q, cache["k"], cache["v"], k, v, pos,
-                                        logit_cap=cfg.attn_logit_softcap)
+        o, (ck, cv) = decode_attn_dense(
+            q, cache["k"], cache["v"], k, v, pos, logit_cap=cfg.attn_logit_softcap
+        )
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))[:, None]
     return ctx.cs(out, "batch", "seq", "embed"), {"k": ck, "v": cv}
 
@@ -570,8 +670,11 @@ def mla_params(cfg) -> dict:
 
 def _mla_q(p, x, cfg, ctx: Ctx, positions):
     dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
-    ql = rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
-                 cfg.norm_eps)
+    ql = rmsnorm(
+        p["q_norm"],
+        jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+        cfg.norm_eps,
+    )
     q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(x.dtype))
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -598,12 +701,17 @@ def mla_block(p, x, cfg, ctx: Ctx, *, positions):
     k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["wk_b"].astype(x.dtype))
     v = jnp.einsum("bsr,rhk->bshk", latent, p["wv_b"].astype(x.dtype))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate([k_nope,
-                         jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))],
-                        axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))], axis=-1
+    )
     # pad v's head_dim up to qk dim for the shared attention routine, then cut
-    o = attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
-                  causal=True, ctx=ctx)[..., :dv]
+    o = attention(
+        q,
+        k,
+        jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+        causal=True,
+        ctx=ctx,
+    )[..., :dv]
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
     return ctx.cs(out, "batch", "seq", "embed"), (latent, k_rope)
 
@@ -618,16 +726,21 @@ def mla_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     q_nope, q_rope = _mla_q(p, x, cfg, ctx, posv)        # (B,1,H,·)
     latent_new, k_rope_new = _mla_latent(p, x, cfg, ctx, posv)
     cl = jax.lax.dynamic_update_slice(
-        cache["latent"], latent_new.astype(cache["latent"].dtype), (0, pos, 0))
+        cache["latent"], latent_new.astype(cache["latent"].dtype), (0, pos, 0)
+    )
     cr = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
     S = cl.shape[1]
     # absorb wk_b into the query:  q_lat (B,H,r_kv)
     q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wk_b"].astype(x.dtype))
     scale = 1.0 / math.sqrt(dn + dr)
-    s = (jnp.einsum("bhr,bsr->bhs", q_lat, cl, preferred_element_type=jnp.float32)
-         + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], cr,
-                      preferred_element_type=jnp.float32)) * scale
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, cl, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bhk,bsk->bhs", q_rope[:, 0], cr, preferred_element_type=jnp.float32
+        )
+    ) * scale
     valid = jnp.arange(S) <= pos
     s = jnp.where(valid[None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(x.dtype)

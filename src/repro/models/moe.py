@@ -59,15 +59,17 @@ def moe_params(cfg, tp: int = 1) -> dict:
 
 def _router(p, x2, cfg):
     """x2: (T, D) -> (weights (T,k), idx (T,k), aux_loss scalar)."""
-    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
+    logits = jnp.einsum(
+        "td,de->te", x2.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     w, idx = jax.lax.top_k(probs, cfg.top_k)
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
     # load-balance auxiliary loss (Switch-style)
     me = probs.mean(axis=0)                                # (E,)
     ce = jnp.zeros_like(me).at[idx.reshape(-1)].add(
-        jnp.ones((idx.size,), jnp.float32)) / (x2.shape[0] * cfg.top_k)
+        jnp.ones((idx.size,), jnp.float32)
+    ) / (x2.shape[0] * cfg.top_k)
     aux = cfg.n_experts * jnp.sum(me * ce)
     return w.astype(x2.dtype), idx, aux
 
@@ -100,8 +102,13 @@ def moe_ref(p, x, cfg, ctx: Ctx):
     x2 = x.reshape(B * S, D)
     w, idx, aux = _router(p, x2, cfg)
     e_pad = p["w_gate"].shape[0]
-    all_out = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"],
-                          jnp.broadcast_to(x2, (e_pad,) + x2.shape), x.dtype)
+    all_out = _expert_ffn(
+        p["w_gate"],
+        p["w_up"],
+        p["w_down"],
+        jnp.broadcast_to(x2, (e_pad,) + x2.shape),
+        x.dtype,
+    )
     all_out = ctx.cs(all_out, "experts", None, None)
     onehot = jax.nn.one_hot(idx, e_pad, dtype=x.dtype)     # (T,k,E)
     out = jnp.einsum("tk,tke,etd->td", w, onehot, all_out)
@@ -114,8 +121,15 @@ def moe_ref(p, x, cfg, ctx: Ctx):
 # production path: shard_map EP with capacity buckets + all_to_all
 # ---------------------------------------------------------------------------
 
-def moe_ep(p, x, cfg, ctx: Ctx, *, capacity_factor: float = 1.25,
-           expert_perm: jax.Array | None = None):
+def moe_ep(
+    p,
+    x,
+    cfg,
+    ctx: Ctx,
+    *,
+    capacity_factor: float = 1.25,
+    expert_perm: jax.Array | None = None,
+):
     """x: (B, S, D) — will be resharded to (batch->dp, seq->model).
 
     ``expert_perm``: optional permutation mapping logical expert id ->
@@ -157,24 +171,27 @@ def moe_ep(p, x, cfg, ctx: Ctx, *, capacity_factor: float = 1.25,
         buf = buf.at[slot].set(x2[tok], mode="drop")
         buf = buf.reshape(tp, e_loc * C, D)
         # all_to_all: axis0 enumerates destination shard -> source shard
-        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
-                                  tiled=False)
+        recv = jax.lax.all_to_all(
+            buf, "model", split_axis=0, concat_axis=0, tiled=False
+        )
         # recv: (tp_src, E_loc*C, D) -> (E_loc, tp_src*C, D)
-        recv = recv.reshape(tp, e_loc, C, D).transpose(1, 0, 2, 3) \
-                   .reshape(e_loc, tp * C, D)
+        recv = recv.reshape(tp, e_loc, C, D).transpose(1, 0, 2, 3).reshape(
+            e_loc, tp * C, D
+        )
         out_e = _expert_ffn(w_gate, w_up, w_down, recv, dtype)
         # send back: inverse reshuffle
-        back = out_e.reshape(e_loc, tp, C, D).transpose(1, 0, 2, 3) \
-                    .reshape(tp, e_loc * C, D)
-        ret = jax.lax.all_to_all(back, "model", split_axis=0, concat_axis=0,
-                                 tiled=False)
+        back = out_e.reshape(e_loc, tp, C, D).transpose(1, 0, 2, 3).reshape(
+            tp, e_loc * C, D
+        )
+        ret = jax.lax.all_to_all(
+            back, "model", split_axis=0, concat_axis=0, tiled=False
+        )
         ret = ret.reshape(e_pad * C, D)
         # combine: gather each (token,k) result, weight, accumulate
-        gathered = jnp.where(keep[:, None], ret.at[slot, :].get(mode="fill",
-                                                                fill_value=0),
-                             0).astype(dtype)
-        out = jnp.zeros((T, D), dtype).at[tok].add(
-            gathered * w.reshape(-1)[:, None])
+        gathered = jnp.where(
+            keep[:, None], ret.at[slot, :].get(mode="fill", fill_value=0), 0
+        ).astype(dtype)
+        out = jnp.zeros((T, D), dtype).at[tok].add(gathered * w.reshape(-1)[:, None])
         # aux loss is averaged over shards
         aux = jax.lax.pmean(aux, "model")
         if dp:
@@ -183,27 +200,51 @@ def moe_ep(p, x, cfg, ctx: Ctx, *, capacity_factor: float = 1.25,
         return out.reshape(Bl, Sl, D), aux
 
     perm_arg = expert_perm if expert_perm is not None else None
-    in_specs = (PS(bspec, "model"), PS(), PS("model"), PS("model"), PS("model"),
-                PS() if perm_arg is not None else None)
+    in_specs = (
+        PS(bspec, "model"),
+        PS(),
+        PS("model"),
+        PS("model"),
+        PS("model"),
+        PS() if perm_arg is not None else None,
+    )
     if perm_arg is None:
+
         def wrapped(x_loc, router_w, w_gate, w_up, w_down):
             return local(x_loc, router_w, w_gate, w_up, w_down, None)
-        f = shard_map(wrapped, mesh=mesh,
-                      in_specs=in_specs[:5],
-                      out_specs=(PS(bspec, "model"), PS()), check_vma=False)
+
+        f = shard_map(
+            wrapped,
+            mesh=mesh,
+            in_specs=in_specs[:5],
+            out_specs=(PS(bspec, "model"), PS()),
+            check_vma=False,
+        )
         out, aux = f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     else:
-        f = shard_map(local, mesh=mesh, in_specs=in_specs,
-                      out_specs=(PS(bspec, "model"), PS()), check_vma=False)
+        f = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(PS(bspec, "model"), PS()),
+            check_vma=False,
+        )
         out, aux = f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], perm_arg)
     if cfg.n_shared_experts:
-        out = out + _shared_ffn(p["shared"], x.reshape(-1, D), x.dtype) \
-            .reshape(B, S, D)
+        out = out + _shared_ffn(p["shared"], x.reshape(-1, D), x.dtype).reshape(B, S, D)
     return out, aux
 
 
-def moe_ep_dedup(p, x, cfg, ctx: Ctx, *, expert_perm=None,
-                 dest_k: float | None = None, capacity_factor: float = 1.25):
+def moe_ep_dedup(
+    p,
+    x,
+    cfg,
+    ctx: Ctx,
+    *,
+    expert_perm=None,
+    dest_k: float | None = None,
+    capacity_factor: float = 1.25,
+):
     """Deduplicated-dispatch EP: a token crosses the all_to_all ONCE PER
     DESTINATION SHARD, not once per expert — its routed local-expert ids +
     weights travel as side metadata and the weighted combine happens on the
@@ -240,8 +281,9 @@ def moe_ep_dedup(p, x, cfg, ctx: Ctx, *, expert_perm=None,
         local_e = idx % e_loc
         Cd = max(int(math.ceil(T * dest_k / tp * capacity_factor)), 4)
         # one-hot over destinations, deduped per token
-        dest_oh = (jax.nn.one_hot(dest, tp, dtype=jnp.int32).sum(1) > 0
-                   ).astype(jnp.int32)                        # (T, tp)
+        dest_oh = (jax.nn.one_hot(dest, tp, dtype=jnp.int32).sum(1) > 0).astype(
+            jnp.int32
+        )  # (T, tp)
         pos = jnp.cumsum(dest_oh, axis=0) - dest_oh           # (T, tp)
         keep = (pos < Cd) & (dest_oh > 0)
         slot = jnp.arange(tp)[None] * Cd + pos                # (T, tp)
@@ -253,10 +295,10 @@ def moe_ep_dedup(p, x, cfg, ctx: Ctx, *, expert_perm=None,
         tok_rows = jnp.broadcast_to(x2[:, None], (T, tp, D))
         xbuf = xbuf.at[slot].set(tok_rows, mode="drop")
         # expert j belongs in the row for shard dest[t, j]
-        e_entry = jnp.where(dest[:, None, :] == jnp.arange(tp)[None, :, None],
-                            local_e[:, None, :], -1)          # (T, tp, k)
-        w_entry = jnp.where(e_entry >= 0, w[:, None, :].astype(jnp.float32),
-                            0.0)
+        e_entry = jnp.where(
+            dest[:, None, :] == jnp.arange(tp)[None, :, None], local_e[:, None, :], -1
+        )  # (T, tp, k)
+        w_entry = jnp.where(e_entry >= 0, w[:, None, :].astype(jnp.float32), 0.0)
         ebuf = ebuf.at[slot].set(e_entry, mode="drop")
         wbuf = wbuf.at[slot].set(w_entry, mode="drop")
         xs = xbuf[:-1].reshape(tp, Cd, D)
@@ -275,32 +317,38 @@ def moe_ep_dedup(p, x, cfg, ctx: Ctx, *, expert_perm=None,
         Ce = max(int(math.ceil(T * k / e_pad * capacity_factor)) * tp, 4)
         flat_e = rexp.reshape(-1)                             # (N*k,)
         valid = flat_e >= 0
-        oh = jax.nn.one_hot(jnp.where(valid, flat_e, e_loc), e_loc + 1,
-                            dtype=jnp.int32)[:, :e_loc]
+        oh = jax.nn.one_hot(
+            jnp.where(valid, flat_e, e_loc), e_loc + 1, dtype=jnp.int32
+        )[:, :e_loc]
         bpos = jnp.cumsum(oh, axis=0) - oh
         bpos_j = jnp.take_along_axis(
-            bpos, jnp.clip(flat_e, 0, e_loc - 1)[:, None], axis=1)[:, 0]
+            bpos, jnp.clip(flat_e, 0, e_loc - 1)[:, None], axis=1
+        )[:, 0]
         bkeep = valid & (bpos_j < Ce)
-        bslot = jnp.where(bkeep, jnp.clip(flat_e, 0) * Ce + bpos_j,
-                          e_loc * Ce)
+        bslot = jnp.where(bkeep, jnp.clip(flat_e, 0) * Ce + bpos_j, e_loc * Ce)
         rowid = jnp.repeat(jnp.arange(N), k)
         bbuf = jnp.zeros((e_loc * Ce + 1, D), dtype)
         bbuf = bbuf.at[bslot].set(rows[rowid], mode="drop")
-        out_e = _expert_ffn(w_gate, w_up, w_down,
-                            bbuf[:-1].reshape(e_loc, Ce, D), dtype)
+        out_e = _expert_ffn(
+            w_gate, w_up, w_down, bbuf[:-1].reshape(e_loc, Ce, D), dtype
+        )
         # weighted combine back onto rows
         gathered = out_e.reshape(e_loc * Ce, D).at[bslot, :].get(
-            mode="fill", fill_value=0)
+            mode="fill", fill_value=0
+        )
         gathered = jnp.where(bkeep[:, None], gathered, 0).astype(jnp.float32)
         contrib = gathered * rwgt.reshape(-1)[:, None]
         row_out = jnp.zeros((N, D), jnp.float32).at[rowid].add(contrib)
-        back = jax.lax.all_to_all(row_out.reshape(tp, Cd, D).astype(dtype),
-                                  "model", 0, 0, tiled=False)
+        back = jax.lax.all_to_all(
+            row_out.reshape(tp, Cd, D).astype(dtype), "model", 0, 0, tiled=False
+        )
         ret = back.reshape(tp * Cd, D)
         # scatter rows back to tokens (sum over destination shards)
-        got = jnp.where(keep.reshape(-1)[:, None],
-                        ret.at[slot.reshape(-1), :].get(mode="fill",
-                                                        fill_value=0), 0)
+        got = jnp.where(
+            keep.reshape(-1)[:, None],
+            ret.at[slot.reshape(-1), :].get(mode="fill", fill_value=0),
+            0,
+        )
         out = got.reshape(T, tp, D).sum(axis=1).astype(dtype)
         aux = jax.lax.pmean(aux, "model")
         for a in dp:
@@ -308,23 +356,36 @@ def moe_ep_dedup(p, x, cfg, ctx: Ctx, *, expert_perm=None,
         return out.reshape(Bl, Sl, D), aux
 
     if expert_perm is None:
+
         def wrapped(x_loc, rw, wg, wu, wd):
             return local(x_loc, rw, wg, wu, wd, None)
-        f = shard_map(wrapped, mesh=mesh,
-                      in_specs=(PS(bspec, "model"), PS(), PS("model"),
-                                PS("model"), PS("model")),
-                      out_specs=(PS(bspec, "model"), PS()), check_vma=False)
+
+        f = shard_map(
+            wrapped,
+            mesh=mesh,
+            in_specs=(PS(bspec, "model"), PS(), PS("model"), PS("model"), PS("model")),
+            out_specs=(PS(bspec, "model"), PS()),
+            check_vma=False,
+        )
         out, aux = f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     else:
-        f = shard_map(local, mesh=mesh,
-                      in_specs=(PS(bspec, "model"), PS(), PS("model"),
-                                PS("model"), PS("model"), PS()),
-                      out_specs=(PS(bspec, "model"), PS()), check_vma=False)
-        out, aux = f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"],
-                     expert_perm)
+        f = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                PS(bspec, "model"),
+                PS(),
+                PS("model"),
+                PS("model"),
+                PS("model"),
+                PS(),
+            ),
+            out_specs=(PS(bspec, "model"), PS()),
+            check_vma=False,
+        )
+        out, aux = f(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], expert_perm)
     if cfg.n_shared_experts:
-        out = out + _shared_ffn(p["shared"], x.reshape(-1, D), x.dtype) \
-            .reshape(B, S, D)
+        out = out + _shared_ffn(p["shared"], x.reshape(-1, D), x.dtype).reshape(B, S, D)
     return out, aux
 
 
@@ -334,8 +395,9 @@ def moe_apply(p, x, cfg, ctx: Ctx, *, expert_perm=None):
     tp = ctx.mesh.shape.get("model", 1) if ctx.mesh is not None else 1
     if tp > 1 and x.shape[1] >= tp:
         if ctx.moe_dedup:
-            return moe_ep_dedup(p, x, cfg, ctx, expert_perm=expert_perm,
-                                dest_k=ctx.moe_dest_k)
+            return moe_ep_dedup(
+                p, x, cfg, ctx, expert_perm=expert_perm, dest_k=ctx.moe_dest_k
+            )
         return moe_ep(p, x, cfg, ctx, expert_perm=expert_perm)
     return moe_ref(p, x, cfg, ctx)
 
@@ -354,8 +416,9 @@ def coactivation_counts(idx: jax.Array, n_experts: int) -> jax.Array:
     return co - jnp.diag(jnp.diag(co))
 
 
-def dispatch_bytes(idx: jax.Array, expert_to_shard: jax.Array, d_model: int,
-                   bytes_per: int = 2) -> jax.Array:
+def dispatch_bytes(
+    idx: jax.Array, expert_to_shard: jax.Array, d_model: int, bytes_per: int = 2
+) -> jax.Array:
     """Bytes sent over the interconnect for routing table ``idx`` given an
     expert->shard placement, counting ONE send per (token, destination shard)
     (deduplicated dispatch).  The quantity the partition minimizes."""

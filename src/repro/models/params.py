@@ -31,8 +31,8 @@ class P:
     shape: tuple[int, ...]
     axes: tuple[str | None, ...]
     dtype: Any = jnp.float32
-    init: str = "normal"          # normal | zeros | ones | embed | small
-    scale: float | None = None     # override init stddev
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float | None = None  # override init stddev
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
@@ -52,8 +52,12 @@ def init_array(spec: P, key: jax.Array) -> jax.Array:
         return jnp.ones(spec.shape, spec.dtype)
     if spec.init == "embed":
         std = spec.scale if spec.scale is not None else 0.02
-        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
-    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(
+            spec.dtype
+        )
+    std = (
+        spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+    )
     if spec.init == "small":
         std *= 0.1
     return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
@@ -85,11 +89,13 @@ def init_params(tree, key: jax.Array, param_dtype=None):
 
 def eval_specs(tree, param_dtype=None):
     """ShapeDtypeStruct tree for `.lower()` — no allocation."""
+
     def make(spec: P):
         dt = spec.dtype
         if param_dtype is not None and jnp.issubdtype(jnp.dtype(dt), jnp.floating):
             dt = param_dtype
         return jax.ShapeDtypeStruct(spec.shape, dt)
+
     return _map_specs(tree, make)
 
 

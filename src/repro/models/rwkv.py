@@ -47,8 +47,7 @@ def rwkv_params(cfg) -> dict:
         # to the TP degree (40 -> 48 over 16 shards; see DESIGN.md)
         "w0": P((H, N), ("rwkv_heads", None), init="zeros"),
         "w_a": P((d, DECAY_LORA_DIM), ("embed_fsdp", None), init="small"),
-        "w_b": P((DECAY_LORA_DIM, H, N), (None, "rwkv_heads", None),
-                 init="small"),
+        "w_b": P((DECAY_LORA_DIM, H, N), (None, "rwkv_heads", None), init="small"),
         "u": P((H, N), ("rwkv_heads", None), init="zeros"),   # bonus
         "wr": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
         "wk": P((d, H, N), ("embed_fsdp", "rwkv_heads", None)),
@@ -81,13 +80,16 @@ def _rkvgw(p, x, x_prev, cfg, ctx: Ctx):
     k = jnp.einsum("bsd,dhn->bshn", mk, p["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhn->bshn", mv, p["wv"].astype(x.dtype))
     B, S, _ = x.shape
-    g = jax.nn.silu(jnp.einsum("bsd,dhn->bshn", mg, p["wg"].astype(x.dtype))
-                    .reshape(B, S, H * N))
+    g = jax.nn.silu(
+        jnp.einsum("bsd,dhn->bshn", mg, p["wg"].astype(x.dtype)).reshape(B, S, H * N)
+    )
     wraw = p["w0"].astype(jnp.float32) + jnp.einsum(
         "bsl,lhn->bshn",
-        jnp.tanh(jnp.einsum("bsd,dl->bsl", mw,
-                            p["w_a"].astype(x.dtype))).astype(jnp.float32),
-        p["w_b"].astype(jnp.float32))
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", mw, p["w_a"].astype(x.dtype))).astype(
+            jnp.float32
+        ),
+        p["w_b"].astype(jnp.float32),
+    )
     w = jnp.exp(-jnp.exp(wraw - 0.5))                 # (B,S,H,N) in (0,1)
     return r, k, v, g, w
 
@@ -99,8 +101,10 @@ def _group_norm(p, x, H, eps=64e-5):
     mu = xh.mean(axis=-1, keepdims=True)
     var = xh.var(axis=-1, keepdims=True)
     xh = (xh - mu) * jax.lax.rsqrt(var + eps)
-    out = xh.reshape(B, S, d) * p["ln_out_scale"].astype(jnp.float32) \
+    out = (
+        xh.reshape(B, S, d) * p["ln_out_scale"].astype(jnp.float32)
         + p["ln_out_bias"].astype(jnp.float32)
+    )
     return out
 
 
@@ -128,8 +132,9 @@ def rwkv6_block(p, x, cfg, ctx: Ctx, *, chunk: int = 32):
 
     pad = (-S) % chunk
     if pad:
-        rf, kf, vf, w = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                         for t in (rf, kf, vf, w))
+        rf, kf, vf, w = (
+            jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (rf, kf, vf, w)
+        )
         # padded decay of 1 keeps the state unchanged on pad steps
         w = w.at[:, S:].set(1.0)
     nck = (S + pad) // chunk
@@ -138,19 +143,16 @@ def rwkv6_block(p, x, cfg, ctx: Ctx, *, chunk: int = 32):
         rc, kc, vc, wc = inp                                  # (B,chunk,H,N)
         outs = []
         for t in range(chunk):
-            state, o = _wkv_step(state, rc[:, t], kc[:, t], vc[:, t],
-                                 wc[:, t], u)
+            state, o = _wkv_step(state, rc[:, t], kc[:, t], vc[:, t], wc[:, t], u)
             outs.append(o)
         return state, jnp.stack(outs, axis=1)
 
     s0 = jnp.zeros((B, H, N, N), jnp.float32)
-    xs = tuple(t.reshape(B, nck, chunk, H, N).swapaxes(0, 1)
-               for t in (rf, kf, vf, w))
+    xs = tuple(t.reshape(B, nck, chunk, H, N).swapaxes(0, 1) for t in (rf, kf, vf, w))
     state, os_ = jax.lax.scan(jax.checkpoint(chunk_step), s0, xs)
     o = os_.swapaxes(0, 1).reshape(B, S + pad, H * N)[:, :S]
     o = _group_norm(p, o, H).astype(x.dtype) * g
-    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, S, H, N),
-                     p["wo"].astype(x.dtype))
+    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, S, H, N), p["wo"].astype(x.dtype))
     cache = {"S": state, "x_last": x[:, -1]}
     return ctx.cs(out, "batch", "seq", "embed"), cache
 
@@ -161,13 +163,17 @@ def rwkv6_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     H, N = cfg.rwkv_n_heads, cfg.rwkv_head_size
     x_prev = cache["x_last"][:, None]
     r, k, v, g, w = _rkvgw(p, x, x_prev, cfg, ctx)
-    state, o = _wkv_step(cache["S"],
-                         r[:, 0].astype(jnp.float32),
-                         k[:, 0].astype(jnp.float32),
-                         v[:, 0].astype(jnp.float32),
-                         w[:, 0], p["u"].astype(jnp.float32))
+    state, o = _wkv_step(
+        cache["S"],
+        r[:, 0].astype(jnp.float32),
+        k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32),
+        w[:, 0],
+        p["u"].astype(jnp.float32),
+    )
     o = _group_norm(p, o.reshape(B, 1, H * N), H).astype(x.dtype) * g
-    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, 1, H, N),
-                     p["wo"].astype(x.dtype))
+    out = jnp.einsum("bshn,hnd->bsd", o.reshape(B, 1, H, N), p["wo"].astype(x.dtype))
     return ctx.cs(out, "batch", "seq", "embed"), {
-        "S": state, "x_last": x[:, 0].astype(cache["x_last"].dtype)}
+        "S": state,
+        "x_last": x[:, 0].astype(cache["x_last"].dtype),
+    }

@@ -31,8 +31,9 @@ def mamba_params(cfg) -> dict:
     dt_rank = math.ceil(d / 16)
     return {
         "in_proj": P((d, 2 * di), ("embed_fsdp", "mamba_inner")),
-        "conv_w": P((dc, di), (None, "mamba_inner"), init="normal",
-                    scale=1.0 / math.sqrt(dc)),
+        "conv_w": P(
+            (dc, di), (None, "mamba_inner"), init="normal", scale=1.0 / math.sqrt(dc)
+        ),
         "conv_b": P((di,), ("mamba_inner",), init="zeros"),
         "x_proj": P((di, dt_rank + 2 * ds), ("mamba_inner", None)),
         "dt_proj": P((dt_rank, di), (None, "mamba_inner")),
@@ -66,7 +67,9 @@ def _conv_causal(p, x):
     w = p["conv_w"].astype(x.dtype)
     out = x * w[-1]
     for i in range(1, dc):
-        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, : x.shape[1]]
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : -i or None][
+            :, : x.shape[1]
+        ]
         out = out + shifted * w[-1 - i]
     return out + p["conv_b"].astype(x.dtype)
 
@@ -110,23 +113,28 @@ def mamba_block(p, x, cfg, ctx: Ctx):
         return h, jnp.stack(ys, axis=1)
 
     h0 = jnp.zeros((B, di, ds), jnp.float32)
-    xcs = (xf.reshape(B, nck, chunk, di).swapaxes(0, 1),
-           dt.reshape(B, nck, chunk, di).swapaxes(0, 1),
-           b.reshape(B, nck, chunk, ds).swapaxes(0, 1),
-           c.reshape(B, nck, chunk, ds).swapaxes(0, 1))
+    xcs = (
+        xf.reshape(B, nck, chunk, di).swapaxes(0, 1),
+        dt.reshape(B, nck, chunk, di).swapaxes(0, 1),
+        b.reshape(B, nck, chunk, ds).swapaxes(0, 1),
+        c.reshape(B, nck, chunk, ds).swapaxes(0, 1),
+    )
     # checkpoint the chunk body: backward re-runs the recurrence instead of
     # stacking per-step (B, di, ds) residuals for the whole sequence
     h, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xcs)
     y = ys.swapaxes(0, 1).reshape(B, S + pad, di)[:, :S]
     y = y + xf[:, :S] * p["D"].astype(jnp.float32)
-    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
     out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
-    conv_cache = xz[:, max(S - (cfg.mamba_d_conv - 1), 0):, :di]
+    conv_cache = xz[:, max(S - (cfg.mamba_d_conv - 1), 0) :, :di]
     if S < cfg.mamba_d_conv - 1:
-        conv_cache = jnp.pad(conv_cache,
-                             ((0, 0), (cfg.mamba_d_conv - 1 - S, 0), (0, 0)))
+        conv_cache = jnp.pad(
+            conv_cache, ((0, 0), (cfg.mamba_d_conv - 1 - S, 0), (0, 0))
+        )
     return ctx.cs(out, "batch", "seq", "embed"), {
-        "h": h.astype(jnp.float32), "conv": conv_cache}
+        "h": h.astype(jnp.float32),
+        "conv": conv_cache,
+    }
 
 
 def mamba_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
@@ -139,7 +147,8 @@ def mamba_decode_block(p, x, cfg, ctx: Ctx, *, cache, pos):
     # causal conv over [cache, xs]
     w = p["conv_w"].astype(x.dtype)                           # (dc, di)
     hist = jnp.concatenate(
-        [cache["conv"], xs[:, None].astype(cache["conv"].dtype)], axis=1)
+        [cache["conv"], xs[:, None].astype(cache["conv"].dtype)], axis=1
+    )
     xs = jnp.einsum("bci,ci->bi", hist, w) + p["conv_b"].astype(x.dtype)
     xs = jax.nn.silu(xs)
     dt, b, c = _dt_bc(p, xs, cfg, dt_rank)                    # (B,di),(B,ds)

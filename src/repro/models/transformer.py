@@ -30,8 +30,9 @@ from ..configs.base import LayerSpec, ModelConfig
 # parameter trees
 # ---------------------------------------------------------------------------
 
-def layer_param_specs(spec: LayerSpec, cfg: ModelConfig, tp: int,
-                      cross: bool = False) -> dict:
+def layer_param_specs(
+    spec: LayerSpec, cfg: ModelConfig, tp: int, cross: bool = False
+) -> dict:
     d = cfg.d_model
     p: dict = {"mixer_norm": L.rmsnorm_params(d)}
     if spec.mixer == "attn":
@@ -58,9 +59,10 @@ def layer_param_specs(spec: LayerSpec, cfg: ModelConfig, tp: int,
 def _stack(tree, n: int):
     """Add a leading (n,) "layers" axis to every P in the tree."""
     return jax.tree.map(
-        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init,
-                    s.scale),
-        tree, is_leaf=is_spec)
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        tree,
+        is_leaf=is_spec,
+    )
 
 
 def model_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
@@ -76,11 +78,14 @@ def model_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
         # replicated so no rule can steal "model" from the vocab dim
         p["unembed"] = P((d, V), (None, "vocab"))
     if cfg.prefix:
-        p["prefix"] = {f"p{i}": layer_param_specs(s, cfg, tp,
-                                                  cross=cfg.enc_dec)
-                       for i, s in enumerate(cfg.prefix)}
-    unit = {f"l{i}": layer_param_specs(s, cfg, tp, cross=cfg.enc_dec)
-            for i, s in enumerate(cfg.unit)}
+        p["prefix"] = {
+            f"p{i}": layer_param_specs(s, cfg, tp, cross=cfg.enc_dec)
+            for i, s in enumerate(cfg.prefix)
+        }
+    unit = {
+        f"l{i}": layer_param_specs(s, cfg, tp, cross=cfg.enc_dec)
+        for i, s in enumerate(cfg.unit)
+    }
     p["unit"] = _stack(unit, cfg.n_units)
     if cfg.enc_dec:
         enc_unit = {"l0": layer_param_specs(LayerSpec("attn", "dense"), cfg, tp)}
@@ -95,12 +100,12 @@ def model_param_specs(cfg: ModelConfig, tp: int = 1) -> dict:
 
 def _mixer_full(spec, p, h, cfg, ctx, positions, causal):
     if spec.mixer == "attn":
-        out, kv = L.attn_block(p["mixer"], h, cfg, ctx, positions=positions,
-                               causal=causal)
+        out, kv = L.attn_block(
+            p["mixer"], h, cfg, ctx, positions=positions, causal=causal
+        )
         return out, {"k": kv[0], "v": kv[1]}
     if spec.mixer == "mla":
-        out, (lat, kr) = L.mla_block(p["mixer"], h, cfg, ctx,
-                                     positions=positions)
+        out, (lat, kr) = L.mla_block(p["mixer"], h, cfg, ctx, positions=positions)
         return out, {"latent": lat, "k_rope": kr}
     if spec.mixer == "mamba":
         return ssm.mamba_block(p["mixer"], h, cfg, ctx)
@@ -128,14 +133,26 @@ def _cross_attend(p, x, kv, cfg, ctx):
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
 
 
-def apply_layer(spec: LayerSpec, p, x, cfg, ctx: Ctx, *, positions,
-                causal=True, enc_out=None, expert_perm=None):
+def apply_layer(
+    spec: LayerSpec,
+    p,
+    x,
+    cfg,
+    ctx: Ctx,
+    *,
+    positions,
+    causal=True,
+    enc_out=None,
+    expert_perm=None,
+):
     """Full-sequence layer.  Returns (x, cache, aux)."""
     if ctx.fsdp_gather:
         # ZeRO-3: gather this layer's dense weights (expert weights stay
         # sharded — the EP all_to_all owns their distribution)
-        p = {k: (ctx.gather_params(v) if k != "ffn" or spec.ffn == "dense"
-                 else v) for k, v in p.items()}
+        p = {
+            k: (ctx.gather_params(v) if k != "ffn" or spec.ffn == "dense" else v)
+            for k, v in p.items()
+        }
     h = L.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
     out, cache = _mixer_full(spec, p, h, cfg, ctx, positions, causal)
     x = x + out
@@ -153,23 +170,26 @@ def apply_layer(spec: LayerSpec, p, x, cfg, ctx: Ctx, *, positions,
     return x + out, cache, aux
 
 
-def apply_layer_decode(spec: LayerSpec, p, x, cfg, ctx: Ctx, *, cache, pos,
-                       expert_perm=None):
+def apply_layer_decode(
+    spec: LayerSpec, p, x, cfg, ctx: Ctx, *, cache, pos, expert_perm=None
+):
     """One-token layer step.  Returns (x, new_cache, aux)."""
     self_cache = cache["self"] if "cross" in p else cache
     h = L.rmsnorm(p["mixer_norm"], x, cfg.norm_eps)
     if spec.mixer == "attn":
-        out, nc = L.attn_decode_block(p["mixer"], h, cfg, ctx,
-                                      cache=self_cache, pos=pos)
+        out, nc = L.attn_decode_block(
+            p["mixer"], h, cfg, ctx, cache=self_cache, pos=pos
+        )
     elif spec.mixer == "mla":
-        out, nc = L.mla_decode_block(p["mixer"], h, cfg, ctx,
-                                     cache=self_cache, pos=pos)
+        out, nc = L.mla_decode_block(p["mixer"], h, cfg, ctx, cache=self_cache, pos=pos)
     elif spec.mixer == "mamba":
-        out, nc = ssm.mamba_decode_block(p["mixer"], h, cfg, ctx,
-                                         cache=self_cache, pos=pos)
+        out, nc = ssm.mamba_decode_block(
+            p["mixer"], h, cfg, ctx, cache=self_cache, pos=pos
+        )
     elif spec.mixer == "rwkv6":
-        out, nc = rwkv.rwkv6_decode_block(p["mixer"], h, cfg, ctx,
-                                          cache=self_cache, pos=pos)
+        out, nc = rwkv.rwkv6_decode_block(
+            p["mixer"], h, cfg, ctx, cache=self_cache, pos=pos
+        )
     else:
         raise ValueError(spec.mixer)
     x = x + out
@@ -196,9 +216,17 @@ def _encoder(params, enc_embeds, cfg, ctx: Ctx):
     positions = jnp.arange(x.shape[1])
 
     def body(x, unit_p):
-        y, _, _ = apply_layer(LayerSpec("attn", "dense"), unit_p["l0"], x,
-                              cfg, ctx, positions=positions, causal=False)
+        y, _, _ = apply_layer(
+            LayerSpec("attn", "dense"),
+            unit_p["l0"],
+            x,
+            cfg,
+            ctx,
+            positions=positions,
+            causal=False,
+        )
         return y, None
+
     fn = jax.checkpoint(body) if ctx.remat else body
     x, _ = jax.lax.scan(fn, x, params["enc_unit"])
     return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
@@ -232,8 +260,15 @@ def forward(params, batch, cfg: ModelConfig, ctx: Ctx, *, collect_cache=False):
     if cfg.prefix:
         caches["prefix"] = {}
         for i, spec in enumerate(cfg.prefix):
-            x, c, aux = apply_layer(spec, params["prefix"][f"p{i}"], x, cfg,
-                                    ctx, positions=positions, enc_out=enc_out)
+            x, c, aux = apply_layer(
+                spec,
+                params["prefix"][f"p{i}"],
+                x,
+                cfg,
+                ctx,
+                positions=positions,
+                enc_out=enc_out,
+            )
             aux_total = aux_total + aux
             if collect_cache:
                 caches["prefix"][f"p{i}"] = c
@@ -242,16 +277,16 @@ def forward(params, batch, cfg: ModelConfig, ctx: Ctx, *, collect_cache=False):
         x, aux_total = carry
         unit_caches = {}
         for i, spec in enumerate(cfg.unit):
-            x, c, aux = apply_layer(spec, unit_p[f"l{i}"], x, cfg, ctx,
-                                    positions=positions, enc_out=enc_out)
+            x, c, aux = apply_layer(
+                spec, unit_p[f"l{i}"], x, cfg, ctx, positions=positions, enc_out=enc_out
+            )
             aux_total = aux_total + aux
             unit_caches[f"l{i}"] = c
         ys = unit_caches if collect_cache else None
         return (x, aux_total), ys
 
     fn = jax.checkpoint(unit_body) if ctx.remat else unit_body
-    (x, aux_total), unit_caches = jax.lax.scan(fn, (x, aux_total),
-                                               params["unit"])
+    (x, aux_total), unit_caches = jax.lax.scan(fn, (x, aux_total), params["unit"])
     if collect_cache:
         caches["unit"] = unit_caches
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -308,8 +343,7 @@ def lm_loss(params, batch, cfg: ModelConfig, ctx: Ctx):
         pad = jnp.full((labels.shape[0], P_), -100, labels.dtype)
         labels = jnp.concatenate([pad, labels], axis=1)
     mask = (labels >= 0).astype(jnp.float32)
-    loss, n_tok = chunked_ce(params, hidden, jnp.maximum(labels, 0), mask,
-                             cfg, ctx)
+    loss, n_tok = chunked_ce(params, hidden, jnp.maximum(labels, 0), mask, cfg, ctx)
     total = loss + cfg.router_aux_coef * aux
     return total, {"ce": loss, "aux": aux, "n_tok": n_tok}
 
@@ -336,7 +370,8 @@ def prefill(params, batch, cfg, ctx: Ctx, *, cache_len: int | None = None):
     if cache_len is not None:
         assert cache_len >= S, (
             f"cache_len {cache_len} < prompt length {S} (incl. modality "
-            f"prefix tokens)")
+            f"prefix tokens)"
+        )
         if cache_len > S:
             caches = _grow_caches(caches, cache_len - S)
     logits = logits_for(params, hidden[:, -1], cfg, ctx)
@@ -346,6 +381,7 @@ def prefill(params, batch, cfg, ctx: Ctx, *, cache_len: int | None = None):
 def _grow_caches(caches, extra: int):
     """Pad sequence-indexed cache buffers to make room for decode steps.
     Cross-attention caches (fixed encoder length) are left untouched."""
+
     def grow_one(leaf, name):
         if name in ("k", "v"):          # (..., S, K, hd)
             pad = [(0, 0)] * leaf.ndim
@@ -359,15 +395,22 @@ def _grow_caches(caches, extra: int):
 
     def walk(tree):
         if isinstance(tree, dict):
-            return {k: (v if k == "cross" else
-                        (grow_one(v, k) if not isinstance(v, dict) else walk(v)))
-                    for k, v in tree.items()}
+            return {
+                k: (
+                    v
+                    if k == "cross"
+                    else (grow_one(v, k) if not isinstance(v, dict) else walk(v))
+                )
+                for k, v in tree.items()
+            }
         return tree
+
     return walk(caches)
 
 
-def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx,
-                *, expert_perm=None):
+def decode_step(
+    params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx, *, expert_perm=None
+):
     """One decode step.  tokens: (B,) int32; pos: scalar int32 (write index,
     same for the whole batch — continuous batching keeps per-slot offsets in
     the serving layer).  Returns (logits (B,V), new cache)."""
@@ -376,9 +419,15 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx,
     if cfg.prefix:
         for i, spec in enumerate(cfg.prefix):
             x, nc, _ = apply_layer_decode(
-                spec, params["prefix"][f"p{i}"], x, cfg, ctx,
-                cache=cache["prefix"][f"p{i}"], pos=pos,
-                expert_perm=expert_perm)
+                spec,
+                params["prefix"][f"p{i}"],
+                x,
+                cfg,
+                ctx,
+                cache=cache["prefix"][f"p{i}"],
+                pos=pos,
+                expert_perm=expert_perm,
+            )
             cache = dict(cache)
             cache["prefix"] = dict(cache["prefix"])
             cache["prefix"][f"p{i}"] = nc
@@ -387,14 +436,20 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ctx: Ctx,
         unit_p, unit_cache = inp
         new_caches = {}
         for i, spec in enumerate(cfg.unit):
-            x, nc, _ = apply_layer_decode(spec, unit_p[f"l{i}"], x, cfg, ctx,
-                                          cache=unit_cache[f"l{i}"], pos=pos,
-                                          expert_perm=expert_perm)
+            x, nc, _ = apply_layer_decode(
+                spec,
+                unit_p[f"l{i}"],
+                x,
+                cfg,
+                ctx,
+                cache=unit_cache[f"l{i}"],
+                pos=pos,
+                expert_perm=expert_perm,
+            )
             new_caches[f"l{i}"] = nc
         return x, new_caches
 
-    x, new_unit_caches = jax.lax.scan(unit_body, x,
-                                      (params["unit"], cache["unit"]))
+    x, new_unit_caches = jax.lax.scan(unit_body, x, (params["unit"], cache["unit"]))
     cache = dict(cache)
     cache["unit"] = new_unit_caches
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -414,38 +469,77 @@ def cache_specs(cfg: ModelConfig, B: int, S: int, tp: int = 1) -> dict:
 
     def one(spec: LayerSpec) -> dict:
         if spec.mixer == "attn":
-            c = {"k": P((B, S, K, hd), ("batch", "cache_seq", "kv_heads",
-                                        "head_dim"), jnp.bfloat16, "zeros"),
-                 "v": P((B, S, K, hd), ("batch", "cache_seq", "kv_heads",
-                                        "head_dim"), jnp.bfloat16, "zeros")}
+            c = {
+                "k": P(
+                    (B, S, K, hd),
+                    ("batch", "cache_seq", "kv_heads", "head_dim"),
+                    jnp.bfloat16,
+                    "zeros",
+                ),
+                "v": P(
+                    (B, S, K, hd),
+                    ("batch", "cache_seq", "kv_heads", "head_dim"),
+                    jnp.bfloat16,
+                    "zeros",
+                ),
+            }
         elif spec.mixer == "mla":
-            c = {"latent": P((B, S, cfg.kv_lora_rank),
-                             ("batch", "cache_seq", None), jnp.bfloat16,
-                             "zeros"),
-                 "k_rope": P((B, S, cfg.qk_rope_dim),
-                             ("batch", "cache_seq", None), jnp.bfloat16,
-                             "zeros")}
+            c = {
+                "latent": P(
+                    (B, S, cfg.kv_lora_rank),
+                    ("batch", "cache_seq", None),
+                    jnp.bfloat16,
+                    "zeros",
+                ),
+                "k_rope": P(
+                    (B, S, cfg.qk_rope_dim),
+                    ("batch", "cache_seq", None),
+                    jnp.bfloat16,
+                    "zeros",
+                ),
+            }
         elif spec.mixer == "mamba":
-            c = {"h": P((B, di, ds), ("batch", "mamba_inner", None),
-                        jnp.float32, "zeros"),
-                 "conv": P((B, cfg.mamba_d_conv - 1, di),
-                           ("batch", None, "mamba_inner"), jnp.bfloat16,
-                           "zeros")}
+            c = {
+                "h": P(
+                    (B, di, ds), ("batch", "mamba_inner", None), jnp.float32, "zeros"
+                ),
+                "conv": P(
+                    (B, cfg.mamba_d_conv - 1, di),
+                    ("batch", None, "mamba_inner"),
+                    jnp.bfloat16,
+                    "zeros",
+                ),
+            }
         elif spec.mixer == "rwkv6":
-            c = {"S": P((B, H6, N6, N6), ("batch", "rwkv_heads", None, None),
-                        jnp.float32, "zeros"),
-                 "x_last": P((B, cfg.d_model), ("batch", None), jnp.bfloat16,
-                             "zeros")}
+            c = {
+                "S": P(
+                    (B, H6, N6, N6),
+                    ("batch", "rwkv_heads", None, None),
+                    jnp.float32,
+                    "zeros",
+                ),
+                "x_last": P((B, cfg.d_model), ("batch", None), jnp.bfloat16, "zeros"),
+            }
         else:
             raise ValueError(spec.mixer)
         if cfg.enc_dec:
-            c = {"self": c,
-                 "cross": {"k": P((B, cfg.encoder_seq, K, hd),
-                                  ("batch", None, "kv_heads", "head_dim"),
-                                  jnp.bfloat16, "zeros"),
-                           "v": P((B, cfg.encoder_seq, K, hd),
-                                  ("batch", None, "kv_heads", "head_dim"),
-                                  jnp.bfloat16, "zeros")}}
+            c = {
+                "self": c,
+                "cross": {
+                    "k": P(
+                        (B, cfg.encoder_seq, K, hd),
+                        ("batch", None, "kv_heads", "head_dim"),
+                        jnp.bfloat16,
+                        "zeros",
+                    ),
+                    "v": P(
+                        (B, cfg.encoder_seq, K, hd),
+                        ("batch", None, "kv_heads", "head_dim"),
+                        jnp.bfloat16,
+                        "zeros",
+                    ),
+                },
+            }
         return c
 
     out: dict = {}

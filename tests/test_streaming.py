@@ -1,0 +1,428 @@
+"""Streaming-channel invariants: chunked transfers, backpressure, the
+stage-balance partition objective, and the executor's chunk-wise pulls.
+
+Plain pytest — must run without hypothesis (the tier-1 floor).  Randomized
+coverage uses the repo's deterministic LCG over seeds instead.
+"""
+
+import jax
+import pytest
+
+from repro.core.comm import CommEngine, HierTopology, Topology
+from repro.core.cost import LEAF_NIC, POD_UPLINK, RACK_UPLINK, Link
+from repro.core.executor import JaxExecutor
+from repro.core.graph import TaskGraph, generate_dag
+from repro.core.partition import _lcg, partition_taskgraph
+from repro.core.schedulers import make_policy
+from repro.core.simulate import Platform, Processor, Sim, simulate
+
+DEV = jax.devices()[0]
+KV = 1 << 20
+GB = Link("gb", bw=1e9)  # 1 GB/s, zero latency: 1e9 bytes take 1000 ms
+
+
+# -- channel mechanics ---------------------------------------------------------
+
+
+def test_open_stream_books_chunk0_and_counts_once():
+    eng = CommEngine(Topology.dedicated(GB))
+    ch = eng.open_stream("b", 0, 1, 8 * 10**7, now=0.0, chunk_bytes=10**7)
+    assert ch.n_chunks == 8
+    assert eng.n_transfers == 1 and eng.n_streamed == 1
+    assert eng.bytes_transferred == 8 * 10**7
+    # only chunk 0 is on the wire before drain
+    assert len(eng.transfers) == 1 and eng.transfers[0].kind == "stream"
+    assert ch.first_ready == pytest.approx(10.0)  # 10 MB over 1 GB/s
+
+
+def test_channel_total_wire_time_equals_bulk():
+    """Chunk durations are a proportional split of the bulk bottleneck
+    duration — a channel never holds the wire longer than the bulk copy."""
+    lat = Link("lat", bw=1e9, latency_ms=5.0)
+    bulk = CommEngine(Topology.dedicated(lat))
+    bulk_finish = bulk.fetch("b", 0, 1, 10**8, now=0.0)
+    eng = CommEngine(Topology.dedicated(lat))
+    ch = eng.open_stream("b", 0, 1, 10**8, now=0.0, chunk_bytes=10**7, depth=0)
+    finish, arrival_last = ch.drain(ch.first_ready, 0.0)
+    assert arrival_last == pytest.approx(bulk_finish)
+    assert sum(t.finish - t.start for t in eng.transfers) == pytest.approx(
+        bulk.busy_ms
+    )
+    assert ch.first_ready < bulk_finish  # the consumer may start earlier
+
+
+def test_same_node_stream_is_none_and_bad_chunk_raises():
+    eng = CommEngine(Topology.dedicated(GB))
+    assert eng.open_stream("b", 1, 1, 10**7, now=0.0, chunk_bytes=10**6) is None
+    with pytest.raises(ValueError):
+        eng.open_stream("b", 0, 1, 10**7, now=0.0, chunk_bytes=0)
+
+
+def test_pro_rata_readies_overlap_producer_compute():
+    """With a producer compute window, chunk i goes on the wire at
+    src_start + (i+1)/n * span — chunk 0 long before the producer finishes."""
+    eng = CommEngine(Topology.dedicated(GB))
+    ch = eng.open_stream(
+        "b", 0, 1, 4 * 10**7, now=0.0, src_start=0.0, src_ready=100.0,
+        chunk_bytes=10**7,
+    )
+    assert ch.readies == pytest.approx([25.0, 50.0, 75.0, 100.0])
+    assert ch.first_ready == pytest.approx(35.0)  # 25 + 10 ms wire
+    # degenerate window: everything ready at src_ready
+    ch2 = eng.open_stream(
+        "c", 0, 1, 4 * 10**7, now=0.0, src_start=100.0, src_ready=100.0,
+        chunk_bytes=10**7,
+    )
+    assert ch2.readies == [100.0] * 4
+
+
+def test_backpressure_stalls_counted_and_unbounded_never_stalls():
+    """A slow consumer with a bounded window stalls chunks (producer-side
+    backpressure); depth=0 drains the same channel stall-free."""
+    def drained(depth):
+        eng = CommEngine(Topology.dedicated(GB))
+        ch = eng.open_stream(
+            "b", 0, 1, 8 * 10**7, now=0.0, chunk_bytes=10**7, depth=depth
+        )
+        # consumer computes 800 ms over 8 chunks = 100 ms/chunk, wire is
+        # 10 ms/chunk: arrivals outpace consumption by 90 ms per slot
+        finish, _ = ch.drain(ch.first_ready, 800.0)
+        return eng, ch, finish
+
+    eng_b, ch_b, fin_b = drained(depth=2)
+    eng_u, ch_u, fin_u = drained(depth=0)
+    assert ch_b.n_stalled > 0 and eng_b.n_stalled_chunks == ch_b.n_stalled
+    assert ch_b.stall_ms > 0 and eng_b.stall_ms == pytest.approx(ch_b.stall_ms)
+    assert ch_u.n_stalled == 0 and eng_u.n_stalled_chunks == 0
+    assert fin_b >= fin_u - 1e-9  # backpressure can only delay the finish
+    # stalled or not, all chunks arrive and wire time is conserved
+    assert len(eng_b.transfers) == len(eng_u.transfers) == 8
+    assert sum(eng_b.lane_busy_ms().values()) == pytest.approx(eng_b.busy_ms)
+
+
+# -- simulator: streaming vs bulk ----------------------------------------------
+
+
+def _pair_chain_platform(n_chains: int, lanes: int = 2) -> Platform:
+    link = Link("xclass", bw=2e9, latency_ms=0.01)
+    procs = []
+    for c in range(n_chains):
+        procs.append(Processor(f"a{c}0", f"a{c}", 2 * c))
+        procs.append(Processor(f"b{c}0", f"b{c}", 2 * c + 1))
+    return Platform(
+        procs, link=link, host_node=0,
+        topology=Topology.dedicated(link, lanes=lanes),
+    )
+
+
+def _pair_chains(n_chains: int, length: int, nbytes: int) -> TaskGraph:
+    """One class pair per chain: every hop is a critical-path cut edge."""
+    g = TaskGraph()
+    classes = [f"{s}{c}" for c in range(n_chains) for s in "ab"]
+    for c in range(n_chains):
+        prev = None
+        for i in range(length):
+            cheap = f"a{c}" if i % 2 == 0 else f"b{c}"
+            costs = {cls: (4.0 if cls == cheap else 40.0) for cls in classes}
+            g.add(f"c{c}.k{i}", op="decode", costs=costs, out_bytes=nbytes)
+            if prev is not None:
+                g.add_edge(prev, f"c{c}.k{i}", nbytes=nbytes)
+            prev = f"c{c}.k{i}"
+    g.validate()
+    return g
+
+
+def test_streaming_beats_bulk_on_staged_chains():
+    g = _pair_chains(3, 5, 8 << 20)  # 8 MiB over 2 GB/s = 4 ms = compute
+    plat = _pair_chain_platform(3)
+    bulk = simulate(g, make_policy("heft"), plat, overlap=True)
+    streamed = simulate(
+        g, make_policy("heft"), plat, streaming=True,
+        chunk_bytes=(8 << 20) // 32, stream_depth=4,
+    )
+    assert streamed.n_streamed > 0
+    assert streamed.makespan_ms < bulk.makespan_ms * 0.9
+    assert streamed.bytes_transferred == bulk.bytes_transferred
+    assert streamed.stream_busy_ms > 0
+    assert sum(streamed.lane_busy_ms.values()) == pytest.approx(
+        streamed.transfer_busy_ms
+    )
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_streaming_never_loses_and_depth_orders_makespan(seed):
+    """Randomized DAGs: bounded-depth streaming makespan <= bulk prefetch
+    makespan, and >= the infinite-depth (depth=0) channel's."""
+    rnd = _lcg(seed)
+    g = generate_dag(16 + rnd(8), op="decode", seed=seed, include_source=False)
+    for i, k in enumerate(g.nodes.values()):
+        cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+        k.costs = {cheap: 2.0 + rnd(40) / 10.0, dear: 20.0 + rnd(100) / 10.0}
+        k.out_bytes = (1 + rnd(8)) * (KV // 2)
+    for e in g.edges:
+        g._edges[e.src, e.dst] = type(e)(e.src, e.dst, g.nodes[e.src].out_bytes, 1)
+    link = Link("ab", bw=2e9, latency_ms=0.01)
+    plat = Platform(
+        [Processor("a0", "a", 0), Processor("b0", "b", 1)],
+        link=link, host_node=0, topology=Topology.dedicated(link, lanes=2),
+    )
+    bulk = simulate(g, make_policy("heft"), plat, overlap=True)
+    bounded = simulate(
+        g, make_policy("heft"), plat, streaming=True,
+        chunk_bytes=KV // 16, stream_depth=2,
+    )
+    unbounded = simulate(
+        g, make_policy("heft"), plat, streaming=True,
+        chunk_bytes=KV // 16, stream_depth=0,
+    )
+    assert bounded.makespan_ms <= bulk.makespan_ms + 1e-6
+    assert bounded.makespan_ms >= unbounded.makespan_ms - 1e-6
+    assert bounded.bytes_transferred == bulk.bytes_transferred
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_lane_conservation_with_channels_on_hierarchy(seed):
+    """Chunked bookings on a shared-uplink hierarchy conserve wire time:
+    per-lane sums equal the engine total, and no lane overlaps itself."""
+    rnd = _lcg(100 + seed)
+    g = generate_dag(14 + rnd(8), op="decode", seed=seed, include_source=False)
+    for i, k in enumerate(g.nodes.values()):
+        cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+        k.costs = {cheap: 2.0 + rnd(30) / 10.0, dear: 15.0 + rnd(60) / 10.0}
+        k.out_bytes = (1 + rnd(4)) * KV
+    for e in g.edges:
+        g._edges[e.src, e.dst] = type(e)(e.src, e.dst, g.nodes[e.src].out_bytes, 1)
+    topo = HierTopology(
+        leaf=LEAF_NIC, rack=RACK_UPLINK, pod=POD_UPLINK,
+        node_rack={0: "r0", 1: "r1"}, rack_pod={"r0": "p0", "r1": "p1"},
+    )
+    plat = Platform(
+        [Processor("a0", "a", 0), Processor("b0", "b", 1)],
+        host_node=0, topology=topo,
+    )
+    r = simulate(
+        g, make_policy("heft"), plat, streaming=True,
+        chunk_bytes=KV // 8, stream_depth=3,
+    )
+    assert r.n_streamed > 0
+    assert sum(r.lane_busy_ms.values()) == pytest.approx(r.transfer_busy_ms)
+    # raw-engine audit: random channels, per-lane intervals must not overlap
+    eng = CommEngine(topo)
+    rnd2 = _lcg(seed)
+    for i in range(60):
+        src = rnd2(2)
+        ch = eng.open_stream(
+            f"b{i}", src, 1 - src, (1 + rnd2(8)) * 10**6,
+            now=rnd2(100) / 3.0, chunk_bytes=10**5, depth=1 + rnd2(3),
+        )
+        if ch is not None:
+            ch.drain(ch.first_ready + rnd2(20) / 10.0, rnd2(50) / 10.0)
+    for lane, ts in eng.lane_log().items():
+        last = -1.0
+        for t in ts:
+            assert t.start >= last - 1e-9, f"lane {lane} overlaps itself"
+            last = t.finish
+    assert sum(eng.lane_busy_ms().values()) == pytest.approx(eng.busy_ms)
+
+
+def test_streaming_false_is_bit_identical():
+    """The opt-out path books exactly what the pre-streaming engine did."""
+    g = _pair_chains(2, 4, 4 << 20)
+    plat = _pair_chain_platform(2)
+    a = simulate(g, make_policy("heft"), plat, overlap=True)
+    b = simulate(g, make_policy("heft"), plat, overlap=True, streaming=False)
+    assert a.makespan_ms == b.makespan_ms
+    assert a.trace == b.trace and a.transfers == b.transfers
+    assert b.n_streamed == 0 and b.n_stalled_chunks == 0
+
+
+# -- dmda ETA: channel-aware missing_input_ms ----------------------------------
+
+
+def test_missing_input_ms_charges_remaining_eta_not_full_transfer():
+    """Streaming: a block with chunks already in flight toward a node costs
+    the dmda ETA only the remaining arrival gap, not a re-priced full copy."""
+    g = TaskGraph()
+    g.add("p", op="decode", costs={"a": 4.0, "b": 40.0}, out_bytes=8 * KV)
+    g.add("q", op="decode", costs={"a": 40.0, "b": 4.0})
+    g.add_edge("p", "q", nbytes=8 * KV)
+    g.validate()
+    link = Link("ab", bw=1e9, latency_ms=0.0)
+    plat = Platform(
+        [Processor("a0", "a", 0), Processor("b0", "b", 1)],
+        link=link, host_node=0, topology=Topology.dedicated(link),
+    )
+    sim = Sim(g, plat, streaming=True, chunk_bytes=KV)
+    full = link.transfer_ms(8 * KV)
+    # an in-flight channel: the copy lands at t=full, sim clock still 0
+    sim.valid["p"] = {0: 0.0, 1: full}
+    assert sim.missing_input_ms("q", 1) == pytest.approx(full)
+    sim.now = full * 0.75  # three quarters drained: only the gap remains
+    assert sim.missing_input_ms("q", 1) == pytest.approx(full * 0.25)
+    sim.now = full + 1.0  # landed: free
+    assert sim.missing_input_ms("q", 1) == 0.0
+    # bulk semantics unchanged: a valid copy elsewhere re-prices the wire
+    sim_bulk = Sim(g, plat)
+    sim_bulk.valid["p"] = {0: 0.0}
+    assert sim_bulk.missing_input_ms("q", 1) == pytest.approx(full)
+
+
+# -- adaptive prefetch depth ---------------------------------------------------
+
+
+def test_adaptive_depth_raises_on_idle_and_lowers_on_contention():
+    eng = CommEngine(
+        Topology.dedicated(GB), throttle=True, adaptive_depth=True,
+        base_depth=1, max_depth=3, idle_window_ms=5.0,
+    )
+    # idle tier: repeated queries at advancing clocks earn depth steps
+    assert eng.prefetch_depth_for(0, 1, 5.0) == 2
+    assert eng.n_depth_adjust == 1
+    assert eng.prefetch_depth_for(0, 1, 5.0) == 2  # window not re-elapsed
+    assert eng.prefetch_depth_for(0, 1, 10.0) == 3
+    assert eng.prefetch_depth_for(0, 1, 100.0) == 3  # capped at max_depth
+    # contention: a throttled prefetch lowers the blocking tier's depth
+    eng.fetch("x", 0, 1, 10**9, now=0.0)  # lane busy until 1000 ms
+    assert eng.fetch("y", 0, 1, 10**7, now=0.0, kind="prefetch") is None
+    assert eng.prefetch_depth_for(0, 1, 100.0) == 2
+    assert eng.n_depth_adjust >= 3
+
+
+def test_adaptive_depth_off_is_constant():
+    eng = CommEngine(Topology.dedicated(GB), base_depth=2)
+    assert eng.prefetch_depth_for(0, 1, 0.0) == 2
+    assert eng.prefetch_depth_for(0, 1, 1e9) == 2
+    assert eng.n_depth_adjust == 0
+
+
+def test_simulate_adaptive_depth_counter_surfaces():
+    # shared-worker chains with TINY transfers: queued siblings give the
+    # prefetcher real candidates while the link tier sits idle past the
+    # window, so querying the per-tier depth earns raises
+    g = TaskGraph()
+    for c in range(6):
+        prev = None
+        for i in range(6):
+            cheap, dear = ("a", "b") if i % 2 == 0 else ("b", "a")
+            g.add(
+                f"c{c}.k{i}", op="decode",
+                costs={cheap: 8.0, dear: 80.0}, out_bytes=1 << 16,
+            )
+            if prev is not None:
+                g.add_edge(prev, f"c{c}.k{i}", nbytes=1 << 16)
+            prev = f"c{c}.k{i}"
+    g.validate()
+    link = Link("ab", bw=2e9, latency_ms=0.01)
+    plat = Platform(
+        [Processor("a0", "a", 0), Processor("b0", "b", 1)],
+        link=link, host_node=0, topology=Topology.dedicated(link, lanes=2),
+    )
+    r = simulate(g, make_policy("heft"), plat, overlap=True, adaptive_depth=True)
+    assert r.n_depth_adjust > 0
+    base = simulate(g, make_policy("heft"), plat, overlap=True)
+    assert base.n_depth_adjust == 0
+
+
+# -- interval (stage-balance) partition objective ------------------------------
+
+
+def test_interval_objective_balances_stage_plus_cut():
+    """A chain with one heavy node: the cut objective happily leaves the
+    heavy stage saturated; the interval objective must not produce a WORSE
+    max stage load, and both place every node."""
+    g = TaskGraph()
+    prev = None
+    for i in range(12):
+        w = 50.0 if i == 0 else 4.0
+        g.add(f"k{i}", op="decode", costs={"a": w, "b": w}, out_bytes=KV)
+        if prev is not None:
+            g.add_edge(prev, f"k{i}", nbytes=KV)
+        prev = f"k{i}"
+    g.validate()
+    targets = {"a": 0.5, "b": 0.5}
+    cut = partition_taskgraph(g, targets, weight_source="min", seed=3)
+    interval = partition_taskgraph(
+        g, targets, weight_source="min", seed=3, objective="interval"
+    )
+    assert set(interval) == set(cut) == set(g.nodes)
+
+    def stage_max(asg, edge_ms):
+        loads = {"a": 0.0, "b": 0.0}
+        for n, cls in asg.items():
+            loads[cls] += g.nodes[n].costs[cls]
+        for e in g.edges:
+            if asg[e.src] != asg[e.dst]:
+                loads[asg[e.src]] += edge_ms
+                loads[asg[e.dst]] += edge_ms
+        return max(loads.values())
+
+    edge_ms = 2.0
+    assert stage_max(interval, edge_ms) <= (
+        stage_max(cut, edge_ms) + 1e-6
+    )
+
+
+def test_incremental_gp_exposes_streaming_knob():
+    pol = make_policy("incremental-gp", streaming=True, chunk_bytes=KV)
+    g = _pair_chains(1, 4, 2 * KV)
+    plat = _pair_chain_platform(1)
+    pol.prepare(g, plat)
+    assert pol.partitioner.objective == "interval"
+    assert set(pol.assignment) == set(g.nodes)
+    pol_off = make_policy("incremental-gp")
+    pol_off.prepare(g, plat)
+    assert pol_off.partitioner.objective == "cut"
+
+
+# -- executor: chunk-wise pulls ------------------------------------------------
+
+
+def _exec_session(streaming: bool, **kw):
+    g = TaskGraph()
+    g.add("a", op="k", costs={}, out_bytes=KV)
+    g.add("b", op="k", costs={}, out_bytes=KV)
+    g.add("c", op="k", costs={}, out_bytes=KV)
+    g.add_edge("a", "b", nbytes=KV)
+    g.add_edge("b", "c", nbytes=KV)
+    for k in g.nodes.values():
+        k.fn = lambda *xs: xs[0] + 1.0
+    inputs = {"a/in": jax.numpy.ones((64, 64))}
+    ex = JaxExecutor({"g0": DEV, "g1": DEV})
+    comm = CommEngine(Topology.dedicated(GB))
+    s = ex.session(
+        g, {"a": "g0", "b": "g1", "c": "g0"}, inputs,
+        comm=comm, group_nodes={"g0": 0, "g1": 1}, time_kernels=True,
+        streaming=streaming, **kw,
+    )
+    return s, comm
+
+
+def test_exec_session_streams_demand_pulls_bit_identically():
+    s0, _ = _exec_session(False)
+    s0.run_all()
+    r0 = s0.result()
+    s1, comm = _exec_session(True, chunk_bytes=KV // 8, stream_depth=2)
+    s1.run_all()
+    r1 = s1.result()
+    assert r1.n_streamed == 2  # a->b and b->c crossed groups
+    assert comm.kind_counts.get("stream") == 2
+    assert r1.bytes_transferred == r0.bytes_transferred
+    for k in r0.outputs:
+        assert (r0.outputs[k] == r1.outputs[k]).all()  # values unchanged
+    assert sum(r1.lane_busy_ms.values()) == pytest.approx(comm.busy_ms)
+
+
+def test_exec_session_fused_streaming_matches_unfused_outputs():
+    s0, _ = _exec_session(True, chunk_bytes=KV // 8)
+    s0.run_all()
+    r0 = s0.result()
+    s1, _ = _exec_session(True, chunk_bytes=KV // 8)
+    s1.fused = True
+    from repro.core.executor import SuperStepCache
+
+    s1.cache = SuperStepCache()
+    s1.run_all()
+    r1 = s1.result()
+    assert r1.fused_steps > 0 and r1.n_streamed == r0.n_streamed
+    for k in r0.outputs:
+        assert (r0.outputs[k] == r1.outputs[k]).all()
