@@ -1,0 +1,208 @@
+"""Async multi-group waves vs serialized fused dispatch: the k-group sweep.
+
+The workload is the regime the graph-partition policy is supposed to expose
+as parallelism: ``k`` independent kernel chains, one per partition group,
+each seeded by its own host entry input.  The serialized fused executor
+(PR 7) dispatches one group-step at a time with a barrier between them, so
+its makespan is the SUM of the group super-steps — even though the
+partition's cut says the groups never talk to each other.  Wave dispatch
+(``async_groups=True``) launches every group whose cross-group inputs are
+satisfied in the same wave with ONE barrier, and books each chain's entry
+pull at the chain's own gate instead of the previous group-step's finish,
+so the makespan collapses toward the MAX over groups: the model-makespan
+ratio approaches ``k``.
+
+Both arms run through the REAL executor (JAX sessions, shared
+``SuperStepCache``) with ``cost_clock=True``: the virtual timeline reads
+the cost table instead of wall clocks, so every reported makespan is
+deterministic — the CI gate compares exact numbers, not noisy timings —
+while outputs still come from real fused XLA dispatches and are compared
+bitwise across the arms.
+
+Acceptance (``--check``):
+
+* async waves NEVER lose: at every ``k``, wave model makespan <= serialized
+  model makespan (exactly equal at ``k=1`` — a single group has nothing to
+  overlap);
+* at ``k >= 4`` independent groups the wave arm wins >= 1.5x;
+* the two arms' outputs are bit-identical, and the wave arm uses fewer
+  dispatch barriers (``n_waves``) than the serialized arm for ``k >= 2``.
+
+Everything is deterministic (no RNG beyond the fixed input seed).  Usage::
+
+    PYTHONPATH=src python -m benchmarks.multigroup_bench [--quick]
+        [--out BENCH_multigroup.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.comm import CommEngine, Topology
+from repro.core.cost import PCIE3_X16
+from repro.core.executor import JaxExecutor, SuperStepCache, attach_matrix_kernels
+from repro.core.graph import TaskGraph
+
+from .common import emit
+
+COST_MS = 2.0  # cost-table ms per kernel on its own group
+EDGE_BYTES = 1 << 20
+WIN_K = 4  # group counts at or above this must win >= WIN_MIN
+WIN_MIN = 1.5
+
+QUICK = {"ks": (1, 2, 4), "length": 3, "side": 16}
+FULL = {"ks": (1, 2, 4, 8), "length": 4, "side": 24}
+
+
+def build_workload(k: int, length: int) -> tuple[TaskGraph, dict[str, str]]:
+    """``k`` independent chains, one per group ``g1..gk``, each seeded by its
+    own host entry input — zero cross-chain edges, so the quotient DAG is
+    ``k`` parallel nodes and the whole graph fits one dependency wave."""
+    g = TaskGraph()
+    g.add("src", op="source")
+    assignment: dict[str, str] = {}
+    for i in range(1, k + 1):
+        grp = f"g{i}"
+        prev = "src"
+        for j in range(length):
+            name = f"{grp}.k{j}"
+            g.add(name, op="matadd", costs={grp: COST_MS, "host": COST_MS})
+            g.add_edge(prev, name, nbytes=EDGE_BYTES)
+            assignment[name] = grp
+            prev = name
+    g.validate()
+    return g, assignment
+
+
+def run_k(k: int, length: int, side: int) -> dict:
+    g, assignment = build_workload(k, length)
+    inputs = attach_matrix_kernels(g, side)
+    dev = jax.devices("cpu")[0]
+    groups = {"host": dev, **{f"g{i}": dev for i in range(1, k + 1)}}
+    group_nodes = {"host": 0, **{f"g{i}": i for i in range(1, k + 1)}}
+    ex = JaxExecutor(groups)
+    cache = SuperStepCache()  # shared: both arms compile identical chains
+
+    def run(async_groups: bool):
+        comm = CommEngine(Topology.dedicated(PCIE3_X16))
+        s = ex.session(
+            g,
+            assignment,
+            inputs,
+            host_group="host",
+            comm=comm,
+            group_nodes=group_nodes,
+            prefetch_depth=0,
+            fused=True,
+            cache=cache,
+            async_groups=async_groups,
+            cost_clock=True,
+        )
+        s.run_all()
+        return s, s.result()
+
+    sa, ra = run(False)
+    sb, rb = run(True)
+    bitwise = set(ra.outputs) == set(rb.outputs) and all(
+        np.array_equal(np.asarray(ra.outputs[n]), np.asarray(rb.outputs[n]))
+        for n in ra.outputs
+    )
+    return {
+        "k": k,
+        "serial_ms": ra.model_makespan_ms,
+        "async_ms": rb.model_makespan_ms,
+        "speedup": ra.model_makespan_ms / rb.model_makespan_ms,
+        "serial_waves": sa.n_waves,
+        "async_waves": sb.n_waves,
+        "overlap_ms": sb.overlap_ms,
+        "transfers": rb.n_transfers,
+        "cache_hits": rb.cache_hits,
+        "bitwise_equal": bitwise,
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        k = row["k"]
+        if row["async_ms"] > row["serial_ms"] + 1e-6:
+            failures.append(
+                f"k={k}: async waves REGRESSED "
+                f"({row['async_ms']:.3f} > {row['serial_ms']:.3f} ms)"
+            )
+        if k == 1 and abs(row["async_ms"] - row["serial_ms"]) > 1e-9:
+            failures.append(
+                f"k=1: single group must be identical "
+                f"({row['async_ms']:.6f} vs {row['serial_ms']:.6f} ms)"
+            )
+        if k >= WIN_K and row["speedup"] < WIN_MIN:
+            failures.append(f"k={k}: speedup {row['speedup']:.2f}x < {WIN_MIN}x")
+        if k >= 2 and row["async_waves"] >= row["serial_waves"]:
+            failures.append(
+                f"k={k}: wave arm used {row['async_waves']} barriers, "
+                f"serialized used {row['serial_waves']} (expected fewer)"
+            )
+        if not row["bitwise_equal"]:
+            failures.append(f"k={k}: outputs are NOT bit-identical across arms")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true", help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    cfg = QUICK if args.quick else FULL
+    length, side = cfg["length"], cfg["side"]
+
+    rows = [run_k(k, length, side) for k in cfg["ks"]]
+    print(
+        f"{'k':>3}  {'serial_ms':>10}  {'async_ms':>10}  {'speedup':>8}  "
+        f"{'waves':>11}  {'overlap_ms':>10}"
+    )
+    for row in rows:
+        print(
+            f"{row['k']:>3}  {row['serial_ms']:>10.3f}  {row['async_ms']:>10.3f}  "
+            f"{row['speedup']:>7.2f}x  "
+            f"{row['serial_waves']:>4} -> {row['async_waves']:>3}  "
+            f"{row['overlap_ms']:>10.3f}"
+        )
+        emit(
+            f"multigroup.k{row['k']}.speedup",
+            f"{row['speedup']:.3f}",
+            f"serial_ms={row['serial_ms']:.3f};"
+            f"async_ms={row['async_ms']:.3f};"
+            f"waves={row['serial_waves']}->{row['async_waves']}",
+        )
+
+    if args.out:
+        doc = {
+            "meta": {"length": length, "side": side, "quick": args.quick},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[multigroup] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[multigroup] FAIL: {msg}")
+        if failures:
+            return 1
+        print(
+            "[multigroup] PASS: async waves never lose; "
+            f">= {WIN_MIN}x at k >= {WIN_K}; outputs bit-identical"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

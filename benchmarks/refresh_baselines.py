@@ -37,6 +37,8 @@ from repro.launch.serve import (
 )
 
 from .gate_serve import GATED_POLICY
+from .multigroup_bench import QUICK as MULTIGROUP_QUICK
+from .multigroup_bench import run_k as multigroup_point
 from .router_bench import QUICK as ROUTER_QUICK
 from .router_bench import SEED as ROUTER_SEED
 from .router_bench import run_point as router_point
@@ -55,6 +57,9 @@ SUPERSTEP_BASELINE = (
 )
 STREAMING_BASELINE = (
     pathlib.Path(__file__).parent / "baselines" / "streaming_baseline.json"
+)
+MULTIGROUP_BASELINE = (
+    pathlib.Path(__file__).parent / "baselines" / "multigroup_baseline.json"
 )
 
 # what check_rows() in router_bench.py gates on, per swept churn
@@ -90,6 +95,19 @@ STREAMING_ROW_FIELDS = (
     "stalled_chunks",
     "stream_busy_ms",
     "conservation_err",
+)
+
+# what check_rows() in multigroup_bench.py gates on, per swept group count
+# (the wave arms run under cost_clock, so the numbers are deterministic)
+MULTIGROUP_ROW_FIELDS = (
+    "k",
+    "serial_ms",
+    "async_ms",
+    "speedup",
+    "serial_waves",
+    "async_waves",
+    "overlap_ms",
+    "transfers",
 )
 
 # the CI bench-smoke stream, verbatim (.github/workflows/ci.yml)
@@ -152,6 +170,24 @@ def refresh_streaming(path: pathlib.Path) -> dict:
         "meta": {
             "n_chains": STREAMING_QUICK["n_chains"],
             "length": STREAMING_QUICK["length"],
+            "quick": True,
+        },
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    return doc
+
+
+def refresh_multigroup(path: pathlib.Path) -> dict:
+    rows = [
+        multigroup_point(k, MULTIGROUP_QUICK["length"], MULTIGROUP_QUICK["side"])
+        for k in MULTIGROUP_QUICK["ks"]
+    ]
+    doc = {
+        "meta": {
+            "length": MULTIGROUP_QUICK["length"],
+            "side": MULTIGROUP_QUICK["side"],
             "quick": True,
         },
         "rows": rows,
@@ -373,6 +409,67 @@ def validate_streaming(path: pathlib.Path) -> list[str]:
     return failures
 
 
+def validate_multigroup(path: pathlib.Path) -> list[str]:
+    """Multigroup-baseline schema failures (empty = matches the quick sweep).
+
+    The sweep runs with ``cost_clock=True`` so every recorded makespan is
+    deterministic; the live acceptance gate is ``multigroup_bench --check``
+    and validation here is schema + swept-k coverage + no recorded
+    regression, consistent with the other baselines.
+    """
+    failures: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read multigroup baseline {path}: {e}"]
+
+    meta = doc.get("meta", {})
+    want_meta = {
+        "length": MULTIGROUP_QUICK["length"],
+        "side": MULTIGROUP_QUICK["side"],
+        "quick": True,
+    }
+    for key, want in want_meta.items():
+        got = meta.get(key)
+        if got != want:
+            failures.append(
+                f"multigroup meta.{key} = {got!r} but the quick sweep runs "
+                f"with {want!r} (stale baseline? refresh with --refresh)"
+            )
+
+    rows = doc.get("rows", [])
+    ks = []
+    for i, row in enumerate(rows):
+        for field in MULTIGROUP_ROW_FIELDS:
+            if not isinstance(row.get(field), numbers.Number):
+                failures.append(
+                    f"multigroup rows[{i}].{field} missing or non-numeric "
+                    f"({row.get(field)!r}) — multigroup_bench.py gates on it"
+                )
+        if row.get("bitwise_equal") is not True:
+            failures.append(
+                f"multigroup rows[{i}] records non-bit-identical outputs "
+                f"(bitwise_equal={row.get('bitwise_equal')!r})"
+            )
+        if isinstance(row.get("async_ms"), numbers.Number) and isinstance(
+            row.get("serial_ms"), numbers.Number
+        ):
+            if row["async_ms"] > row["serial_ms"] + 1e-6:
+                failures.append(
+                    f"multigroup rows[{i}] records a regression "
+                    f"({row['async_ms']:.3f} > {row['serial_ms']:.3f} ms)"
+                )
+        if isinstance(row.get("k"), numbers.Number):
+            ks.append(row["k"])
+    if ks != list(MULTIGROUP_QUICK["ks"]):
+        failures.append(
+            f"multigroup rows sweep k {ks} != quick sweep "
+            f"{list(MULTIGROUP_QUICK['ks'])}"
+        )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--refresh", action="store_true", help="rebuild the baseline")
@@ -383,11 +480,13 @@ def main(argv=None) -> int:
     ap.add_argument("--router-path", type=str, default=str(ROUTER_BASELINE))
     ap.add_argument("--superstep-path", type=str, default=str(SUPERSTEP_BASELINE))
     ap.add_argument("--streaming-path", type=str, default=str(STREAMING_BASELINE))
+    ap.add_argument("--multigroup-path", type=str, default=str(MULTIGROUP_BASELINE))
     args = ap.parse_args(argv)
     path = pathlib.Path(args.path)
     router_path = pathlib.Path(args.router_path)
     superstep_path = pathlib.Path(args.superstep_path)
     streaming_path = pathlib.Path(args.streaming_path)
+    multigroup_path = pathlib.Path(args.multigroup_path)
     if not (args.refresh or args.validate):
         ap.error("pick --refresh and/or --validate")
 
@@ -417,6 +516,11 @@ def main(argv=None) -> int:
             f"r{r['ratio']}={r['win']:.1%}" for r in tdoc["rows"]
         )
         print(f"[baseline] wrote {streaming_path}: streaming wins {twins}")
+        mdoc = refresh_multigroup(multigroup_path)
+        mwins = " ".join(
+            f"k{r['k']}={r['speedup']:.2f}x" for r in mdoc["rows"]
+        )
+        print(f"[baseline] wrote {multigroup_path}: wave speedups {mwins}")
 
     if args.validate:
         failures = (
@@ -424,6 +528,7 @@ def main(argv=None) -> int:
             + validate_router(router_path)
             + validate_superstep(superstep_path)
             + validate_streaming(streaming_path)
+            + validate_multigroup(multigroup_path)
         )
         for msg in failures:
             print(f"[baseline] FAIL: {msg}")
@@ -433,7 +538,8 @@ def main(argv=None) -> int:
             f"[baseline] PASS: {path} matches gate_serve.py expectations; "
             f"{router_path} matches the router quick sweep; "
             f"{superstep_path} matches the superstep quick sweep; "
-            f"{streaming_path} matches the streaming quick sweep"
+            f"{streaming_path} matches the streaming quick sweep; "
+            f"{multigroup_path} matches the multigroup quick sweep"
         )
     return 0
 

@@ -67,6 +67,10 @@ from typing import Mapping, Sequence
 from .cost import Link
 
 REF_BYTES = 1 << 20  # representative block for relative link pricing
+# Fixed streaming chunk size on flat topologies (and the floor unit all
+# chunk-size math rounds to).  Hierarchical topologies derive a per-tier
+# size instead — see :meth:`Topology.stream_chunk_bytes`.
+DEFAULT_CHUNK_BYTES = 1 << 18
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +200,16 @@ class Topology:
 
     def worst_ms(self, nbytes: int) -> float:
         return max(link.transfer_ms(nbytes) for _, link, _ in self.links())
+
+    def stream_chunk_bytes(self, src: int | None = None, dst: int | None = None) -> int:
+        """Default chunk size for a streaming channel over ``src`` -> ``dst``.
+
+        Flat topologies keep the fixed :data:`DEFAULT_CHUNK_BYTES` (exact
+        back-compat for every pre-existing streaming number); hierarchical
+        topologies size chunks to the route's bottleneck tier — see
+        :meth:`HierTopology.stream_chunk_bytes`.  Callers passing an explicit
+        ``chunk_bytes`` always win; this is only the ``None`` default."""
+        return DEFAULT_CHUNK_BYTES
 
     def scale_matrix(
         self, nodes: Sequence[int], ref_bytes: int = REF_BYTES
@@ -345,6 +359,25 @@ class HierTopology(Topology):
             return 0.0
         return max(link.transfer_ms(nbytes) for _, link, _ in self.route(src, dst))
 
+    def stream_chunk_bytes(self, src: int | None = None, dst: int | None = None) -> int:
+        """Tier-aware chunk sizing: a chunk's wire time should dominate the
+        per-chunk latency, so the chunk carries ~4 latency-bandwidth products
+        of its bottleneck tier, rounded to a power of two in [16 KiB, 4 MiB].
+        High-latency DCN-class pod uplinks get MiB-scale chunks (latency
+        amortized), low-latency leaf/ICI NICs stay at fine chunks (tight
+        pipelining).  Endpoint-free calls price at the worst tier — the same
+        conservative convention as :meth:`transfer_ms`."""
+        if src is None or dst is None or src == dst:
+            links = [link for _, link, _ in self.links()]
+            link = max(links, key=lambda lk: lk.transfer_ms(REF_BYTES))
+        else:
+            _, link, _ = self.link_of(src, dst)  # bottleneck tier of the route
+        ideal = 4.0 * (link.latency_ms * 1e-3) * link.bw
+        size = 1 << 14
+        while size < ideal and size < (1 << 22):
+            size <<= 1
+        return size
+
 
 class StreamChannel:
     """One chunked ``src`` -> ``dst`` transfer pipelined against its producer
@@ -442,6 +475,47 @@ class StreamChannel:
         return self.finish, self.arrival_last
 
 
+@dataclasses.dataclass
+class AsyncPull:
+    """Handle for a non-blocking pull (:meth:`CommEngine.fetch_async`).
+
+    The booking happens immediately — lanes are charged exactly as a
+    blocking :meth:`~CommEngine.fetch` would — but the caller gets this
+    handle back instead of waiting on the completion time: ``eta`` is the
+    modeled arrival (``None`` for a throttled prefetch that moved nothing),
+    :meth:`done` answers "has it landed by ``now``", and completion
+    callbacks registered with :meth:`on_complete` fire when the engine is
+    :meth:`~CommEngine.poll` ed past the ETA.  This is the wave executor's
+    admission primitive: a group joins a wave as soon as the last of its
+    pulls' ETAs lands."""
+
+    block: str
+    src: int
+    dst: int
+    nbytes: int
+    eta: float | None
+    requested: float = 0.0
+    fired: bool = False
+    _callbacks: list = dataclasses.field(default_factory=list)
+
+    def done(self, now: float) -> bool:
+        return self.eta is not None and self.eta <= now + 1e-9
+
+    def on_complete(self, cb) -> None:
+        """Register ``cb(handle)`` to fire at the first ``poll`` past the
+        ETA (immediately if the handle already fired)."""
+        if self.fired:
+            cb(self)
+        else:
+            self._callbacks.append(cb)
+
+    def _fire(self) -> None:
+        self.fired = True
+        for cb in self._callbacks:
+            cb(self)
+        self._callbacks.clear()
+
+
 class CommEngine:
     """Event-driven transfer scheduler over a :class:`Topology`'s lanes.
 
@@ -504,6 +578,8 @@ class CommEngine:
         self.n_depth_adjust = 0
         self._tier_depth: dict[str, int] = {}
         self._tier_raised_at: dict[str, float] = {}
+        # outstanding non-blocking pulls (fetch_async) awaiting a poll()
+        self._async_pulls: list[AsyncPull] = []
 
     @property
     def n_throttled(self) -> int:
@@ -596,6 +672,42 @@ class CommEngine:
         self.kind_bytes[kind] = self.kind_bytes.get(kind, 0) + nbytes
         return finish
 
+    def fetch_async(
+        self,
+        block: str,
+        src: int,
+        dst: int,
+        nbytes: int,
+        *,
+        now: float,
+        src_ready: float = 0.0,
+        kind: str = "demand",
+    ) -> AsyncPull:
+        """Non-blocking :meth:`fetch`: the copy is booked on the lanes right
+        away (identical contention/accounting) but the caller continues
+        immediately with an :class:`AsyncPull` handle instead of the bare
+        completion time.  Completion callbacks fire at the next
+        :meth:`poll` past the ETA."""
+        eta = self.fetch(
+            block, src, dst, nbytes, now=now, src_ready=src_ready, kind=kind
+        )
+        h = AsyncPull(
+            block, src, dst, nbytes, eta=eta, requested=max(now, src_ready)
+        )
+        if eta is not None:
+            self._async_pulls.append(h)
+        return h
+
+    def poll(self, now: float) -> list[AsyncPull]:
+        """Fire (and return) every outstanding async pull whose ETA has
+        landed by ``now``; the rest stay queued for a later poll."""
+        landed = [h for h in self._async_pulls if h.done(now)]
+        if landed:
+            self._async_pulls = [h for h in self._async_pulls if not h.done(now)]
+            for h in landed:
+                h._fire()
+        return landed
+
     def open_stream(
         self,
         block: str,
@@ -606,7 +718,7 @@ class CommEngine:
         now: float,
         src_start: float | None = None,
         src_ready: float = 0.0,
-        chunk_bytes: int,
+        chunk_bytes: int | None = None,
         depth: int = 2,
     ) -> StreamChannel | None:
         """Open a chunked channel for ``block`` (see :class:`StreamChannel`).
@@ -626,6 +738,10 @@ class CommEngine:
         invariant — see the real chunk intervals."""
         if src == dst:
             return None
+        if chunk_bytes is None:
+            # topology-driven default: tier-aware on hierarchies, the fixed
+            # DEFAULT_CHUNK_BYTES on flat topologies (explicit sizes win)
+            chunk_bytes = self.topo.stream_chunk_bytes(src, dst)
         if chunk_bytes < 1:
             raise ValueError("chunk_bytes must be positive")
         segs = self.topo.route(src, dst)
@@ -852,7 +968,9 @@ def link_scale_for(
 
 
 __all__ = [
+    "AsyncPull",
     "CommEngine",
+    "DEFAULT_CHUNK_BYTES",
     "HierTopology",
     "StreamChannel",
     "Topology",

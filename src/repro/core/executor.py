@@ -113,6 +113,10 @@ class ExecResult:
     n_stalled_chunks: int = 0  # chunks delayed by channel backpressure
     stream_busy_ms: float = 0.0  # lane time booked by channel chunks
     n_depth_adjust: int = 0  # adaptive prefetch-depth raises/lowers
+    n_waves: int = 0  # fused dispatch barriers (== fused_steps serialized;
+    #                                   # fewer with async_groups wave overlap)
+    overlap_ms: float = 0.0  # virtual compute time co-scheduled inside waves
+    #                                   # (sum of member spans minus wave span)
 
 
 @dataclasses.dataclass
@@ -218,8 +222,10 @@ class ExecSession:
         cache: SuperStepCache | None = None,
         revision: int = 0,
         streaming: bool = False,
-        chunk_bytes: int = 1 << 18,
+        chunk_bytes: int | None = None,
         stream_depth: int = 2,
+        async_groups: bool = False,
+        cost_clock: bool = False,
     ):
         g.validate()
         self.ex = executor
@@ -251,8 +257,21 @@ class ExecSession:
         # residual arrivals drain against its compute (see comm.StreamChannel);
         # the real device_put happens chunk-wise too, depth-bounded
         self.streaming = streaming and comm is not None
+        # None -> the topology picks a per-route chunk size (flat topologies
+        # return the fixed default, so the resolved value is bit-identical)
         self.chunk_bytes = chunk_bytes
         self.stream_depth = stream_depth
+        # async_groups: fused dispatch happens in dependency WAVES — every
+        # group with a runnable chain launches in the same wave (one barrier
+        # per wave, not per group) and cross-group pulls are booked at the
+        # consumer's own gate instead of the previous group-step's finish
+        self.async_groups = async_groups and fused
+        # cost_clock: with time_kernels off, drive the virtual timeline from
+        # the cost table instead of zero-width kernels — deterministic model
+        # makespans for benches and simulator-agreement checks (fused paths)
+        self.cost_clock = cost_clock
+        self.n_waves = 0
+        self.overlap_ms = 0.0
         self._pending_channels: list[tuple[str, str, object]] = []
         self._block_window: dict[str, tuple[float, float]] = {}
         self._inputs = dict(inputs or {})
@@ -410,11 +429,15 @@ class ExecSession:
                 out.append((pred, self.g.edge(pred, name).nbytes))
         return out
 
-    def _pull(self, key: str, nbytes: int, grp: str, dev, kind: str) -> int:
+    def _pull(
+        self, key: str, nbytes: int, grp: str, dev, kind: str, now: float | None = None
+    ) -> int:
         """Copy ``key`` onto ``grp`` if missing; returns bytes moved (0 when
         already valid there, or when the contention throttle deferred a
         prefetch — the lanes are booked *before* the real ``device_put``, so
-        a throttled prefetch costs nothing and retries later)."""
+        a throttled prefetch costs nothing and retries later).  ``now``
+        overrides the booking clock: the wave executor issues pulls at the
+        consumer's own gate, not the previous group-step's finish."""
         ent = self.valid.get(key)
         if ent is None or grp in ent:
             return 0
@@ -424,6 +447,7 @@ class ExecSession:
             donor_grp = next(iter(ent))
         donor = ent[donor_grp]
         nb = nbytes or donor.size * donor.dtype.itemsize
+        t_now = self.vnow if now is None else now
         if self.streaming and kind == "demand":
             win = self._block_window.get(key)
             src_ready = self.vt_block.get((key, donor_grp), 0.0)
@@ -437,7 +461,7 @@ class ExecSession:
                 self._node_of(donor_grp),
                 self._node_of(grp),
                 nb,
-                now=self.vnow,
+                now=t_now,
                 src_start=src_start,
                 src_ready=src_ready,
                 chunk_bytes=self.chunk_bytes,
@@ -452,15 +476,31 @@ class ExecSession:
                 return nb
             # same node: no wire — fall through to the free bulk path
         if self.comm is not None:
-            te = self.comm.fetch(
-                key,
-                self._node_of(donor_grp),
-                self._node_of(grp),
-                nb,
-                now=self.vnow,
-                src_ready=self.vt_block.get((key, donor_grp), 0.0),
-                kind=kind,
-            )
+            src_ready = self.vt_block.get((key, donor_grp), 0.0)
+            if self.async_groups and kind == "demand":
+                # non-blocking pull: the booking happens now, completion is
+                # charged to the lanes, and the handle's ETA (not a barrier)
+                # gates the consumer's admission into its wave
+                h = self.comm.fetch_async(
+                    key,
+                    self._node_of(donor_grp),
+                    self._node_of(grp),
+                    nb,
+                    now=t_now,
+                    src_ready=src_ready,
+                    kind=kind,
+                )
+                te = h.eta
+            else:
+                te = self.comm.fetch(
+                    key,
+                    self._node_of(donor_grp),
+                    self._node_of(grp),
+                    nb,
+                    now=t_now,
+                    src_ready=src_ready,
+                    kind=kind,
+                )
             if te is None:  # throttled prefetch: nothing moved
                 return 0
             self.vt_block[(key, grp)] = te
@@ -787,12 +827,13 @@ class ExecSession:
         if wsum <= 0.0:
             weights = [1.0] * len(members)
             wsum = float(len(members))
+        cc = self.cost_clock and not tk
         comm = self.comm
         kernel_ms = self.kernel_ms
         blocks = self.blocks
         buf_append = self._fused_buf.append
         for i, (n, w) in enumerate(zip(members, weights)):
-            kms = ms * w / wsum
+            kms = costs[i] if cc else ms * w / wsum
             if tk:
                 kernel_ms[n] = kms
             vstart = vfinish = 0.0
@@ -825,9 +866,380 @@ class ExecSession:
                 )
         self.per_group[grp] = self.per_group.get(grp, 0) + len(members)
         self.fused_steps += 1
+        self.n_waves += 1  # serialized dispatch: every group-step is a barrier
         self.superstep_runs.append(
             SuperStepRun(grp, members, ms, hit, donated, total_nt, total_nb)
         )
+        self._prefetch_ready()
+        return True
+
+    def _fused_wave(self, record: bool = True) -> bool:
+        """Plan + dispatch one dependency WAVE: every group with a runnable
+        intra-group chain launches its fused super-step in the same round —
+        one ``block_until_ready`` for the whole wave instead of one per
+        group, so XLA runs independent groups' chains concurrently.
+
+        Wave membership repeats the :meth:`_plan_superstep` scan once per
+        still-unplanned group; a kernel whose predecessor sits in *another*
+        chain of this wave is not runnable yet and joins a later wave, so
+        chains are mutually independent by construction and waves are
+        exactly the topological levels of the quotient (group) DAG.  Each
+        chain's cross-group pulls are issued non-blocking at the consumer's
+        own gate (``_pull(now=...)`` + :meth:`CommEngine.fetch_async`), and
+        its virtual start floors at the last pull's ETA — ETA-gated
+        admission, not a global barrier.  The wave wall is apportioned to
+        ALL wave members by cost weight so ``MeasuredCostModel`` feedback
+        survives; False when nothing is ready."""
+        done = self._done
+        gated = self.gated
+        valid = self.valid
+        vt_block = self.vt_block
+        g_nodes = self.g.nodes
+        successors = self.g.successors
+        predecessors = self.g.predecessors
+        g_edge = self.g.edge
+        get_group = self.assignment.get
+        host = self.host_group
+
+        # pass 1 — wave membership: one maximal runnable chain per group
+        # with ready work (identical scan to _fused_superstep, repeated with
+        # already-claimed groups excluded)
+        plans: list[dict] = []
+        claimed: set[str] = set()
+        while True:
+            grp: str | None = None
+            dev = None
+            members: list[str] = []
+            midx: dict[str, int] = {}
+            fns: list = []
+            ops: list[str] = []
+            costs: list[float] = []
+            entries: list[list] = []
+            for n in self._order:
+                if n in done or n in gated:
+                    continue
+                n_grp = get_group(n, host)
+                if n_grp in claimed or (grp is not None and n_grp != grp):
+                    continue
+                preds = predecessors(n)
+                entry: list = []
+                runnable = True
+                for p in preds:
+                    j = midx.get(p)
+                    if j is not None:
+                        entry.append(j)
+                    elif g_nodes[p].op == "source":
+                        entry.append((n + "/in", 0))
+                    elif p in done:
+                        entry.append((p, g_edge(p, n).nbytes))
+                    else:
+                        runnable = False
+                        break
+                if not runnable:
+                    continue
+                if not preds and (n + "/in") in valid:
+                    entry.append((n + "/in", 0))
+                k = g_nodes[n]
+                if k.fn is None:
+                    raise ValueError(f"kernel {n} has no fn")
+                if grp is None:
+                    grp = n_grp
+                    dev = self.ex.groups[grp]
+                midx[n] = len(members)
+                members.append(n)
+                fns.append(k.fn)
+                ops.append(k.op)
+                costs.append(k.costs.get(grp, 0.0))
+                entries.append(entry)
+            if grp is None:
+                break
+            claimed.add(grp)
+            plans.append(
+                dict(
+                    grp=grp,
+                    dev=dev,
+                    members=members,
+                    midx=midx,
+                    fns=fns,
+                    ops=ops,
+                    costs=costs,
+                    entries=entries,
+                )
+            )
+        if not plans:
+            return False
+
+        # pass 2 — per chain: gather external inputs with non-blocking
+        # pulls booked at the consumer's own gate (its group's free time /
+        # admission floor), NOT the previous group-step's finish — that
+        # booking clock is the whole serialization the wave mode removes
+        pull = self._pull
+        prefetched_discard = self.prefetched.discard
+        pend = self._pending_channels
+        consumers: dict[str, set[str]] = {}  # ext key -> pulling wave chains
+        for pl in plans:
+            grp = pl["grp"]
+            dev = pl["dev"]
+            members = pl["members"]
+            entries = pl["entries"]
+            member_set = pl["midx"].keys()
+            gate = self.group_free.get(grp, 0.0)
+            ext_keys: list[str] = []
+            ext_index: dict[str, int] = {}
+            plan: list[tuple] = []
+            per_nt: list[int] = []
+            per_nb: list[int] = []
+            ready_vt: list[float] = []
+            keep: list[int] = []
+            out_slot: dict[str, int] = {}
+            total_nt = total_nb = 0
+            member_chans: list[list] = []
+            for i, n in enumerate(members):
+                srcs: list[tuple[str, int]] = []
+                rv = 0.0
+                nt = nb = 0
+                nch0 = len(pend)
+                for item in entries[i]:
+                    if type(item) is int:
+                        srcs.append(("mem", item))
+                        continue
+                    key, nbytes = item
+                    if key not in valid:
+                        continue
+                    e = ext_index.get(key)
+                    if e is None:
+                        moved = pull(
+                            key,
+                            nbytes,
+                            grp,
+                            dev,
+                            "demand",
+                            now=max(gate, self.earliest.get(n, 0.0)),
+                        )
+                        if moved:
+                            nt += 1
+                            nb += moved
+                        prefetched_discard((key, grp))
+                        e = ext_index[key] = len(ext_keys)
+                        ext_keys.append(key)
+                        consumers.setdefault(key, set()).add(grp)
+                    srcs.append(("ext", e))
+                    rv = max(rv, vt_block.get((key, grp), 0.0))
+                plan.append((pl["ops"][i], tuple(srcs)))
+                per_nt.append(nt)
+                per_nb.append(nb)
+                total_nt += nt
+                total_nb += nb
+                ready_vt.append(rv)
+                succs = successors(n)
+                if not succs or any(
+                    s not in done and s not in member_set for s in succs
+                ):
+                    out_slot[n] = len(keep)
+                    keep.append(i)
+                member_chans.append(pend[nch0:])
+            pend.clear()
+            self.n_transfers += total_nt
+            self.nbytes += total_nb
+            pl.update(
+                plan=plan,
+                per_nt=per_nt,
+                per_nb=per_nb,
+                ready_vt=ready_vt,
+                keep=keep,
+                out_slot=out_slot,
+                ext_keys=ext_keys,
+                member_chans=member_chans,
+                total_nt=total_nt,
+                total_nb=total_nb,
+            )
+
+        # wave seal — a block whose every remaining consumer sits inside
+        # exactly ONE chain of this wave is dead outside it: drop the other
+        # groups' copies (incl. stale prefetches) so the consuming chain's
+        # copy becomes sole and _donatable can hand the buffer to the fused
+        # call — donation across group boundaries, unlocked by the seal
+        wave_grp_of: dict[str, str] = {}
+        for pl in plans:
+            for n in pl["members"]:
+                wave_grp_of[n] = pl["grp"]
+        for pl in plans:
+            grp = pl["grp"]
+            for key in pl["ext_keys"]:
+                if key in self._inputs or key not in g_nodes:
+                    continue  # caller-owned seed / seeded "<kernel>/in" block
+                succs = successors(key)
+                if not succs:
+                    continue  # exit output: result() must return it
+                if len(consumers.get(key, ())) != 1:
+                    continue  # two chains pulled it: neither copy is sole
+                if not all(
+                    s in done or wave_grp_of.get(s) == grp for s in succs
+                ):
+                    continue  # a consumer outside this wave still needs it
+                ent = valid.get(key)
+                if ent is None:
+                    continue
+                for ogrp in [o for o in ent if o != grp]:
+                    del ent[ogrp]
+                    vt_block.pop((key, ogrp), None)
+                    prefetched_discard((key, ogrp))
+
+        # compile every chain (SuperStepCache reused unchanged), dispatch
+        # them back to back, then ONE barrier for the whole wave
+        cache = self.cache
+        tk = self.time_kernels
+        for pl in plans:
+            grp = pl["grp"]
+            dev = pl["dev"]
+            ext_keys = pl["ext_keys"]
+            ext_args = [valid[key][grp] for key in ext_keys]
+            member_set = pl["midx"].keys()
+            donate = tuple(
+                i
+                for i, key in enumerate(ext_keys)
+                if self._donatable(key, grp, member_set)
+            )
+            sig = (
+                self.revision,
+                grp,
+                tuple(pl["plan"]),
+                tuple(pl["keep"]),
+                tuple((a.shape, a.dtype) for a in ext_args),
+                donate,
+            )
+
+            def compile_chain(pl=pl, ext_args=ext_args, dev=dev, donate=donate):
+                chain = build_chain(
+                    [(fn, srcs) for fn, (_, srcs) in zip(pl["fns"], pl["plan"])],
+                    pl["keep"],
+                )
+                specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ext_args]
+                with jax.default_device(dev), warnings.catch_warnings():
+                    warnings.filterwarnings("ignore", message=".*donated.*")
+                    return (
+                        jax.jit(chain, donate_argnums=donate).lower(*specs).compile()
+                    )
+
+            fn, hit = cache.get_or_build(sig, compile_chain)
+            self.cache_hits += int(hit)
+            self.cache_misses += int(not hit)
+            pl.update(fn=fn, hit=hit, ext_args=ext_args, donate=donate)
+
+        wave_ms = 0.0
+        if tk:
+            # ONE host sync for the whole wave's externals, outside the
+            # timed region (input production must not leak into the wall)
+            for pl in plans:
+                for a in pl["ext_args"]:
+                    if hasattr(a, "block_until_ready"):
+                        a.block_until_ready()
+            t0 = time.perf_counter()
+        for pl in plans:
+            if pl["donate"]:
+                with warnings.catch_warnings():
+                    warnings.filterwarnings("ignore", message=".*donated.*")
+                    pl["outs"] = pl["fn"](*pl["ext_args"])
+            else:
+                pl["outs"] = pl["fn"](*pl["ext_args"])
+        if tk:
+            # the wave's single barrier
+            for pl in plans:
+                for o in pl["outs"]:
+                    if hasattr(o, "block_until_ready"):
+                        o.block_until_ready()
+            wave_ms = (time.perf_counter() - t0) * 1e3
+
+        # retire: apportion the wave wall across ALL wave members by cost
+        # weight (or read the cost clock), roll each chain's virtual times
+        # forward independently, and account the wave's overlap
+        all_costs = [c for pl in plans for c in pl["costs"]]
+        weights = [c if c > 0.0 else 0.0 for c in all_costs]
+        wsum = sum(weights)
+        if wsum <= 0.0:
+            weights = [1.0] * len(all_costs)
+            wsum = float(len(all_costs))
+        cc = self.cost_clock and not tk
+        comm = self.comm
+        kernel_ms = self.kernel_ms
+        blocks = self.blocks
+        buf_append = self._fused_buf.append
+        wi = 0
+        wave_lo: float | None = None
+        wave_hi = 0.0
+        busy = 0.0
+        for pl in plans:
+            grp = pl["grp"]
+            donated = [pl["ext_keys"][i] for i in pl["donate"]]
+            for key in donated:
+                ent = valid.get(key)
+                if ent is not None:
+                    ent.pop(grp, None)
+                    if not ent:
+                        del valid[key]
+                vt_block.pop((key, grp), None)
+            outs = pl["outs"]
+            out_slot = pl["out_slot"]
+            chain_ms = 0.0
+            for i, n in enumerate(pl["members"]):
+                w = weights[wi]
+                wi += 1
+                kms = pl["costs"][i] if cc else wave_ms * w / wsum
+                chain_ms += kms
+                if tk:
+                    kernel_ms[n] = kms
+                vstart = vfinish = 0.0
+                if comm is not None:
+                    vstart = max(
+                        self.group_free.get(grp, 0.0),
+                        pl["ready_vt"][i],
+                        self.earliest.get(n, 0.0),
+                    )
+                    vfinish = vstart + kms
+                    for key, cgrp, ch in pl["member_chans"][i]:
+                        ch_finish, arrival_last = ch.drain(vstart, kms)
+                        vfinish = max(vfinish, ch_finish)
+                        vt_block[(key, cgrp)] = arrival_last
+                    self.group_free[grp] = vfinish
+                    self.vmax = max(self.vmax, vfinish)
+                    self._block_window[n] = (vstart, vfinish)
+                    wave_lo = vstart if wave_lo is None else min(wave_lo, vstart)
+                    wave_hi = max(wave_hi, vfinish)
+                    busy += vfinish - vstart
+                slot = out_slot.get(n)
+                if slot is not None:
+                    out = outs[slot]
+                    valid[n] = {grp: out}
+                    blocks[n] = out
+                    if comm is not None:
+                        vt_block[(n, grp)] = vfinish
+                done.add(n)
+                if record:
+                    buf_append(
+                        KernelRun(
+                            n, grp, kms, pl["per_nt"][i], pl["per_nb"][i],
+                            vstart, vfinish,
+                        )
+                    )
+            self.per_group[grp] = self.per_group.get(grp, 0) + len(pl["members"])
+            self.fused_steps += 1
+            self.superstep_runs.append(
+                SuperStepRun(
+                    grp,
+                    pl["members"],
+                    chain_ms,  # the chain's apportioned share of the wave
+                    pl["hit"],
+                    donated,
+                    pl["total_nt"],
+                    pl["total_nb"],
+                )
+            )
+        if comm is not None and wave_lo is not None:
+            self.vnow = max(self.vnow, wave_hi)
+            # co-scheduled compute: member spans beyond the wave span
+            self.overlap_ms += max(0.0, busy - (wave_hi - wave_lo))
+            comm.poll(self.vnow)  # fire completion callbacks for landed pulls
+        self.n_waves += 1
         self._prefetch_ready()
         return True
 
@@ -838,7 +1250,8 @@ class ExecSession:
         dispatch, one barrier) and its per-kernel records are replayed one
         per call, so online callers consume the same stepwise interface."""
         if self.fused:
-            if not self._fused_buf and not self._fused_superstep():
+            dispatch = self._fused_wave if self.async_groups else self._fused_superstep
+            if not self._fused_buf and not dispatch():
                 return None
             return self._fused_buf.pop(0)
         name = self.next_ready()
@@ -891,7 +1304,8 @@ class ExecSession:
             # replay, no per-kernel KernelRun construction — batch callers
             # only consume the aggregate result()/superstep_runs state
             self._fused_buf.clear()
-            while not self.done() and self._fused_superstep(record=False):
+            dispatch = self._fused_wave if self.async_groups else self._fused_superstep
+            while not self.done() and dispatch(record=False):
                 pass
             return
         while self.step() is not None:
@@ -923,6 +1337,8 @@ class ExecSession:
             n_stalled_chunks=self.comm.n_stalled_chunks if self.comm else 0,
             stream_busy_ms=self.comm.stream_busy_ms if self.comm else 0.0,
             n_depth_adjust=self.comm.n_depth_adjust if self.comm else 0,
+            n_waves=self.n_waves,
+            overlap_ms=self.overlap_ms,
         )
 
 
@@ -957,8 +1373,10 @@ class JaxExecutor:
         cache: SuperStepCache | None = None,
         revision: int = 0,
         streaming: bool = False,
-        chunk_bytes: int = 1 << 18,
+        chunk_bytes: int | None = None,
         stream_depth: int = 2,
+        async_groups: bool = False,
+        cost_clock: bool = False,
     ) -> ExecSession:
         return ExecSession(
             self,
@@ -977,6 +1395,8 @@ class JaxExecutor:
             streaming=streaming,
             chunk_bytes=chunk_bytes,
             stream_depth=stream_depth,
+            async_groups=async_groups,
+            cost_clock=cost_clock,
         )
 
     def run(

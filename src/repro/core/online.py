@@ -590,7 +590,8 @@ class IncrementalGpPolicy(GpPolicy):
                  capacities: Mapping[str, float] | None = None,
                  mem_aware: bool = True, reload_aware: bool = True,
                  streaming: bool = False,
-                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+                 chunk_bytes: int | None = DEFAULT_CHUNK_BYTES,
+                 async_groups: bool = False):
         super().__init__(weight_source=weight_source, epsilon=epsilon,
                          seed=seed, targets=targets,
                          scale_by_workers=scale_by_workers,
@@ -601,7 +602,13 @@ class IncrementalGpPolicy(GpPolicy):
         # first chunk's transfer is exposed) and refine for the pipeline
         # interval instead of total cut
         self.streaming = streaming
+        # None -> price streamed edges at the topology's per-route default
+        # chunk size (flat topologies resolve to DEFAULT_CHUNK_BYTES)
         self.chunk_bytes = chunk_bytes
+        # async multi-group waves: the executed makespan is the MAX over
+        # concurrent group chains, not their sum — refine for the
+        # stage-balance interval objective, like streaming does
+        self.async_groups = async_groups
         self.decision_ms = decision_ms
         self.imbalance_trigger = imbalance_trigger
         self.cut_trigger = cut_trigger
@@ -740,12 +747,15 @@ class IncrementalGpPolicy(GpPolicy):
         if self.streaming:
             # only the first chunk's wire time is exposed on a streamed edge;
             # residual chunks hide under the consumer's compute
-            cb = self.chunk_bytes
+            cb = (self.chunk_bytes if self.chunk_bytes is not None
+                  else topo.stream_chunk_bytes())
             edge_ms = lambda nb: topo.worst_ms(min(nb, cb))  # noqa: E731
             objective = "interval"
         else:
             edge_ms = lambda nb: topo.worst_ms(nb)  # noqa: E731
-            objective = "cut"
+            # wave dispatch runs independent groups concurrently: the
+            # executed interval, not the total cut, is what FM should shave
+            objective = "interval" if self.async_groups else "cut"
         if p is None or overlap < self.min_overlap:
             p = OnlinePartitioner(
                 targets, epsilon=self.epsilon, seed=self.seed,

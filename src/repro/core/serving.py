@@ -102,6 +102,9 @@ class StepReport:
     n_streamed: int = 0             # demand pulls executed as chunked channels
     n_stalled_chunks: int = 0       # chunks delayed by channel backpressure
     stream_busy_ms: float = 0.0     # lane time booked by channel chunks
+    n_waves: int = 0                # fused dispatch barriers (async_groups:
+    #                               # one per wave, else one per group-step)
+    overlap_ms: float = 0.0         # compute co-scheduled inside waves
 
 
 @dataclasses.dataclass
@@ -168,6 +171,8 @@ class ServeReport:
             "streamed": int(self.total("n_streamed")),
             "stalled_chunks": int(self.total("n_stalled_chunks")),
             "stream_busy_ms": self.total("stream_busy_ms"),
+            "waves": int(self.total("n_waves")),
+            "overlap_ms": self.total("overlap_ms"),
         }
 
 
@@ -233,8 +238,8 @@ class ServingExecutor:
                  cost_model: MeasuredCostModel | None = None,
                  link: Link | None = None, fused: bool = False,
                  superstep_cache: SuperStepCache | None = None,
-                 streaming: bool = False, chunk_bytes: int = 1 << 18,
-                 stream_depth: int = 2):
+                 streaming: bool = False, chunk_bytes: int | None = None,
+                 stream_depth: int = 2, async_groups: bool = False):
         missing = [c for c in platform.classes if c not in groups]
         if missing:
             raise KeyError(f"platform classes without a device group: {missing}")
@@ -259,8 +264,13 @@ class ServingExecutor:
         # channels (comm.StreamChannel) instead of bulk fetches — opt-in,
         # streaming=False keeps the bulk path bit-identical
         self.streaming = streaming
+        # None -> per-route topology default (flat topologies resolve to the
+        # fixed DEFAULT_CHUNK_BYTES, so the resolved value is bit-identical)
         self.chunk_bytes = chunk_bytes
         self.stream_depth = stream_depth
+        # async multi-group waves: fused group-steps whose cross-group inputs
+        # are satisfied dispatch in the same wave, one barrier per wave
+        self.async_groups = async_groups and fused
 
     def reset_measurements(self) -> None:
         """Fresh measurement state (monitor EWMAs + cost history).  Called at
@@ -403,7 +413,7 @@ class ServingExecutor:
             cache=self.superstep_cache,
             revision=int(getattr(policy, "revision", 0)),
             streaming=self.streaming, chunk_bytes=self.chunk_bytes,
-            stream_depth=self.stream_depth)
+            stream_depth=self.stream_depth, async_groups=self.async_groups)
 
         clock = 0.0
         decision_ms = 0.0
@@ -546,6 +556,8 @@ class ServingExecutor:
             n_streamed=comm.n_streamed,
             n_stalled_chunks=comm.n_stalled_chunks,
             stream_busy_ms=comm.stream_busy_ms,
+            n_waves=session.n_waves,
+            overlap_ms=session.overlap_ms,
         )
 
     # -- whole stream ----------------------------------------------------------
@@ -658,5 +670,7 @@ def merge_serve_reports(reports: Sequence[ServeReport],
             n_streamed=int(tot("n_streamed")),
             n_stalled_chunks=int(tot("n_stalled_chunks")),
             stream_busy_ms=tot("stream_busy_ms"),
+            n_waves=int(tot("n_waves")),
+            overlap_ms=tot("overlap_ms"),
         ))
     return merged

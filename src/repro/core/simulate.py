@@ -73,7 +73,7 @@ import heapq
 from collections import deque
 from typing import Mapping, Sequence
 
-from .comm import CommEngine, Topology, platform_topology
+from .comm import DEFAULT_CHUNK_BYTES, CommEngine, Topology, platform_topology
 from .cost import Link, PCIE3_X16
 from .graph import TaskGraph
 
@@ -223,14 +223,14 @@ class SimResult:
     stream_busy_ms: float = 0.0
     # per-tier prefetch-depth adjustments (CommEngine.adaptive_depth)
     n_depth_adjust: int = 0
+    # wave accounting (wave_schedule): dependency waves of group super-steps
+    # dispatched (0 for the plain task-level event simulator)
+    n_waves: int = 0
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
             return {k: 0.0 for k in self.proc_busy_ms}
         return {k: v / self.makespan_ms for k, v in self.proc_busy_ms.items()}
-
-
-DEFAULT_CHUNK_BYTES = 1 << 18
 
 
 class Sim:
@@ -243,7 +243,7 @@ class Sim:
         throttle: bool | None = None,
         *,
         streaming: bool = False,
-        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+        chunk_bytes: int | None = DEFAULT_CHUNK_BYTES,
         stream_depth: int = 2,
         adaptive_depth: bool = False,
         prefetch_depth: int = 2,
@@ -339,7 +339,7 @@ def simulate(
     prefetch_depth: int = 2,
     throttle: bool | None = None,
     streaming: bool = False,
-    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    chunk_bytes: int | None = DEFAULT_CHUNK_BYTES,
     stream_depth: int = 2,
     adaptive_depth: bool = False,
 ) -> SimResult:
@@ -879,4 +879,339 @@ def simulate(
         n_stalled_chunks=comm.n_stalled_chunks,
         stream_busy_ms=comm.stream_busy_ms,
         n_depth_adjust=comm.n_depth_adjust,
+    )
+
+
+def wave_schedule(
+    g: TaskGraph,
+    assignment: Mapping[str, str],
+    platform: Platform,
+    *,
+    host_group: str | None = None,
+    async_groups: bool = False,
+    streaming: bool = False,
+    chunk_bytes: int | None = None,
+    stream_depth: int = 2,
+    input_bytes: Mapping[str, int] | None = None,
+    throttle: bool | None = None,
+) -> SimResult:
+    """Deterministic model of the FUSED executor's group-super-step schedule.
+
+    Mirrors ``ExecSession(fused=True, cost_clock=True, prefetch_depth=0)``
+    booking-for-booking: the same chain-planning scan, the same donor choice,
+    the same :meth:`CommEngine.fetch`/:meth:`CommEngine.open_stream` calls,
+    and the cost table as the kernel clock — so the simulated and executed
+    virtual timelines agree exactly (see ``tests/test_waves.py``).  With
+    ``async_groups`` every group with a runnable chain dispatches in the same
+    wave (pulls booked at the consumer's own gate); without it group-steps
+    serialize through the previous step's finish, exactly like
+    ``_fused_superstep``.
+
+    Residency is accounted by **interval sweep**, not a sequential running
+    sum: every block contributes a ``[production, last-consumer-finish]``
+    interval on its holding class (pulled copies contribute on the pulling
+    class), and ``peak_mem_bytes`` is the sweep maximum — so two groups'
+    footprints that overlap in wave time are counted as co-resident.  When a
+    class's peak would exceed ``Platform.mem_capacity_bytes`` the sweep
+    evicts the oldest still-active interval (FIFO, like the event
+    simulator's spill) and charges ``spill_events``/``spilled_bytes``.
+
+    ``input_bytes`` sizes the seeded ``<kernel>/in`` host blocks (the
+    executor derives them from the real arrays); absent keys transfer for
+    free, matching a zero-byte seed.
+    """
+    g.validate()
+    classes = platform.classes
+    host = host_group if host_group is not None else min(classes)
+    node_of = {cls: platform.node_of_class(cls) for cls in classes}
+    comm = CommEngine(platform.topo, throttle=throttle)
+    in_bytes = dict(input_bytes or {})
+
+    valid: dict[str, set[str]] = {}  # block -> groups holding a copy
+    vt_block: dict[tuple[str, str], float] = {}
+    seeds: set[str] = set()
+    order = [n for n in g.topo_order() if g.nodes[n].op != "source"]
+    for n in order:
+        preds = g.predecessors(n)
+        if not preds or any(g.nodes[p].op == "source" for p in preds):
+            block = n + "/in"
+            seeds.add(block)
+            valid[block] = {host}
+            vt_block[(block, host)] = 0.0
+
+    done: set[str] = set()
+    group_free: dict[str, float] = {}
+    vnow = 0.0
+    vmax = 0.0
+    n_waves = 0
+    pending: list[tuple[str, str, object]] = []  # (block, grp, channel)
+    block_window: dict[str, tuple[float, float]] = {}
+    busy: dict[str, float] = {}
+    per_class: dict[str, int] = {}
+    trace: list[tuple] = []
+    # residency intervals: [cls, bytes, start, end]; ``end is None`` until the
+    # block's last consumer retires (exit blocks close at the makespan)
+    intervals: list[list] = []
+    own_iv: dict[str, list] = {}  # kernel -> its output's interval
+
+    def pull(key: str, nbytes: int, grp: str, now: float) -> int:
+        """Mirror of ``ExecSession._pull`` (demand path) on model state."""
+        ent = valid.get(key)
+        if ent is None or grp in ent:
+            return 0
+        donor = min(ent, key=lambda o: (vt_block.get((key, o), 0.0), o))
+        nb = nbytes or in_bytes.get(key, 0)
+        src_ready = vt_block.get((key, donor), 0.0)
+        if streaming:
+            win = block_window.get(key)
+            src_start = (
+                win[0]
+                if win is not None and abs(win[1] - src_ready) <= 1e-9
+                else None
+            )
+            ch = comm.open_stream(
+                key,
+                node_of[donor],
+                node_of[grp],
+                nb,
+                now=now,
+                src_start=src_start,
+                src_ready=src_ready,
+                chunk_bytes=chunk_bytes,
+                depth=stream_depth,
+            )
+            if ch is not None:
+                vt_block[(key, grp)] = ch.first_ready
+                pending.append((key, grp, ch))
+                ent.add(grp)
+                return nb
+        te = comm.fetch(
+            key, node_of[donor], node_of[grp], nb, now=now, src_ready=src_ready
+        )
+        vt_block[(key, grp)] = te
+        ent.add(grp)
+        return nb
+
+    n_transfers = 0
+    nbytes_total = 0
+    while len(done) < len(order):
+        # pass 1 — chain planning, one chain per still-unclaimed group (the
+        # serial arm plans exactly one chain per round)
+        plans: list[dict] = []
+        claimed: set[str] = set()
+        while True:
+            grp: str | None = None
+            members: list[str] = []
+            midx: dict[str, int] = {}
+            entries: list[list] = []
+            for n in order:
+                if n in done:
+                    continue
+                n_grp = assignment.get(n, host)
+                if n_grp in claimed or (grp is not None and n_grp != grp):
+                    continue
+                preds = g.predecessors(n)
+                entry: list = []
+                runnable = True
+                for p in preds:
+                    if p in midx:
+                        continue  # intra-chain: handled by group_free order
+                    if g.nodes[p].op == "source":
+                        entry.append((n + "/in", 0))
+                    elif p in done:
+                        entry.append((p, g.edge(p, n).nbytes))
+                    else:
+                        runnable = False
+                        break
+                if not runnable:
+                    continue
+                if not preds and (n + "/in") in valid:
+                    entry.append((n + "/in", 0))
+                if grp is None:
+                    grp = n_grp
+                midx[n] = len(members)
+                members.append(n)
+                entries.append(entry)
+            if grp is None:
+                break
+            claimed.add(grp)
+            plans.append(dict(grp=grp, members=members, midx=midx, entries=entries))
+            if not async_groups:
+                break
+        if not plans:
+            raise RuntimeError(
+                f"deadlock: {len(done)}/{len(order)} kernels scheduled"
+            )
+
+        # pass 2 — pulls (async: at the consumer's own gate; serial: at the
+        # previous group-step's finish, i.e. the round-start clock)
+        consumers: dict[str, set[str]] = {}
+        for pl in plans:
+            grp = pl["grp"]
+            gate = group_free.get(grp, 0.0)
+            pulled: set[str] = set()
+            ready_vt: list[float] = []
+            member_chans: list[list] = []
+            for i, n in enumerate(pl["members"]):
+                rv = 0.0
+                nch0 = len(pending)
+                for key, nb in pl["entries"][i]:
+                    if key not in valid:
+                        continue
+                    if key not in pulled:
+                        moved = pull(key, nb, grp, gate if async_groups else vnow)
+                        if moved:
+                            n_transfers += 1
+                            nbytes_total += moved
+                        pulled.add(key)
+                        consumers.setdefault(key, set()).add(grp)
+                    rv = max(rv, vt_block.get((key, grp), 0.0))
+                ready_vt.append(rv)
+                member_chans.append(pending[nch0:])
+            pending.clear()
+            pl.update(ready_vt=ready_vt, member_chans=member_chans, pulled=pulled)
+
+        # wave seal — mirror of the executor's cross-boundary release +
+        # donation: copies dead outside the wave collapse onto the consuming
+        # chain, whose copy is then consumed by the fused call (the
+        # serialized arm, like _fused_superstep, never releases)
+        wave_grp_of = {
+            n: pl["grp"] for pl in plans for n in pl["members"]
+        }
+        for pl in plans if async_groups else []:
+            grp = pl["grp"]
+            for key in pl["pulled"]:
+                if key in seeds or key not in g.nodes:
+                    continue
+                succs = g.successors(key)
+                if not succs or len(consumers.get(key, ())) != 1:
+                    continue
+                if not all(s in done or wave_grp_of.get(s) == grp for s in succs):
+                    continue
+                ent = valid.get(key)
+                if ent is None:
+                    continue
+                for ogrp in [o for o in ent if o != grp]:
+                    ent.discard(ogrp)
+                    vt_block.pop((key, ogrp), None)
+
+        # retire — the cost table IS the clock (cost_clock semantics)
+        wave_hi = 0.0
+        for pl in plans:
+            grp = pl["grp"]
+            member_set = pl["midx"].keys()
+            for i, n in enumerate(pl["members"]):
+                kms = g.nodes[n].cost_on(grp)
+                vstart = max(group_free.get(grp, 0.0), pl["ready_vt"][i])
+                vfinish = vstart + kms
+                for key, cgrp, ch in pl["member_chans"][i]:
+                    ch_finish, arrival_last = ch.drain(vstart, kms)
+                    vfinish = max(vfinish, ch_finish)
+                    vt_block[(key, cgrp)] = arrival_last
+                group_free[grp] = vfinish
+                vmax = max(vmax, vfinish)
+                if not async_groups:
+                    vnow = vfinish
+                block_window[n] = (vstart, vfinish)
+                wave_hi = max(wave_hi, vfinish)
+                valid[n] = {grp}
+                vt_block[(n, grp)] = vfinish
+                done.add(n)
+                busy[grp] = busy.get(grp, 0.0) + kms
+                per_class[grp] = per_class.get(grp, 0) + 1
+                trace.append((n, grp, vstart, vfinish))
+                mb = g.nodes[n].mem_bytes
+                if mb > 0:
+                    iv = [grp, mb, vstart, None]
+                    own_iv[n] = iv
+                    intervals.append(iv)
+                # close consumed predecessors' intervals at this finish
+                for p in g.predecessors(n):
+                    iv = own_iv.get(p)
+                    if iv is not None and all(
+                        s in done for s in g.successors(p)
+                    ):
+                        iv[3] = vfinish
+            # donation mirror: the chain's sole dead externals are consumed
+            for key in pl["pulled"]:
+                if key in seeds or key not in g.nodes:
+                    continue
+                ent = valid.get(key)
+                if ent != {grp} or not g.successors(key):
+                    continue
+                if all(s in done or s in member_set for s in g.successors(key)):
+                    ent.discard(grp)
+                    if not ent:
+                        del valid[key]
+                    vt_block.pop((key, grp), None)
+            # pulled-copy residency: a cross-group copy is co-resident on the
+            # pulling class from its arrival until the chain retires
+            for key in pl["pulled"]:
+                mb = (
+                    g.nodes[key].mem_bytes
+                    if key in g.nodes
+                    else in_bytes.get(key, 0)
+                )
+                arr = vt_block.get((key, grp))
+                if mb > 0 and arr is not None:
+                    intervals.append([grp, mb, arr, group_free.get(grp, 0.0)])
+        if async_groups:
+            vnow = max(vnow, wave_hi)
+            comm.poll(vnow)
+        n_waves += 1
+
+    # interval sweep: per-class co-resident peak + FIFO spill emulation.
+    # (The old sequential-group accounting under-counted exactly the overlap
+    # waves create: two groups' live footprints in the same wall-clock span.)
+    peak_mem: dict[str, float] = {}
+    spills = 0
+    spilled = 0
+    for cls in {iv[0] for iv in intervals}:
+        cap = platform.mem_cap_of(cls)
+        ivs = sorted(
+            (
+                [iv[2], vmax if iv[3] is None else iv[3], iv[1]]
+                for iv in intervals
+                if iv[0] == cls
+            ),
+            key=lambda e: e[0],
+        )
+        active: list[list] = []  # FIFO of [start, end, bytes] still resident
+        load = 0.0
+        peak = 0.0
+        for start, end, nb in ivs:
+            active = [a for a in active if a[1] > start + 1e-9]
+            load = sum(a[2] for a in active)
+            while load + nb > cap + 1e-6 and active:
+                victim = active.pop(0)  # oldest resident spills to host
+                load -= victim[2]
+                spills += 1
+                spilled += victim[2]
+            active.append([start, end, nb])
+            load += nb
+            peak = max(peak, load)
+        peak_mem[cls] = peak
+
+    return SimResult(
+        makespan_ms=vmax,
+        n_transfers=n_transfers,
+        bytes_transferred=nbytes_total,
+        transfer_busy_ms=comm.busy_ms,
+        proc_busy_ms=busy,
+        kernels_per_class=per_class,
+        decision_overhead_ms=0.0,
+        offline_decision_ms=0.0,
+        trace=trace,
+        transfers=[
+            (t.block, t.src, t.dst, t.start, t.finish) for t in comm.transfers
+        ],
+        spill_events=spills,
+        spilled_bytes=spilled,
+        peak_mem_bytes=peak_mem,
+        lane_busy_ms=comm.lane_busy_ms(),
+        tier_busy_ms=comm.tier_busy_ms(),
+        n_streamed=comm.n_streamed,
+        n_stalled_chunks=comm.n_stalled_chunks,
+        stream_busy_ms=comm.stream_busy_ms,
+        n_waves=n_waves,
     )

@@ -38,8 +38,14 @@ class HeartbeatMonitor:
     """Tracks per-group liveness + EWMA step times; flags failures and
     stragglers."""
 
-    def __init__(self, groups: list[str], *, timeout_s: float = 10.0,
-                 straggle_factor: float = 1.5, ewma: float = 0.3):
+    def __init__(
+        self,
+        groups: list[str],
+        *,
+        timeout_s: float = 10.0,
+        straggle_factor: float = 1.5,
+        ewma: float = 0.3,
+    ):
         self.timeout_s = timeout_s
         self.straggle_factor = straggle_factor
         self.ewma = ewma
@@ -50,9 +56,11 @@ class HeartbeatMonitor:
     def report(self, hb: Heartbeat):
         self.last[hb.group] = hb
         prev = self.step_ms.get(hb.group, 0.0)
-        self.step_ms[hb.group] = (hb.step_time_ms if prev == 0.0 else
-                                  (1 - self.ewma) * prev +
-                                  self.ewma * hb.step_time_ms)
+        self.step_ms[hb.group] = (
+            hb.step_time_ms
+            if prev == 0.0
+            else (1 - self.ewma) * prev + self.ewma * hb.step_time_ms
+        )
 
     def failed(self, now: float | None = None) -> list[str]:
         now = time.time() if now is None else now
@@ -68,8 +76,7 @@ class HeartbeatMonitor:
         if len(alive) < 2:
             return []
         med = sorted(alive.values())[len(alive) // 2]
-        return [g for g, t in alive.items()
-                if t > self.straggle_factor * med]
+        return [g for g, t in alive.items() if t > self.straggle_factor * med]
 
 
 @dataclasses.dataclass
@@ -80,9 +87,12 @@ class ReplanResult:
     reason: str
 
 
-def throughput_targets(step_ms: Mapping[str, float], *,
-                       workers: Mapping[str, int] | None = None,
-                       dead: Iterable[str] = ()) -> dict[str, float]:
+def throughput_targets(
+    step_ms: Mapping[str, float],
+    *,
+    workers: Mapping[str, int] | None = None,
+    dead: Iterable[str] = (),
+) -> dict[str, float]:
     """Target work fractions proportional to *measured* throughput
     (1 / step-time, optionally scaled by worker count) — the paper's
     Formula (1)/(2) with live data instead of offline profiles.  Dead or
@@ -105,9 +115,14 @@ def feed_policy(policy, monitor: HeartbeatMonitor) -> dict[str, float]:
     return view
 
 
-def replan(g: TaskGraph, step_ms: Mapping[str, float],
-           dead: list[str], *, edge_ms: Callable[[int], float] | None = None,
-           seed: int = 1) -> ReplanResult:
+def replan(
+    g: TaskGraph,
+    step_ms: Mapping[str, float],
+    dead: list[str],
+    *,
+    edge_ms: Callable[[int], float] | None = None,
+    seed: int = 1,
+) -> ReplanResult:
     """Re-partition a task graph after failures / straggle.
 
     Surviving groups get target fractions proportional to their *measured*
@@ -122,6 +137,7 @@ def replan(g: TaskGraph, step_ms: Mapping[str, float],
 
 
 # -- elastic data-parallel mesh resize ---------------------------------------
+
 
 def surviving_mesh_shape(n_chips_alive: int, model_par: int) -> tuple[int, int]:
     """Largest (data, model) mesh that fits the survivors, keeping TP intact.

@@ -340,6 +340,7 @@ def run_arena_executed(
     drop_t_ms: float = 1.0,
     hier: bool = False,
     fused: bool = False,
+    async_groups: bool = False,
 ) -> tuple[list, SchedulerArena]:
     """The arena stream EXECUTED on real device groups.
 
@@ -353,7 +354,10 @@ def run_arena_executed(
     (shared-uplink contention + prefetch throttling), matching the
     simulated ``run_arena(hier=True)`` stream.  ``fused=True`` dispatches
     each group's runnable kernel chain as one compiled super-step (async
-    dispatch + persistent compilation cache) instead of kernel-at-a-time."""
+    dispatch + persistent compilation cache) instead of kernel-at-a-time;
+    ``async_groups=True`` additionally dispatches every group whose
+    cross-group inputs are satisfied in the same dependency wave — one
+    barrier per wave instead of per group (requires ``fused``)."""
     plat, drop_proc, costs_prefill, costs_decode = _arena_setup(hier, drop_proc)
     events_at = {}
     if drop_step is not None:
@@ -372,7 +376,8 @@ def run_arena_executed(
         arrival_spread_ms=0.5,
         events_at=events_at,
     )
-    executor = ServingExecutor(groups_for_platform(plat), plat, side=side, fused=fused)
+    executor = ServingExecutor(groups_for_platform(plat), plat, side=side,
+                               fused=fused, async_groups=async_groups)
     factories = {
         p: (lambda n=p: as_executed(make_policy(n, **_policy_kwargs(n))))
         for p in policies
@@ -536,6 +541,16 @@ def main(argv=None):
         "fallback the CI baseline pins",
     )
     ap.add_argument(
+        "--async-groups",
+        action=argparse.BooleanOptionalAction,
+        default=False,
+        help="with --execute --fused: dispatch every group whose "
+        "cross-group inputs are satisfied in the same dependency wave "
+        "(one barrier per wave, non-blocking comm pulls) instead of "
+        "serializing group-steps; --no-async-groups keeps the "
+        "serialized fused dispatch bit-identical",
+    )
+    ap.add_argument(
         "--bench-out",
         type=str,
         default="BENCH_serve.json",
@@ -594,11 +609,13 @@ def main(argv=None):
                 side=args.kernel_side,
                 hier=args.hier,
                 fused=args.fused,
+                async_groups=args.async_groups,
             )
             print(
                 "\n[serve] executed on device groups "
                 f"({', '.join(r.policy for r in xrows)}"
-                f"{', fused super-steps' if args.fused else ''}):"
+                f"{', fused super-steps' if args.fused else ''}"
+                f"{', async waves' if args.async_groups else ''}):"
             )
             print(format_table(xrows))
             meta = {
@@ -610,6 +627,7 @@ def main(argv=None):
                 "kernel_side": args.kernel_side,
                 "hier": args.hier,
                 "fused": args.fused,
+                "async_groups": args.async_groups,
             }
             write_bench(args.bench_out, meta=meta, sim_rows=rows, arena=xarena)
             print(f"[serve] wrote {args.bench_out}")

@@ -1,0 +1,421 @@
+"""Async multi-group waves: the dependency-driven wave executor
+(``ExecSession(fused=True, async_groups=True)``), its deterministic mirror
+(``simulate.wave_schedule``), wave-seal donation across group boundaries,
+wave-concurrent residency accounting, and the tier-aware streaming chunk
+sizes that ride along (core/executor.py + core/simulate.py + core/comm.py).
+
+Plain pytest, CPU-only: every device group aliases the single CPU device.
+The serialized fused arm (PR 7 semantics, ``async_groups=False``) is the
+bit-identity reference throughout — waves must change WHEN things run,
+never WHAT they compute.
+"""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.comm import (
+    DEFAULT_CHUNK_BYTES,
+    CommEngine,
+    HierTopology,
+    Topology,
+)
+from repro.core.cost import LEAF_NIC, PCIE3_X16, POD_UPLINK, RACK_UPLINK
+from repro.core.executor import JaxExecutor, attach_matrix_kernels
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import make_policy
+from repro.core.serving import ServingExecutor, groups_for_platform
+from repro.core.simulate import make_group_platform, wave_schedule
+from repro.core.arena import make_request_stream
+from repro.launch.serve import heterogeneous_platform
+
+DEV = jax.devices()[0]
+KV = 1 << 16
+SIDE = 8
+
+
+def _session(g, asg, inputs, groups, *, async_groups, **kw):
+    ex = JaxExecutor(groups)
+    return ex.session(g, asg, inputs, fused=True, async_groups=async_groups, **kw)
+
+
+def _run(g, asg, inputs, groups, *, async_groups, **kw):
+    s = _session(g, asg, inputs, groups, async_groups=async_groups, **kw)
+    s.run_all()
+    return s, s.result()
+
+
+def _outs(res):
+    return {k: np.asarray(v) for k, v in res.outputs.items()}
+
+
+def _diamond():
+    """Quotient DAG a -> {b, c} -> d with one group per kernel: three
+    topological levels, four groups."""
+    g = TaskGraph()
+    g.add("a", op="matadd", costs={"ga": 1.0}, out_bytes=KV)
+    g.add("b", op="matadd", costs={"gb": 1.0}, out_bytes=KV)
+    g.add("c", op="matmul", costs={"gc": 1.0}, out_bytes=KV)
+    g.add("d", op="matadd", costs={"gd": 1.0}, out_bytes=KV)
+    for e in [("a", "b"), ("a", "c"), ("b", "d"), ("c", "d")]:
+        g.add_edge(*e, nbytes=KV)
+    g.validate()
+    asg = {"a": "ga", "b": "gb", "c": "gc", "d": "gd"}
+    groups = {grp: DEV for grp in asg.values()}
+    return g, asg, groups
+
+
+# -- wave count == quotient-DAG topological levels ----------------------------
+
+
+def test_wave_count_diamond_levels():
+    g, asg, groups = _diamond()
+    inputs = attach_matrix_kernels(g, SIDE)
+    sa, ra = _run(g, asg, inputs, groups, async_groups=False)
+    sb, rb = _run(g, asg, inputs, groups, async_groups=True)
+    # serialized: one dispatch barrier per group-step; waves: one per level
+    assert ra.n_waves == 4
+    assert rb.n_waves == 3
+    for k, v in _outs(ra).items():
+        assert np.array_equal(_outs(rb)[k], v)
+
+
+def test_wave_count_fanout_two_levels():
+    """a fans out to three single-kernel groups: every consumer joins the
+    same wave, so 4 serialized barriers collapse to 2."""
+    g = TaskGraph()
+    g.add("a", op="matadd", costs={"g0": 1.0}, out_bytes=KV)
+    for grp in ("g1", "g2", "g3"):
+        g.add(f"k_{grp}", op="matadd", costs={grp: 1.0}, out_bytes=KV)
+        g.add_edge("a", f"k_{grp}", nbytes=KV)
+    g.validate()
+    asg = {"a": "g0", "k_g1": "g1", "k_g2": "g2", "k_g3": "g3"}
+    groups = {grp: DEV for grp in ("g0", "g1", "g2", "g3")}
+    inputs = attach_matrix_kernels(g, SIDE)
+    nodes = {grp: i for i, grp in enumerate(groups)}
+    kw = dict(cost_clock=True, group_nodes=nodes, prefetch_depth=0)
+    comm_a = CommEngine(Topology.dedicated(PCIE3_X16))
+    comm_b = CommEngine(Topology.dedicated(PCIE3_X16))
+    _, ra = _run(g, asg, inputs, groups, async_groups=False, comm=comm_a, **kw)
+    _, rb = _run(g, asg, inputs, groups, async_groups=True, comm=comm_b, **kw)
+    assert ra.n_waves == 4 and rb.n_waves == 2
+    # independent groups overlap inside the wave on the virtual timeline
+    assert rb.overlap_ms > 0.0
+    assert rb.model_makespan_ms < ra.model_makespan_ms
+
+
+# -- bitwise parity on randomized multi-group graphs --------------------------
+
+
+def _random_graph(rng, n_nodes=12, n_groups=3):
+    g = TaskGraph()
+    asg = {}
+    for i in range(n_nodes):
+        name = f"n{i}"
+        grp = f"g{rng.randint(n_groups)}"
+        op = "matadd" if rng.rand() < 0.5 else "matmul"
+        g.add(
+            name,
+            op=op,
+            costs={f"g{j}": 1.0 for j in range(n_groups)},
+            out_bytes=KV,
+        )
+        asg[name] = grp
+        if i > 0:
+            n_preds = min(i, 1 + rng.randint(2))
+            for p in rng.choice(i, size=n_preds, replace=False):
+                g.add_edge(f"n{p}", name, nbytes=KV)
+    g.validate()
+    return g, asg
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_async_waves_bitwise_parity_randomized(seed):
+    rng = np.random.RandomState(seed)
+    g, asg = _random_graph(rng)
+    inputs = attach_matrix_kernels(g, SIDE)
+    groups = {f"g{j}": DEV for j in range(3)}
+    _, ra = _run(g, asg, inputs, groups, async_groups=False)
+    _, rb = _run(g, asg, inputs, groups, async_groups=True)
+    assert set(ra.outputs) == set(rb.outputs)
+    for k, v in _outs(ra).items():
+        assert np.array_equal(_outs(rb)[k], v), f"{k} diverged (seed={seed})"
+    assert rb.n_waves <= ra.n_waves
+
+
+# -- donation across group boundaries (wave seal) -----------------------------
+
+
+def test_donation_only_after_wave_seal():
+    """a(g0) -> b(g1) -> c(g1): the b/c chain pulls a cross-group, leaving
+    two live copies — the serialized arm can never donate it.  The wave seal
+    sees every remaining consumer of ``a`` inside the one consuming chain,
+    drops g0's copy, and the then-sole g1 copy is donated into the fused
+    call."""
+    g = TaskGraph()
+    g.add("a", op="matadd", costs={"g0": 1.0}, out_bytes=KV)
+    g.add("b", op="matadd", costs={"g1": 1.0}, out_bytes=KV)
+    g.add("c", op="matadd", costs={"g1": 1.0}, out_bytes=KV)
+    g.add_edge("a", "b", nbytes=KV)
+    g.add_edge("b", "c", nbytes=KV)
+    g.validate()
+    inputs = attach_matrix_kernels(g, SIDE)
+    asg = {"a": "g0", "b": "g1", "c": "g1"}
+    groups = {"g0": DEV, "g1": DEV}
+    sa, ra = _run(g, asg, inputs, groups, async_groups=False, prefetch_depth=0)
+    sb, rb = _run(g, asg, inputs, groups, async_groups=True, prefetch_depth=0)
+    ser = {tuple(r.members): r for r in sa.superstep_runs}
+    wav = {tuple(r.members): r for r in sb.superstep_runs}
+    assert ser[("b", "c")].donated == []  # two live copies: never donated
+    assert wav[("b", "c")].donated == ["a"]  # sealed -> sole copy -> donated
+    assert "a" in sa.valid
+    assert "a" not in sb.valid  # the donated copy is gone from consistency
+    assert np.array_equal(_outs(ra)["c"], _outs(rb)["c"])
+
+
+# -- mid-wave eviction --------------------------------------------------------
+
+
+def test_midwave_eviction_requeues_unmaterialized_chain_transitively():
+    """Losing a wave-dispatched chain's materialized tail before the next
+    wave consumes it must transitively re-queue the unmaterialized interior,
+    exactly like the serialized fused path."""
+    g = TaskGraph()
+    prev = None
+    for i in range(3):
+        g.add(f"k{i}", op="matadd", costs={"g0": 1.0}, out_bytes=KV)
+        if prev is not None:
+            g.add_edge(prev, f"k{i}", nbytes=KV)
+        prev = f"k{i}"
+    g.add("k3", op="matadd", costs={"g1": 1.0}, out_bytes=KV)
+    g.add_edge("k2", "k3", nbytes=KV)
+    g.validate()
+    inputs = attach_matrix_kernels(g, SIDE)
+    asg = {"k0": "g0", "k1": "g0", "k2": "g0", "k3": "g1"}
+    groups = {"g0": DEV, "g1": DEV}
+    _, ref = _run(g, asg, inputs, groups, async_groups=False)
+    s = _session(g, asg, inputs, groups, async_groups=True)
+    for _ in range(3):  # drain wave 1 (the whole g0 chain)
+        assert s.step().group == "g0"
+    assert set(s.blocks) == {"k2"}  # k0/k1 were dead intermediates
+    assert s.evict_group("g0") == ["k2", "k1", "k0"]
+    s.run_all()  # wave re-runs the g0 chain, then k3's wave on g1
+    res = s.result()
+    assert res.reexecuted == ["k2", "k1", "k0"]
+    assert np.array_equal(_outs(res)["k3"], _outs(ref)["k3"])
+
+
+# -- simulated / executed timeline agreement ----------------------------------
+
+
+def test_wave_schedule_agrees_with_executor_both_arms():
+    """``wave_schedule`` mirrors the fused executor booking-for-booking:
+    under ``cost_clock`` the virtual timelines agree EXACTLY (makespan,
+    transfer count, wave count) in both the serialized and async arms."""
+    g = TaskGraph()
+    g.add("a", op="matadd", costs={"g1": 2.0}, out_bytes=KV)
+    g.add("b", op="matadd", costs={"g2": 3.0}, out_bytes=KV)
+    g.add("c", op="matmul", costs={"g3": 1.0}, out_bytes=KV)
+    g.add("j", op="matadd", costs={"g1": 1.0}, out_bytes=KV)
+    for e in [("a", "j"), ("b", "j"), ("c", "j")]:
+        g.add_edge(*e, nbytes=KV)
+    g.validate()
+    asg = {"a": "g1", "b": "g2", "c": "g3", "j": "g1"}
+    inputs = attach_matrix_kernels(g, SIDE)
+    input_bytes = {
+        k: int(np.asarray(v).size * np.asarray(v).dtype.itemsize)
+        for k, v in inputs.items()
+    }
+    sizes = {"host": 1, "g1": 1, "g2": 1, "g3": 1}
+    plat = make_group_platform(
+        sizes, PCIE3_X16, topology=Topology.dedicated(PCIE3_X16)
+    )
+    group_nodes = {cls: i for i, cls in enumerate(sizes)}
+    groups = {cls: DEV for cls in sizes}
+    for async_groups in (False, True):
+        _, res = _run(
+            g,
+            asg,
+            inputs,
+            groups,
+            async_groups=async_groups,
+            host_group="host",
+            comm=CommEngine(Topology.dedicated(PCIE3_X16)),
+            group_nodes=group_nodes,
+            prefetch_depth=0,
+            cost_clock=True,
+        )
+        sim = wave_schedule(
+            g,
+            asg,
+            plat,
+            host_group="host",
+            async_groups=async_groups,
+            input_bytes=input_bytes,
+        )
+        assert sim.makespan_ms == pytest.approx(res.model_makespan_ms, abs=1e-9)
+        assert sim.n_transfers == res.n_transfers
+        assert sim.n_waves == res.n_waves
+    # and the async arm actually overlapped the three producer groups
+    serial = wave_schedule(g, asg, plat, host_group="host")
+    waved = wave_schedule(g, asg, plat, host_group="host", async_groups=True)
+    assert waved.makespan_ms < serial.makespan_ms
+    assert waved.n_waves < serial.n_waves
+    # groups b and c really ran in the same wall-clock span as a
+    spans = {t[1]: (t[2], t[3]) for t in waved.trace if t[0] in "abc"}
+    assert spans["g2"][0] < spans["g1"][1] and spans["g3"][0] < spans["g1"][1]
+
+
+# -- wave-concurrent residency (interval sweep) -------------------------------
+
+
+def _residency_graph(mem):
+    g = TaskGraph()
+    g.add("k0", op="matadd", costs={"g1": 1.0}, out_bytes=KV, mem_bytes=mem)
+    g.add("k1", op="matadd", costs={"g1": 1.0}, out_bytes=KV, mem_bytes=mem)
+    g.add_edge("k0", "k1", nbytes=KV)
+    g.validate()
+    return g
+
+
+def test_residency_counts_pulled_copy_and_chain_outputs_coresident():
+    mem = 1 << 20
+    seed_bytes = 1 << 19
+    g = _residency_graph(mem)
+    asg = {"k0": "g1", "k1": "g1"}
+    plat = make_group_platform({"host": 1, "g1": 1}, PCIE3_X16)
+    sim = wave_schedule(
+        g,
+        asg,
+        plat,
+        host_group="host",
+        async_groups=True,
+        input_bytes={"k0/in": seed_bytes},
+    )
+    # while k1 runs: the pulled seed copy, k0's output (k1 still reads it)
+    # and k1's output are all live on g1 at once — the sweep sees the sum
+    assert sim.peak_mem_bytes["g1"] == pytest.approx(seed_bytes + 2 * mem)
+    assert sim.spill_events == 0
+
+
+def test_residency_capacity_cap_forces_fifo_spill():
+    mem = 1 << 20
+    seed_bytes = 1 << 19
+    cap = seed_bytes + mem  # cannot hold the third co-resident block
+    g = _residency_graph(mem)
+    asg = {"k0": "g1", "k1": "g1"}
+    plat = make_group_platform(
+        {"host": 1, "g1": 1}, PCIE3_X16, mem_capacity_bytes={"g1": cap}
+    )
+    sim = wave_schedule(
+        g,
+        asg,
+        plat,
+        host_group="host",
+        async_groups=True,
+        input_bytes={"k0/in": seed_bytes},
+    )
+    assert sim.spill_events >= 1
+    assert sim.spilled_bytes > 0
+    assert sim.peak_mem_bytes["g1"] <= cap + 1e-6
+
+
+# -- tier-aware streaming chunk sizes (satellite) -----------------------------
+
+
+def _hier():
+    return HierTopology(
+        leaf=LEAF_NIC,
+        rack=RACK_UPLINK,
+        pod=POD_UPLINK,
+        node_rack={0: "r0", 1: "r0", 2: "r1"},
+        rack_pod={"r0": "p0", "r1": "p1"},
+    )
+
+
+def test_stream_chunk_bytes_flat_keeps_fixed_default():
+    flat = Topology.dedicated(PCIE3_X16)
+    assert flat.stream_chunk_bytes() == DEFAULT_CHUNK_BYTES
+    assert flat.stream_chunk_bytes(0, 1) == DEFAULT_CHUNK_BYTES
+
+
+def test_stream_chunk_bytes_scales_with_bottleneck_tier():
+    topo = _hier()
+    same_rack = topo.stream_chunk_bytes(0, 1)  # leaf NIC bottleneck
+    cross_pod = topo.stream_chunk_bytes(0, 2)  # DCN-class pod uplink
+    # ~4 latency-bandwidth products, pow2-rounded: 200 KB -> 256 KiB for the
+    # leaf NIC, 1.25 MB -> 2 MiB for the high-latency pod uplink
+    assert same_rack == 1 << 18
+    assert cross_pod == 1 << 21
+    assert cross_pod > same_rack
+    # endpoint-free sizing prices at the worst tier, like transfer_ms
+    assert topo.stream_chunk_bytes() == cross_pod
+
+
+def test_open_stream_uses_tier_default_and_explicit_wins():
+    nb = 1 << 22  # 4 MiB
+    ch = CommEngine(_hier()).open_stream("blk", 0, 2, nb, now=0.0)
+    assert ch.sizes[0] == 1 << 21  # topology-driven cross-pod default
+    assert sum(ch.sizes) == nb
+    ch2 = CommEngine(_hier()).open_stream(
+        "blk", 0, 2, nb, now=0.0, chunk_bytes=1 << 15
+    )
+    assert ch2.sizes[0] == 1 << 15  # explicit size always wins
+    assert len(ch2.sizes) == nb // (1 << 15)
+
+
+# -- AsyncPull ----------------------------------------------------------------
+
+
+def test_async_pull_handle_eta_done_and_poll_callbacks():
+    eng = CommEngine(Topology.dedicated(PCIE3_X16))
+    ref = CommEngine(Topology.dedicated(PCIE3_X16)).fetch(
+        "blk", 0, 1, 1 << 20, now=0.0
+    )
+    h = eng.fetch_async("blk", 0, 1, 1 << 20, now=0.0)
+    assert h.eta == pytest.approx(ref)  # booked exactly like a blocking fetch
+    assert eng.n_transfers == 1
+    assert not h.done(0.0)
+    assert h.done(h.eta)
+    fired = []
+    h.on_complete(fired.append)
+    assert eng.poll(h.eta / 2) == []
+    assert fired == []
+    assert eng.poll(h.eta) == [h]
+    assert fired == [h]
+    assert eng.poll(h.eta) == []  # fires exactly once
+    h.on_complete(fired.append)  # late registration on a fired handle
+    assert fired == [h, h]
+
+
+# -- serving integration ------------------------------------------------------
+
+
+def test_serving_threads_wave_counters_and_matches_serialized():
+    stream = make_request_stream(
+        3, base_requests=4, decode_chunks=3, kv_bytes=KV, seed=0
+    )
+    plat = heterogeneous_platform()
+    pol = make_policy("gp")
+    sx_ser = ServingExecutor(groups_for_platform(plat), plat, side=16, fused=True)
+    rep_ser = sx_ser.run_stream(stream, pol)
+    sx_wav = ServingExecutor(
+        groups_for_platform(plat),
+        plat,
+        side=16,
+        fused=True,
+        async_groups=True,
+    )
+    rep_wav = sx_wav.run_stream(stream, make_policy("gp"))
+    d_ser, d_wav = rep_ser.to_dict(), rep_wav.to_dict()
+    assert d_ser["waves"] > 0  # serialized: one barrier per group-step
+    assert 0 < d_wav["waves"] <= d_ser["waves"]
+    assert "overlap_ms" in d_wav
+    for s_ser, s_wav in zip(rep_ser.steps, rep_wav.steps):
+        assert s_wav.n_kernels == s_ser.n_kernels
+        assert s_wav.n_waves <= s_ser.n_waves
