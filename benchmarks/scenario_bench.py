@@ -1,0 +1,189 @@
+"""Scenario-zoo sweep: partitioning vs locality-aware stealing vs dmda.
+
+Three serving regimes from :data:`repro.core.arena.SCENARIOS` stress the
+schedulers where the plain prefill/decode stream cannot:
+
+* ``moe`` — top-k expert routing with per-step weight producers and routing
+  drift; shared expert blocks reward colocating an expert's users, and a
+  mid-stream worker drop forces migration of that affinity;
+* ``specdec`` — speculative verify-or-discard chains: the accepted-prefix
+  prune lands mid-flight, so over-committing the fast group to draft tails
+  is pure loss;
+* ``colocate`` — the serving stream plus periodic fine-tune jobs costed
+  from ``launch/train.py``'s model configs (6ND), an order of magnitude
+  fatter than serving kernels.
+
+Each (scenario, churn) point replays the IDENTICAL stream through ``dmda``
+(the HEFT-family online baseline), ``incremental-gp`` (the paper's policy),
+and ``affinity-steal`` (per-group deques + topology-priced work stealing).
+The compared metric is mean per-interval makespan.
+
+Acceptance (``--check``):
+
+* ``incremental-gp`` never loses more than ``GP_LOSS_MAX`` to
+  ``affinity-steal`` at any swept point — the partitioner stays competitive
+  on workloads its cut objective never saw;
+* ``affinity-steal`` strictly beats ``dmda`` at churn >= ``STEAL_CHURN``
+  — under churn, chasing resident bytes beats per-task greedy ETA races.
+
+Everything is deterministic in the stream seeds.  Usage::
+
+    PYTHONPATH=src python -m benchmarks.scenario_bench [--quick]
+        [--out BENCH_scenarios.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.arena import SCENARIOS, SchedulerArena
+from repro.core.simulate import WorkerDrop
+from repro.launch.serve import _policy_kwargs, heterogeneous_platform
+
+from .common import emit
+
+POLICIES = ("dmda", "incremental-gp", "affinity-steal")
+EXTRA_FULL_POLICIES = ("eager", "heft")  # informative only, never gated
+GP_LOSS_MAX = 0.10   # incremental-gp may lose <= 10% mean makespan to steal
+STEAL_CHURN = 0.3    # at churn >= this, affinity-steal must beat dmda
+CHURNS = (0.0, 0.3, 0.5)
+
+# Per-scenario stream shapes.  ``drops=True`` kills small1 mid-step-1 and
+# keeps it dead (fresh platform copy per step), but only at churn > 0 —
+# the elastic + churn regime is where stealing's migration story lives.
+# specdec/colocate run drop-free: a 2-worker fleet starves the partitioner
+# on 40ms verify kernels / 6ND train chunks, which would gate on capacity,
+# not policy (see docs/scenarios.md).
+SCENARIO_CFG = {
+    "moe": {"kw": {"base_requests": 10, "kv_bytes": 16 << 20, "seed": 3},
+            "drops": True},
+    "specdec": {"kw": {"base_requests": 12, "kv_bytes": 96 << 20,
+                       "draft_len": 6, "seed": 0},
+                "drops": False},
+    "colocate": {"kw": {"base_requests": 12, "kv_bytes": 64 << 20,
+                        "train_chunks": 4, "train_batch": 4, "seed": 0},
+                 "drops": False},
+}
+
+# QUICK is also the gate configuration; FULL stretches the stream and adds
+# the ungated eager/heft baselines for context.
+QUICK = {"steps": 5, "policies": POLICIES}
+FULL = {"steps": 8, "policies": POLICIES + EXTRA_FULL_POLICIES}
+
+
+def _drop_events(steps: int) -> dict:
+    ev = {1: (WorkerDrop(20.0, "small1"),)}
+    for later in range(2, steps):
+        ev[later] = (WorkerDrop(0.0, "small1"),)
+    return ev
+
+
+def run_point(scenario: str, churn: float, *, steps: int,
+              policies=POLICIES) -> dict:
+    """One swept (scenario, churn): the same stream through every policy
+    (fresh platform + policy instances each, so state never leaks between
+    churn points)."""
+    cfg = SCENARIO_CFG[scenario]
+    kw = dict(cfg["kw"], churn=churn, arrival_spread_ms=10.0)
+    if cfg["drops"] and churn > 0:
+        kw["events_at"] = _drop_events(steps)
+    stream = SCENARIOS[scenario](steps, **kw)
+    arena = SchedulerArena(
+        heterogeneous_platform(), policies,
+        policy_kwargs={p: _policy_kwargs(p) for p in policies})
+    rows = arena.run(stream)
+    per_policy = {
+        r.policy: {
+            "mean_makespan_ms": r.mean_makespan_ms,
+            "total_makespan_ms": r.total_makespan_ms,
+            "transfers": r.transfers,
+            "decision_ms": r.decision_ms,
+            "aborted": r.aborted,
+        }
+        for r in rows
+    }
+    aff = per_policy["affinity-steal"]["mean_makespan_ms"]
+    return {
+        "scenario": scenario,
+        "churn": churn,
+        "policies": per_policy,
+        "gp_loss": per_policy["incremental-gp"]["mean_makespan_ms"] / aff - 1.0,
+        "steal_win_dmda":
+            1.0 - aff / per_policy["dmda"]["mean_makespan_ms"],
+    }
+
+
+def check_rows(rows: list[dict]) -> list[str]:
+    failures: list[str] = []
+    for row in rows:
+        tag = f"{row['scenario']} churn {row['churn']}"
+        if row["gp_loss"] > GP_LOSS_MAX:
+            failures.append(
+                f"{tag}: incremental-gp loses {row['gp_loss']:.1%} mean "
+                f"makespan to affinity-steal (max {GP_LOSS_MAX:.0%})")
+        if row["churn"] >= STEAL_CHURN - 1e-9 and row["steal_win_dmda"] <= 0:
+            failures.append(
+                f"{tag}: affinity-steal does not beat dmda "
+                f"({-row['steal_win_dmda']:.1%} behind)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizing")
+    ap.add_argument("--out", type=str, default=None, help="JSON artifact path")
+    ap.add_argument("--check", action="store_true",
+                    help="gate acceptance criteria")
+    args = ap.parse_args(argv)
+
+    cfg = QUICK if args.quick else FULL
+    rows = [run_point(sc, ch, steps=cfg["steps"], policies=cfg["policies"])
+            for sc in SCENARIO_CFG for ch in CHURNS]
+
+    print(f"{'scenario':>9}  {'churn':>5}  {'dmda_ms':>8}  {'igp_ms':>8}  "
+          f"{'steal_ms':>8}  {'gp_loss':>8}  {'vs_dmda':>8}")
+    for row in rows:
+        p = row["policies"]
+        print(f"{row['scenario']:>9}  {row['churn']:>5.2f}  "
+              f"{p['dmda']['mean_makespan_ms']:>8.1f}  "
+              f"{p['incremental-gp']['mean_makespan_ms']:>8.1f}  "
+              f"{p['affinity-steal']['mean_makespan_ms']:>8.1f}  "
+              f"{row['gp_loss']:>8.1%}  {row['steal_win_dmda']:>8.1%}")
+        emit(f"scenario.{row['scenario']}.c{row['churn']}.gp_loss",
+             f"{row['gp_loss']:.3f}",
+             f"igp={p['incremental-gp']['mean_makespan_ms']:.1f};"
+             f"steal={p['affinity-steal']['mean_makespan_ms']:.1f}")
+        emit(f"scenario.{row['scenario']}.c{row['churn']}.steal_win_dmda",
+             f"{row['steal_win_dmda']:.3f}",
+             f"dmda={p['dmda']['mean_makespan_ms']:.1f};"
+             f"steal={p['affinity-steal']['mean_makespan_ms']:.1f}")
+
+    if args.out:
+        doc = {
+            "meta": {"steps": cfg["steps"], "churns": list(CHURNS),
+                     "policies": list(cfg["policies"]),
+                     "scenarios": {k: dict(v["kw"], drops=v["drops"])
+                                   for k, v in SCENARIO_CFG.items()},
+                     "quick": args.quick},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[scenario] wrote {args.out}")
+
+    failures = check_rows(rows)
+    if args.check:
+        for msg in failures:
+            print(f"[scenario] FAIL: {msg}")
+        if failures:
+            return 1
+        print(f"[scenario] PASS: incremental-gp within {GP_LOSS_MAX:.0%} of "
+              "affinity-steal everywhere; affinity-steal beats dmda at "
+              f"churn >= {STEAL_CHURN}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

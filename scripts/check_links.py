@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Check relative markdown links (and their #anchors) in README.md + docs/.
+
+CI's lint job runs this so a docs reshuffle can never leave dangling
+cross-references.  External http(s) links are NOT fetched — only
+repo-relative targets are verified, against the working tree:
+
+    python scripts/check_links.py            # exit 1 on any broken link
+
+GitHub-style anchor slugs: lowercase, punctuation stripped, spaces to
+hyphens (the rule github.com applies to rendered headings).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    text = CODE_FENCE.sub("", path.read_text(encoding="utf-8"))
+    return {slugify(h) for h in HEADING.findall(text)}
+
+
+def check_file(path: Path) -> list[str]:
+    problems = []
+    text = CODE_FENCE.sub("", path.read_text(encoding="utf-8"))
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, frag = target.partition("#")
+        dest = (path.parent / ref).resolve() if ref else path
+        rel = path.relative_to(ROOT)
+        if not dest.exists():
+            problems.append(f"{rel}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if slugify(frag) not in anchors_of(dest):
+                problems.append(f"{rel}: missing anchor -> {target}")
+    return problems
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("**/*.md"))]
+    problems = []
+    for f in files:
+        if f.exists():
+            problems.extend(check_file(f))
+    for p in problems:
+        print(f"[links] FAIL: {p}")
+    if problems:
+        return 1
+    print(f"[links] OK: {len(files)} files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

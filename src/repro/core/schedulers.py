@@ -10,6 +10,11 @@
   partition with heterogeneous target ratios (Formula (1)/(2)); each kernel is
   pinned to its partition's class; the runtime only enforces dependencies.
 * :class:`HeftPolicy` — classic HEFT list scheduling (beyond-paper baseline).
+* :class:`AffinityStealPolicy` — affinity-driven work stealing (XKaapi-style,
+  beyond-paper): per-group deques, idle groups steal only tasks whose missing
+  inputs are cheap to pull on the live topology (steal gain = victim-queue
+  wait minus the priced pull cost).  The strongest online baseline the gp
+  family is benchmarked against (``benchmarks/scenario_bench.py``).
 * :class:`RandomPolicy` / :class:`SingleClassPolicy` — controls.
 * :class:`WorkerPullPolicy` — the executed-mode dispatch shim: replays any
   reactive queue policy through the discrete-event simulator (its native
@@ -28,6 +33,7 @@ so all five policies see the same tiered fabric the simulator charges.
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Mapping
 
 from .comm import link_scale_for
@@ -56,6 +62,13 @@ class Policy:
     def on_idle(self, proc: Processor, sim: Sim) -> str | None:
         """Central-queue policies: pick a task for an idle worker (FIFO)."""
         return sim.central[0] if sim.central else None
+
+    def peek_queue(self, proc: Processor, sim: Sim):
+        """Central-queue policies: the tasks ``proc`` is likely to run next,
+        in order, so the overlap engine can prefetch their inputs under the
+        worker's current compute.  ``None`` (default) hints nothing — push
+        policies already expose per-worker queues to the engine."""
+        return None
 
     def on_worker_drop(self, proc: Processor, sim: Sim) -> float:
         """Platform lost ``proc`` (already removed from ``sim.platform``).
@@ -123,6 +136,276 @@ class DmdaPolicy(Policy):
         assert best_proc is not None
         sim.est_proc_avail[best_proc.name] = best_eta
         return best_proc.name
+
+
+class AffinityStealPolicy(Policy):
+    """Affinity-driven work stealing (XKaapi-style locality-aware stealing).
+
+    The strongest *online* baseline the gp family competes against: a
+    pull-based policy whose per-group deques bind tasks to the class where
+    their inputs are (or will be) resident, and whose idle groups steal only
+    when the steal actually pays — the thief compares the victim-queue wait
+    it would save against the topology-priced cost of pulling the task's
+    missing inputs to its own memory node
+    (:meth:`~repro.core.simulate.Sim.missing_input_ms`, the same per-link
+    pricing dmda's ETA and the gp family's ``link_scale`` matrix use).
+
+    Mechanics: every ready task is *homed* to the class minimizing
+    pull + execution cost and parked in that class's deque (physically the
+    simulator's central queue, so nothing is ever lost to policy-state
+    churn).  An idle worker serves its own class's deque FIFO; empty-handed,
+    it considers stealing:
+
+    ``steal gain = (victim wait + exec on victim) - (pull cost + exec here)``
+
+    and steals only when the gain clears ``steal_threshold_ms``.  Victim
+    selection is a knob: ``"max-queue"`` raids the class with the largest
+    backlog (classic load stealing, locality-gated); ``"min-pull"`` scans
+    every foreign task for the cheapest pull (locality stealing,
+    load-gated).  Ties break toward the task with the most input bytes
+    already resident on the thief's node (``resident_ties=True``).
+
+    Churn-safe by construction: a dropped class's deque is re-homed across
+    the survivors (tasks still queued lose nothing — they sit in the
+    central queue), a task aborted mid-run is re-homed when it re-enters via
+    ``on_ready``, and a new class starts stealing its share immediately.
+    Executed mode goes through the :class:`WorkerPullPolicy` shim like every
+    reactive queue policy.
+    """
+
+    name = "affinity-steal"
+
+    def __init__(
+        self,
+        *,
+        steal_threshold_ms: float = 0.5,
+        victim: str = "max-queue",
+        resident_ties: bool = True,
+        mem_aware: bool = True,
+        decision_ms: float = 0.003,
+    ):
+        if victim not in ("max-queue", "min-pull"):
+            raise ValueError(f"unknown victim selection {victim!r}")
+        self.steal_threshold_ms = steal_threshold_ms
+        self.victim = victim
+        self.resident_ties = resident_ties
+        self.mem_aware = mem_aware
+        self.decision_ms = decision_ms
+        self.deques: dict[str, deque] = {}
+        self.home: dict[str, str] = {}
+        self._skipped: set[str] = set()
+        self._horizon: dict[str, float] = {}
+
+    def prepare(self, g: TaskGraph, platform: Platform) -> float:
+        # per-stream policy instances persist (arena semantics): every graph
+        # revision starts with fresh deques, placement state is per-interval
+        self.deques = {}
+        self.home = {}
+        self._skipped = set()
+        self._horizon = {}
+        return 0.0
+
+    # -- homing ---------------------------------------------------------------
+    def _pull_ms(self, task: str, node: int, sim: Sim) -> float:
+        return sim.missing_input_ms(task, node)
+
+    def _booked(self, cls: str, sim: Sim) -> float:
+        """The class's booking horizon: a virtual clock bumped at homing time
+        (like dmda's per-worker ``est_proc_avail``, aggregated per class).
+        Sequential chains expose only one ready task at a time, so the deque
+        is empty at every individual ready event — without this persistent
+        horizon several interleaved chains all home to the fastest class and
+        its congestion stays invisible until the workers idle."""
+        return max(self._horizon.get(cls, 0.0), sim.now)
+
+    def _home_for(self, task: str, sim: Sim, *, book: bool = True) -> str:
+        costs = sim.g.nodes[task].costs
+        best, best_eta = None, None
+        for cls in sim.platform.classes:
+            if cls not in costs:
+                continue
+            node = sim.platform.node_of_class(cls)
+            nw = len(sim.platform.workers_of(cls))
+            base = self._booked(cls, sim) if nw else float("inf")
+            eta = base + self._pull_ms(task, node, sim) + costs[cls]
+            if self.mem_aware and not sim.mem_fits(task, cls):
+                eta += 1e9  # only homed here when nothing else fits
+            if best_eta is None or eta < best_eta - 1e-12:
+                best, best_eta = cls, eta
+        if best is None:  # no live class has a cost entry: park anywhere
+            best = sim.platform.classes[0] if sim.platform.classes else "?"
+        if book:
+            nw = len(sim.platform.workers_of(best))
+            self._horizon[best] = (self._booked(best, sim)
+                                   + costs.get(best, 0.0) / max(nw, 1))
+        return best
+
+    def on_ready(self, task: str, sim: Sim) -> str | None:
+        home = self._home_for(task, sim)
+        self.home[task] = home
+        self.deques.setdefault(home, deque()).append(task)
+        return None  # physically parked in the central queue
+
+    def peek_queue(self, proc: Processor, sim: Sim):
+        # expose the class deque to the overlap engine: the worker will
+        # serve it FIFO, so its heads are prefetchable exactly like a push
+        # policy's committed per-worker queue
+        return self._queued(proc.cls, sim)
+
+    # -- dequeue/steal --------------------------------------------------------
+    def _queued(self, cls: str, sim: Sim) -> list[str]:
+        """Live deque view: lazily drops tasks no longer in the central
+        queue (dispatched, stolen, aborted elsewhere, or pruned)."""
+        dq = self.deques.get(cls)
+        if not dq:
+            return []
+        central = set(sim.central)
+        while dq and dq[0] not in central:
+            dq.popleft()
+        return [t for t in dq if t in central]
+
+    def _wait_ms(self, cls: str, ahead_ms: float, sim: Sim) -> float:
+        workers = sim.platform.workers_of(cls)
+        if not workers:
+            return float("inf")  # orphaned deque: stealing is free win
+        avail = min(max(sim.proc_free[w.name], sim.now) for w in workers)
+        return (avail - sim.now) + ahead_ms / len(workers)
+
+    def _steal_gain(self, task: str, vcls: str, ahead_ms: float,
+                    proc: Processor, sim: Sim) -> float:
+        costs = sim.g.nodes[task].costs
+        if proc.cls not in costs:
+            return float("-inf")
+        if (self.mem_aware and sim.platform.mem_capacity_bytes
+                and not sim.mem_fits(task, proc.cls)
+                and any(sim.mem_fits(task, c)
+                        for c in sim.platform.classes)):
+            return float("-inf")  # don't steal into an overflowing node
+        wait = self._wait_ms(vcls, ahead_ms, sim)
+        if wait == float("inf"):
+            return float("inf")  # orphaned home: stealing is a rescue
+        if task in self._skipped:
+            # the home class capacity-skipped it; a fitting thief MUST take
+            # it regardless of threshold, or it could starve in the central
+            # queue (the victim never runs it, other thieves never clear the
+            # gain bar)
+            return float("inf")
+        here = self._pull_ms(task, proc.node, sim) + costs[proc.cls]
+        return (wait + costs.get(vcls, 0.0)) - here
+
+    def _resident_frac(self, task: str, node: int, sim: Sim) -> float:
+        total = sum(sim.g.edge(p, task).nbytes
+                    for p in sim.g.predecessors(task))
+        if total <= 0:
+            return 1.0
+        return 1.0 - sim.missing_input_bytes(task, node) / total
+
+    def on_idle(self, proc: Processor, sim: Sim) -> str | None:
+        # 1) serve the worker's own class deque FIFO (capacity-admitted)
+        own = self._queued(proc.cls, sim)
+        for task in own:
+            if proc.cls not in sim.g.nodes[task].costs:
+                continue
+            if (self.mem_aware and sim.platform.mem_capacity_bytes
+                    and not sim.mem_fits(task, proc.cls)
+                    and any(sim.mem_fits(task, c)
+                            for c in sim.platform.classes)):
+                self._skipped.add(task)  # rescue-stealable by fitting thieves
+                continue
+            self.deques[proc.cls].remove(task)
+            self._skipped.discard(task)
+            return task
+        # 2) empty-handed: steal, if the locality-priced gain clears the bar
+        victims: list[tuple[str, list[str]]] = []
+        for cls in list(self.deques):
+            if cls == proc.cls:
+                continue
+            q = self._queued(cls, sim)
+            if q:
+                victims.append((cls, q))
+        if not victims:
+            return None
+        exec_of = {
+            cls: {t: sim.g.nodes[t].costs.get(cls, 0.0) for t in q}
+            for cls, q in victims
+        }
+        best: tuple | None = None  # (-gain, -resident_frac, name)
+        if self.victim == "max-queue":
+            # raid the most-loaded class (by pending work) from the TAIL —
+            # the task that would wait longest behind the victim's backlog
+            # (the owner serves its deque FIFO, thieves take the other end:
+            # classic stealing); ties across equally-loaded victims break
+            # by resident bytes
+            victims.sort(key=lambda cq: -sum(exec_of[cq[0]].values()))
+            top_load = sum(exec_of[victims[0][0]].values())
+            for cls, q in victims:
+                if sum(exec_of[cls].values()) < top_load - 1e-9:
+                    break
+                task = q[-1]
+                ahead = sum(exec_of[cls].values()) - exec_of[cls][task]
+                gain = self._steal_gain(task, cls, ahead, proc, sim)
+                if gain > self.steal_threshold_ms:
+                    key = (-gain,
+                           -self._resident_frac(task, proc.node, sim)
+                           if self.resident_ties else 0.0,
+                           task, cls)
+                    if best is None or key < best:
+                        best = key
+        else:  # "min-pull": cheapest-to-pull foreign task, gain-gated
+            for cls, q in victims:
+                ahead = 0.0
+                for task in q:
+                    gain = self._steal_gain(task, cls, ahead, proc, sim)
+                    ahead += exec_of[cls][task]
+                    if gain <= self.steal_threshold_ms:
+                        continue
+                    key = (self._pull_ms(task, proc.node, sim),
+                           -self._resident_frac(task, proc.node, sim)
+                           if self.resident_ties else 0.0,
+                           task, cls)
+                    if best is None or key < best:
+                        best = key
+        if best is None:
+            return None
+        task, cls = best[2], best[3]
+        self.deques[cls].remove(task)
+        self._skipped.discard(task)
+        self.home[task] = proc.cls
+        self.deques.setdefault(proc.cls, deque())
+        # move the booking with the task: the victim's horizon sheds the
+        # stolen work, the thief's absorbs it
+        n_v = len(sim.platform.workers_of(cls))
+        if n_v:
+            self._horizon[cls] = max(
+                sim.now,
+                self._booked(cls, sim)
+                - sim.g.nodes[task].costs.get(cls, 0.0) / n_v,
+            )
+        n_t = len(sim.platform.workers_of(proc.cls))
+        self._horizon[proc.cls] = (
+            self._booked(proc.cls, sim)
+            + sim.g.nodes[task].costs.get(proc.cls, 0.0) / max(n_t, 1)
+        )
+        return task
+
+    # -- churn hooks ----------------------------------------------------------
+    def on_worker_drop(self, proc: Processor, sim: Sim) -> float:
+        t0 = time.perf_counter()
+        if not sim.platform.workers_of(proc.cls):
+            # class lost its last worker: re-home its queued tasks across the
+            # survivors (they stay physically in the central queue throughout)
+            orphans = list(self.deques.pop(proc.cls, ()))
+            for task in orphans:
+                if task in sim.central and task in sim.g.nodes:
+                    home = self._home_for(task, sim)
+                    self.home[task] = home
+                    self.deques.setdefault(home, deque()).append(task)
+        return (time.perf_counter() - t0) * 1e3
+
+    def on_worker_add(self, proc: Processor, sim: Sim) -> float:
+        # nothing to migrate: the newcomer starts stealing its share
+        self.deques.setdefault(proc.cls, deque())
+        return 0.0
 
 
 class GpPolicy(Policy):
@@ -401,6 +684,7 @@ def as_executed(policy: Policy) -> Policy:
 ALL_POLICIES = {
     "eager": EagerPolicy,
     "dmda": DmdaPolicy,
+    "affinity-steal": AffinityStealPolicy,
     "gp": GpPolicy,
     "heft": HeftPolicy,
     "random": RandomPolicy,

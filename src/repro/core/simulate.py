@@ -226,6 +226,10 @@ class SimResult:
     # wave accounting (wave_schedule): dependency waves of group super-steps
     # dispatched (0 for the plain task-level event simulator)
     n_waves: int = 0
+    # conditional-subgraph pruning (speculative workloads): tasks cancelled
+    # before they ran because their trigger finished and discarded them
+    n_pruned: int = 0
+    pruned: list = dataclasses.field(default_factory=list)
 
     def busy_fraction(self) -> dict[str, float]:
         if self.makespan_ms <= 0:
@@ -342,6 +346,7 @@ def simulate(
     chunk_bytes: int | None = DEFAULT_CHUNK_BYTES,
     stream_depth: int = 2,
     adaptive_depth: bool = False,
+    prunes: Mapping[str, Sequence[str]] | None = None,
 ) -> SimResult:
     """Run ``policy`` over task graph ``g`` on ``platform``.
 
@@ -380,6 +385,17 @@ def simulate(
     engine's window earn a deeper speculative queue scan (up to its
     ``max_depth``), throttled tiers fall back toward 1; ``prefetch_depth``
     seeds the base.  Off (default) keeps the static depth bit-for-bit.
+
+    ``prunes``: conditional-subgraph pruning (speculative workloads) —
+    ``{trigger: [tasks...]}`` cancels the listed tasks (plus, always, their
+    transitive successors) the moment ``trigger`` finishes.  A pruned task
+    that never started is retired without running — removed from every
+    queue, counted in ``SimResult.n_pruned``, its KV share freed with its
+    request; one already *running* at the trigger's finish completes as
+    wasted speculation (its successors in the closure are still pruned).
+    The scheduler cannot see a prune coming: speculative subgraphs are
+    placed like real work and the discard happens mid-flight — exactly the
+    regime speculative-decoding streams stress (``arena.ArenaStep.prunes``).
     """
     g.validate()
     sim = Sim(
@@ -396,6 +412,29 @@ def simulate(
     comm = sim.comm
     offline_ms = policy.prepare(g, platform)
     arrivals = arrivals or {}
+
+    # conditional-subgraph pruning: close each trigger's prune set over its
+    # transitive successors up front (an unpruned consumer of a pruned task
+    # could never become ready), in deterministic topo order
+    prune_closure: dict[str, list[str]] = {}
+    if prunes:
+        topo = g.topo_order()
+        for trig, targets in prunes.items():
+            if trig not in g.nodes:
+                raise KeyError(f"prune trigger {trig!r} not in graph")
+            seen: set[str] = set()
+            stack = list(targets)
+            while stack:
+                x = stack.pop()
+                if x in seen:
+                    continue
+                if x not in g.nodes:
+                    raise KeyError(f"pruned task {x!r} not in graph")
+                seen.add(x)
+                stack.extend(g.successors(x))
+            if trig in seen:
+                raise ValueError(f"prune trigger {trig!r} would prune itself")
+            prune_closure[trig] = [n for n in topo if n in seen]
 
     pred_count = {n: len(g.predecessors(n)) for n in g.nodes}
     n_tasks = len(g.nodes)
@@ -425,6 +464,8 @@ def simulate(
     running: dict[str, tuple] = {}
     cancelled: set[int] = set()
     did_counter = [0]
+    pruned_set: set[str] = set()
+    pruned_log: list[str] = []
 
     heap: list[tuple] = []  # (time, seq, kind, payload)
     seq = [0]
@@ -434,6 +475,8 @@ def simulate(
         seq[0] += 1
 
     def mark_ready(task: str, t: float):
+        if task in pruned_set:
+            return
         if g.nodes[task].op == "source":
             # the virtual zero-weight kernel always runs on the host node
             # (paper §III.B: all initial data is located on the host memory)
@@ -693,6 +736,12 @@ def simulate(
         lookahead = comm.max_depth if adaptive else prefetch_depth
         for p in platform.procs:
             q = sim.proc_queue[p.name]
+            # central-queue policies have no per-worker queue to scan; the
+            # peek_queue hook lets them expose their intended next tasks
+            # (e.g. affinity-steal's class deque) for the same treatment
+            hint = policy.peek_queue(p, sim)
+            if hint:
+                q = list(q) + [h for h in hint if h not in q]
             if not q:
                 continue
             for i, task in enumerate(q):
@@ -719,8 +768,38 @@ def simulate(
                             continue
                     fetch_block(block, e.nbytes, p.node, p.cls, t, "prefetch")
 
+    def apply_prunes(trig: str, t: float):
+        """``trig`` finished: discard its speculative closure.  Tasks not yet
+        started are cancelled in place (dequeued everywhere, retired without
+        running); one currently in flight completes as wasted speculation."""
+        for p in prune_closure.get(trig, ()):
+            if p in sim.finished or p in pruned_set:
+                continue
+            if any(run[0] == p for run in running.values()):
+                continue  # mid-run: let it finish (wasted work, not lost)
+            pruned_set.add(p)
+            pruned_log.append(p)
+            try:
+                sim.central.remove(p)
+            except ValueError:
+                pass
+            for q in sim.proc_queue.values():
+                try:
+                    q.remove(p)
+                except ValueError:
+                    pass
+            # retire its KV share exactly like a finish would
+            r = req_of.get(p)
+            if r is not None:
+                req_left[r] -= 1
+                if req_left[r] == 0:
+                    for m in req_tasks[r]:
+                        mem_remove(m)
+
     def ready_or_defer(task: str, t: float):
         """Deps are met at ``t``; hand to the policy now or at the arrival."""
+        if task in pruned_set:
+            return
         arr = arrivals.get(task, 0.0)
         if arr > t + 1e-12:
             push(arr, "ready", task)
@@ -818,6 +897,8 @@ def simulate(
             sim.valid.setdefault(task, {})[proc.node] = t
             done += 1
             makespan = max(makespan, t)
+            if task in prune_closure:
+                apply_prunes(task, t)
             # KV lifetime: a request's footprint frees when its whole chain
             # retires; ungrouped blocks free once every consumer finished
             r = req_of.get(task)
@@ -844,8 +925,11 @@ def simulate(
             apply_add(payload, t)
         try_dispatch(t)
         issue_prefetch(t)
-    if done != n_tasks:
-        raise RuntimeError(f"deadlock: {done}/{n_tasks} tasks completed")
+    if done + len(pruned_set) != n_tasks:
+        raise RuntimeError(
+            f"deadlock: {done}/{n_tasks} tasks completed "
+            f"({len(pruned_set)} pruned)"
+        )
 
     return SimResult(
         makespan_ms=makespan,
@@ -879,6 +963,8 @@ def simulate(
         n_stalled_chunks=comm.n_stalled_chunks,
         stream_busy_ms=comm.stream_busy_ms,
         n_depth_adjust=comm.n_depth_adjust,
+        n_pruned=len(pruned_log),
+        pruned=pruned_log,
     )
 
 

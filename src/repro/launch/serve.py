@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, canon, make_batch
 from repro.core.arena import (
+    SCENARIOS,
     SchedulerArena,
     format_table,
     make_request_stream,
@@ -293,11 +294,20 @@ def run_arena(
     drop_proc: str = "small1",
     policies=DEFAULT_POLICIES,
     hier: bool = False,
+    scenario: str = "serve",
 ) -> tuple[list, SchedulerArena]:
     """Replay a churning request stream through every policy (the online
     serving experiment).  ``drop_step`` optionally kills ``drop_proc``
     mid-run at that step — the elastic path.  ``hier=True`` swaps in the
-    rack/pod platform (shared-uplink contention + prefetch throttling)."""
+    rack/pod platform (shared-uplink contention + prefetch throttling).
+    ``scenario`` selects a zoo generator (:data:`repro.core.arena.SCENARIOS`
+    — MoE routing, speculative decoding, train/serve colocation) instead of
+    the default prefill/decode stream; the non-serve scenarios cost their
+    kernels for the flat big/small platform only."""
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    if hier and scenario != "serve":
+        raise ValueError("--hier only supports the 'serve' scenario")
     plat, drop_proc, costs_prefill, costs_decode = _arena_setup(hier, drop_proc)
     events_at = {}
     if drop_step is not None:
@@ -306,18 +316,21 @@ def run_arena(
         events_at[drop_step] = (WorkerDrop(30.0, drop_proc),)
         for later in range(drop_step + 1, steps):
             events_at[later] = (WorkerDrop(0.0, drop_proc),)
-    stream = make_request_stream(
-        steps,
+    kw: dict = dict(
         base_requests=n_requests,
-        decode_chunks=decode_chunks,
         churn=churn,
         kv_bytes=int(kv_mb * 2**20),
         seed=seed,
-        costs_prefill=costs_prefill,
-        costs_decode=costs_decode,
         arrival_spread_ms=10.0,
         events_at=events_at,
     )
+    if scenario in ("serve", "colocate"):
+        kw.update(
+            decode_chunks=decode_chunks,
+            costs_prefill=costs_prefill,
+            costs_decode=costs_decode,
+        )
+    stream = SCENARIOS[scenario](steps, **kw)
     arena = SchedulerArena(
         plat, policies, policy_kwargs={p: _policy_kwargs(p) for p in policies}
     )
@@ -472,7 +485,15 @@ def main(argv=None):
         "--scheduler",
         type=str,
         default="incremental-gp",
-        choices=["incremental-gp", "gp", "dmda", "eager", "heft", "random"],
+        choices=[
+            "incremental-gp",
+            "gp",
+            "dmda",
+            "eager",
+            "heft",
+            "random",
+            "affinity-steal",
+        ],
     )
     ap.add_argument("--decode-chunks", type=int, default=8)
     ap.add_argument(
@@ -480,6 +501,16 @@ def main(argv=None):
         action="store_true",
         help="replay a churning request stream through every "
         "policy and print the comparison table",
+    )
+    ap.add_argument(
+        "--scenario",
+        type=str,
+        default="serve",
+        choices=list(SCENARIOS),
+        help="with --arena: zoo stream generator — the default "
+        "prefill/decode serving stream, MoE conditional routing, "
+        "speculative-decoding verify-or-discard, or train/serve "
+        "colocation (simulated comparison incl. affinity-steal)",
     )
     ap.add_argument(
         "--hier",
@@ -590,6 +621,12 @@ def main(argv=None):
         return
 
     if args.arena:
+        policies = DEFAULT_POLICIES
+        if args.scenario != "serve":
+            # zoo scenarios exist to compare the partitioners against the
+            # strongest queue baseline; the serve default stays pinned to
+            # the CI baseline's exact policy set
+            policies = DEFAULT_POLICIES + ("affinity-steal",)
         rows, _ = run_arena(
             args.requests,
             args.decode_chunks,
@@ -597,9 +634,13 @@ def main(argv=None):
             drop_step=args.drop_step,
             seed=args.seed,
             hier=args.hier,
+            scenario=args.scenario,
+            policies=policies,
         )
         print(format_table(rows))
         if args.execute:
+            if args.scenario != "serve":
+                raise SystemExit("--execute only supports --scenario serve")
             xrows, xarena = run_arena_executed(
                 args.requests,
                 args.decode_chunks,

@@ -25,19 +25,21 @@ class AdamWConfig:
     eps: float = 1e-8
     weight_decay: float = 0.1
     grad_clip: float = 1.0
-    state_dtype: Any = jnp.float32        # bf16 fits the 398B on one pod
-    compress_int8: bool = False           # int8 grad all-reduce + error fb
+    state_dtype: Any = jnp.float32  # bf16 fits the 398B on one pod
+    compress_int8: bool = False  # int8 grad all-reduce + error fb
 
 
 def init_state(params, cfg: AdamWConfig):
     def zeros_like(p):
-        return {"m": jnp.zeros(p.shape, cfg.state_dtype),
-                "v": jnp.zeros(p.shape, cfg.state_dtype)}
+        return {
+            "m": jnp.zeros(p.shape, cfg.state_dtype),
+            "v": jnp.zeros(p.shape, cfg.state_dtype),
+        }
+
     moments = jax.tree.map(zeros_like, params)
     st = {"step": jnp.zeros((), jnp.int32), "moments": moments}
     if cfg.compress_int8:
-        st["error"] = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        st["error"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
     return st
 
 
@@ -46,20 +48,28 @@ def state_specs(param_specs, cfg: AdamWConfig):
     from ..models.params import P, is_spec
 
     def zeros_like(s):
-        return {"m": P(s.shape, s.axes, cfg.state_dtype, "zeros"),
-                "v": P(s.shape, s.axes, cfg.state_dtype, "zeros")}
-    st = {"step": P((), (), jnp.int32, "zeros"),
-          "moments": jax.tree.map(zeros_like, param_specs, is_leaf=is_spec)}
+        return {
+            "m": P(s.shape, s.axes, cfg.state_dtype, "zeros"),
+            "v": P(s.shape, s.axes, cfg.state_dtype, "zeros"),
+        }
+
+    st = {
+        "step": P((), (), jnp.int32, "zeros"),
+        "moments": jax.tree.map(zeros_like, param_specs, is_leaf=is_spec),
+    }
     if cfg.compress_int8:
         st["error"] = jax.tree.map(
             lambda s: P(s.shape, s.axes, jnp.bfloat16, "zeros"),
-            param_specs, is_leaf=is_spec)
+            param_specs,
+            is_leaf=is_spec,
+        )
     return st
 
 
 def global_norm(tree) -> jax.Array:
-    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-             for x in jax.tree.leaves(tree))
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    )
     return jnp.sqrt(sq)
 
 
@@ -77,11 +87,13 @@ def compress_grads(grads, error):
     the int8 tensor is what crosses the DCN (4x fewer bytes on the slowest
     link — the paper's 'minimize traffic over the slow bus' applied to
     gradients); here we model the numerics faithfully."""
+
     def one(g, e):
         gf = g.astype(jnp.float32) + e.astype(jnp.float32)
         q, scale = _quantize_int8(gf)
         deq = q.astype(jnp.float32) * scale
         return deq.astype(g.dtype), (gf - deq).astype(jnp.bfloat16)
+
     flat_g, tree = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(error)
     outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
@@ -93,19 +105,23 @@ def compress_grads(grads, error):
 def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
     """One AdamW step.  Returns (new_params, new_state, metrics)."""
     gn = global_norm(grads)
-    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
-        if cfg.grad_clip > 0 else 1.0
+    clip = (
+        jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        if cfg.grad_clip > 0
+        else 1.0
+    )
     if cfg.compress_int8:
         grads, new_error = compress_grads(
-            jax.tree.map(lambda g: g * clip, grads), state["error"])
+            jax.tree.map(lambda g: g * clip, grads), state["error"]
+        )
         clip_applied = 1.0
     else:
         new_error = None
         clip_applied = clip
     step = state["step"] + 1
     t = step.astype(jnp.float32)
-    bc1 = 1.0 - cfg.b1 ** t
-    bc2 = 1.0 - cfg.b2 ** t
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
     lr = cfg.lr * lr_scale
 
     def upd(p, g, mo):
@@ -114,17 +130,22 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
         v = cfg.b2 * mo["v"].astype(jnp.float32) + (1 - cfg.b2) * g * g
         mhat = m / bc1
         vhat = v / bc2
-        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
-            p.astype(jnp.float32)
+        delta = (
+            mhat / (jnp.sqrt(vhat) + cfg.eps)
+            + cfg.weight_decay * p.astype(jnp.float32)
+        )
         newp = p.astype(jnp.float32) - lr * delta
-        return newp.astype(p.dtype), {"m": m.astype(cfg.state_dtype),
-                                      "v": v.astype(cfg.state_dtype)}
+        return newp.astype(p.dtype), {
+            "m": m.astype(cfg.state_dtype),
+            "v": v.astype(cfg.state_dtype),
+        }
 
     flat_p, tree = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
-    flat_m = jax.tree.leaves(state["moments"],
-                             is_leaf=lambda x: isinstance(x, dict) and
-                             set(x) == {"m", "v"})
+    flat_m = jax.tree.leaves(
+        state["moments"],
+        is_leaf=lambda x: isinstance(x, dict) and set(x) == {"m", "v"},
+    )
     outs = [upd(p, g, mo) for p, g, mo in zip(flat_p, flat_g, flat_m)]
     new_params = jax.tree.unflatten(tree, [o[0] for o in outs])
     new_moments = jax.tree.unflatten(tree, [o[1] for o in outs])
@@ -135,6 +156,7 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
 
 
 # -- lr schedules -------------------------------------------------------------
+
 
 def cosine_schedule(step, *, warmup: int, total: int, floor: float = 0.1):
     t = step.astype(jnp.float32)

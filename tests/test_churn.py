@@ -46,12 +46,13 @@ def churn_reports():
         side=16,
         drop_step=DROP_STEP,
         drop_proc="small1",
-        policies=("eager", "dmda", "heft"),
+        policies=("eager", "dmda", "heft", "affinity-steal"),
     )
     return rows, arena
 
 
-@pytest.mark.parametrize("policy", ("eager", "dmda", "heft"))
+@pytest.mark.parametrize(
+    "policy", ("eager", "dmda", "heft", "affinity-steal"))
 def test_no_kernel_lost_no_double_run(churn_reports, policy):
     """Every kernel of every revision executes exactly once, plus only the
     re-executions the session tracked after the drop's group eviction."""
@@ -67,7 +68,8 @@ def test_no_kernel_lost_no_double_run(churn_reports, policy):
         assert step.makespan_ms > 0
 
 
-@pytest.mark.parametrize("policy", ("eager", "dmda", "heft"))
+@pytest.mark.parametrize(
+    "policy", ("eager", "dmda", "heft", "affinity-steal"))
 def test_drop_is_applied_and_stream_completes(churn_reports, policy):
     """The drop fires at the drop step (and pre-applies afterwards), and the
     shim re-plans: the stream still drains every step."""
@@ -85,4 +87,5 @@ def test_all_policies_ran_same_stream(churn_reports):
         for name, rep in arena.reports.items()
     }
     assert len(set(kernels.values())) == 1, kernels
-    assert {r.policy for r in rows} == {"eager", "dmda", "heft"}
+    assert {r.policy for r in rows} == {
+        "eager", "dmda", "heft", "affinity-steal"}

@@ -1,0 +1,272 @@
+"""Scenario zoo (moe / specdec / colocate), conditional-subgraph pruning,
+and the affinity-steal support machinery (booking horizon, peek_queue
+prefetch).
+
+Plain pytest — must run without hypothesis (the tier-1 floor)."""
+
+import pytest
+
+from repro.core.arena import (SCENARIOS, SchedulerArena, make_colocate_stream,
+                              make_moe_stream, make_request_stream,
+                              make_specdec_stream)
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import make_policy
+from repro.core.simulate import make_cpu_gpu_platform, simulate
+from repro.launch.serve import heterogeneous_platform, run_arena
+
+GENERATORS = {
+    "serve": make_request_stream,
+    "moe": make_moe_stream,
+    "specdec": make_specdec_stream,
+    "colocate": make_colocate_stream,
+}
+
+
+# -- registry + shared validation ---------------------------------------------
+
+def test_scenarios_registry_matches_generators():
+    assert dict(SCENARIOS) == GENERATORS
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_arrival_mode_validated_eagerly(name):
+    """The bad-knob error surfaces at call time, not steps later inside the
+    stagger helper — all four generators share the validation path."""
+    with pytest.raises(ValueError, match="arrival_mode"):
+        GENERATORS[name](2, arrival_mode="bogus")
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_streams_deterministic_in_seed(name):
+    kw = dict(base_requests=4, arrival_spread_ms=10.0)
+    a = GENERATORS[name](3, seed=5, **kw)
+    b = GENERATORS[name](3, seed=5, **kw)
+    c = GENERATORS[name](3, seed=6, **kw)
+    assert [s.tag for s in a] == [s.tag for s in b]
+    for sa, sb in zip(a, b):
+        assert sorted(sa.graph.nodes) == sorted(sb.graph.nodes)
+        assert sa.arrivals == sb.arrivals
+        assert sa.prunes == sb.prunes
+    assert any((sa.arrivals, sa.prunes) != (sc.arrivals, sc.prunes)
+               for sa, sc in zip(a, c))
+
+
+# -- moe ----------------------------------------------------------------------
+
+def test_moe_stream_shape():
+    top_k, expert_bytes = 2, 7 << 20
+    stream = make_moe_stream(3, base_requests=4, n_experts=4, top_k=top_k,
+                             expert_bytes=expert_bytes, seed=1)
+    assert [s.tag.startswith("moe") for s in stream] == [True] * 3
+    for s in stream:
+        g = s.graph
+        weights = [n for n, k in g.nodes.items() if k.op == "weights"]
+        assert weights and all(n.startswith("xw") for n in weights)
+        assert all(g.nodes[n].out_bytes == expert_bytes for n in weights)
+        rids = {n.split(".")[0] for n in g.nodes if n.startswith("r")}
+        for rid in rids:
+            experts = [n for n in g.nodes
+                       if n.startswith(f"{rid}.x")]
+            assert len(experts) == top_k
+            for e in experts:
+                xw = "xw" + e.split(".x")[1]
+                assert g.edge(xw, e).nbytes == expert_bytes
+                assert f"{rid}.route" in g.predecessors(e)
+                assert f"{rid}.merge" in g.successors(e)
+
+
+# -- specdec + pruning --------------------------------------------------------
+
+def test_specdec_stream_prunes_are_accept_tails():
+    draft_len = 5
+    stream = make_specdec_stream(3, base_requests=4, draft_len=draft_len,
+                                 seed=2)
+    saw_prune = False
+    for s in stream:
+        g = s.graph
+        rids = {n.split(".")[0] for n in g.nodes if n.startswith("r")}
+        for rid in rids:
+            drafts = [f"{rid}.d{i}" for i in range(draft_len)]
+            assert all(d in g.nodes for d in drafts)
+            for a, b in zip(drafts, drafts[1:]):
+                assert b in g.successors(a)
+            verify = f"{rid}.verify"
+            (dep,) = [p for p in g.predecessors(verify)
+                      if p.startswith(f"{rid}.d")]
+            accept = int(dep.split(".d")[1]) + 1
+            assert 1 <= accept <= draft_len
+            if accept < draft_len:
+                assert (s.prunes or {})[verify] == [f"{rid}.d{accept}"]
+                saw_prune = True
+            else:
+                assert verify not in (s.prunes or {})
+            assert verify in g.predecessors(f"{rid}.commit")
+    assert saw_prune, "no request ever rejected a tail (seed degenerate)"
+
+
+def test_specdec_simulation_runs_or_prunes_every_task():
+    """Through the simulator: trace + pruned partition the node set, and the
+    speculative tails actually get discarded (n_pruned > 0)."""
+    (step,) = make_specdec_stream(1, base_requests=6, draft_len=6, seed=0)
+    res = simulate(step.graph, make_policy("affinity-steal"),
+                   heterogeneous_platform(), arrivals=step.arrivals,
+                   prunes=step.prunes)
+    ran = {t for (t, *_ ) in res.trace}
+    assert ran.isdisjoint(res.pruned)
+    assert ran | set(res.pruned) == set(step.graph.nodes)
+    assert res.n_pruned == len(res.pruned) > 0
+    assert all(".d" in p for p in res.pruned)
+
+
+def _prune_graph():
+    """root -> v (trigger), root -> b -> c; prunes={v: [b]} closes over c."""
+    g = TaskGraph()
+    g.add("root", costs={"cpu": 1.0})
+    g.add("v", costs={"cpu": 1.0})
+    g.add("b", costs={"cpu": 5.0})
+    g.add("c", costs={"cpu": 5.0})
+    g.add_edge("root", "v")
+    g.add_edge("root", "b")
+    g.add_edge("b", "c")
+    return g
+
+
+def test_prune_cancels_unstarted_closure():
+    """Single worker: b is still queued when v finishes, so b AND its
+    transitive successor c retire without running."""
+    g = _prune_graph()
+    plat = make_cpu_gpu_platform(n_cpu=1, n_gpu=0)
+    res = simulate(g, make_policy("eager"), plat, prunes={"v": ["b"]})
+    assert sorted(res.pruned) == ["b", "c"]
+    assert {t for (t, *_ ) in res.trace} == {"root", "v"}
+    assert res.makespan_ms == pytest.approx(2.0)
+
+
+def test_prune_running_task_is_wasted_not_lost():
+    """Two workers: b is mid-run when v lands, so it completes as wasted
+    speculation; only the unstarted successor c is discarded."""
+    g = _prune_graph()
+    g.nodes["v"].costs["cpu"] = 2.0
+    plat = make_cpu_gpu_platform(n_cpu=2, n_gpu=0)
+    res = simulate(g, make_policy("eager"), plat, prunes={"v": ["b"]})
+    assert res.pruned == ["c"]
+    assert {t for (t, *_ ) in res.trace} == {"root", "v", "b"}
+
+
+def test_prune_error_paths():
+    g = _prune_graph()
+    plat = make_cpu_gpu_platform(n_cpu=1, n_gpu=0)
+    with pytest.raises(KeyError, match="not in graph"):
+        simulate(g, make_policy("eager"), plat, prunes={"nope": ["b"]})
+    with pytest.raises(KeyError, match="not in graph"):
+        simulate(g, make_policy("eager"), plat, prunes={"v": ["nope"]})
+    with pytest.raises(ValueError, match="prune itself"):
+        simulate(g, make_policy("eager"), plat, prunes={"v": ["root"]})
+
+
+# -- colocate -----------------------------------------------------------------
+
+def test_colocate_stream_train_jobs():
+    stream = make_colocate_stream(4, base_requests=4, train_every=2,
+                                  train_chunks=3, seed=0)
+    for step, s in enumerate(stream):
+        chunks = [n for n in s.graph.nodes if n.startswith("j")]
+        if step % 2 == 0:
+            assert len(chunks) == 3, s.tag
+            jid = chunks[0].split(".")[0]
+            for i in range(1, 3):
+                assert f"{jid}.t{i}" in s.graph.successors(f"{jid}.t{i-1}")
+            k = s.graph.nodes[f"{jid}.t0"]
+            # 6ND costing: the fast class wins, and a train chunk dwarfs the
+            # default decode kernel (8ms big) — the colocation tension
+            assert k.costs["big"] < k.costs["small"]
+            assert k.costs["big"] > 8.0
+        else:
+            assert not chunks, s.tag
+
+
+# -- affinity-steal machinery -------------------------------------------------
+
+def test_booking_horizon_spreads_parallel_tasks():
+    """Three same-cost independent tasks, one big worker: without the class
+    booking horizon all three would home to the (momentarily idle-looking)
+    big class and serialize at 30ms; with it the overflow homes small."""
+    g = TaskGraph()
+    for n in ("a", "b", "c"):
+        g.add(n, costs={"big": 10.0, "small": 12.0})
+    res = simulate(g, make_policy("affinity-steal"), heterogeneous_platform())
+    assert res.makespan_ms == pytest.approx(12.0)
+    assert {p for (_, p, *_ ) in res.trace} == {"big0", "small0", "small1"}
+
+
+def test_affinity_steal_survives_mid_stream_drop():
+    """Churn safety: a worker drop mid-interval re-homes the dead class's
+    deque — every task still runs exactly once, none on the dead worker
+    after the drop."""
+    from repro.core.simulate import WorkerDrop
+
+    (step,) = make_moe_stream(1, base_requests=8, seed=0,
+                              arrival_spread_ms=10.0)
+    res = simulate(step.graph, make_policy("affinity-steal"),
+                   heterogeneous_platform(), arrivals=step.arrivals,
+                   events=[WorkerDrop(15.0, "small1")])
+    ran = sorted(t for (t, *_ ) in res.trace)
+    assert ran == sorted(step.graph.nodes)
+    assert not any(p == "small1" and f > 15.0 + 1e-9
+                   for (_, p, _, f) in res.trace)
+
+
+def test_peek_queue_enables_prefetch_overlap():
+    """The central-queue policy exposes its deque heads to the overlap
+    engine, so a fat weight pull is prefetched behind compute instead of
+    being paid synchronously at task start."""
+    (step,) = make_moe_stream(1, base_requests=6, n_experts=4,
+                              expert_bytes=96 << 20, seed=3)
+    plat = heterogeneous_platform()
+    on = simulate(step.graph, make_policy("affinity-steal"), plat,
+                  arrivals=step.arrivals, overlap=True)
+    off = simulate(step.graph, make_policy("affinity-steal"), plat,
+                   arrivals=step.arrivals, overlap=False)
+    assert on.makespan_ms < off.makespan_ms
+
+
+# -- serve.py wiring ----------------------------------------------------------
+
+def test_run_arena_scenario_selection():
+    rows, _ = run_arena(4, 2, steps=2, scenario="moe",
+                        policies=("eager", "affinity-steal"))
+    assert {r.policy for r in rows} == {"eager", "affinity-steal"}
+    assert all(r.steps == 2 for r in rows)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_arena(4, 2, steps=2, scenario="nope")
+    with pytest.raises(ValueError, match="hier"):
+        run_arena(4, 2, steps=2, scenario="moe", hier=True)
+
+
+def test_arena_replays_prunes_per_policy():
+    """SchedulerArena forwards ArenaStep.prunes to every policy's replay.
+    The *realized* prune set is policy-dependent (a tail already running at
+    the trigger's finish completes as wasted speculation instead), but every
+    policy must discard within the declared tails and account for every
+    task as ran-or-pruned."""
+    stream = make_specdec_stream(2, base_requests=5, draft_len=5, seed=1)
+    declared = [
+        {t for targets in (s.prunes or {}).values() for t in targets}
+        for s in stream
+    ]
+    # closure over the chain: d{a} prunes d{a}..d{L-1} of its request
+    closures = [
+        {f"{t.split('.')[0]}.d{i}"
+         for t in targets for i in range(int(t.split(".d")[1]), 5)}
+        for targets in declared
+    ]
+    arena = SchedulerArena(heterogeneous_platform(),
+                           ("eager", "dmda", "affinity-steal"))
+    arena.run(stream)
+    assert any(declared), "seed produced no rejections"
+    for name, results in arena.results.items():
+        for s, res, closure in zip(stream, results, closures):
+            ran = {t for (t, *_ ) in res.trace}
+            assert ran | set(res.pruned) == set(s.graph.nodes), name
+            assert ran.isdisjoint(res.pruned), name
+            assert set(res.pruned) <= closure, name
